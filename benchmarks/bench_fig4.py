@@ -1,0 +1,33 @@
+"""Figure 4 reproduction: conventional vs ML-surrogate cost vs dataset size.
+
+Sweeps N (number of Bragg peaks) through Eq. (1) and Eq. (3) with the
+paper's §4.2 constants and reports the crossover — the dataset size above
+which shipping a subset to the DCAI, training BraggNN, and estimating the
+rest at the edge beats conventional analysis at the data center.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import build_system
+
+
+def run() -> List[str]:
+    rows = []
+    cm = build_system().costmodel
+    for n in (10**4, 10**5, 10**6, 10**7, 10**8, 10**9):
+        conv = cm.f_conventional_dc(n).total
+        ml = cm.f_ml(n, p=0.1).total
+        winner = "ml" if ml < conv else "conventional"
+        rows.append(f"fig4/N{n:.0e},{conv * 1e6 / max(n, 1):.2f},"
+                    f"conv={conv:.1f}s;ml={ml:.1f}s;winner={winner}")
+    n_star = cm.crossover(p=0.1)
+    rows.append(f"fig4/crossover,0,N_star={n_star}"
+                f";small_N_prefers_conventional="
+                f"{'PASS' if cm.advise(10**4) != 'ml_surrogate' else 'FAIL'}"
+                f";large_N_prefers_ml="
+                f"{'PASS' if cm.advise(10**9) == 'ml_surrogate' else 'FAIL'}")
+    # sensitivity to labeled fraction p (beyond-paper analysis)
+    for p in (0.02, 0.05, 0.1, 0.2):
+        rows.append(f"fig4/crossover_p{p},0,N_star={cm.crossover(p=p)}")
+    return rows

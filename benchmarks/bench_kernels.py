@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks (CPU wall time of the XLA reference paths +
+interpret-mode kernel correctness cost; on TPU these become the Mosaic
+kernels).  Reported so kernel-level regressions are visible in CI."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import analyze_patches
+from repro.data.synthetic import bragg_patches
+from repro.models.layers import chunked_attention, full_attention
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> List[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # chunked attention vs full attention (XLA paths)
+    B, S, H, Hkv, D = 1, 2048, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    t_full = _time(jax.jit(lambda a, b, c: full_attention(a, b, c)), q, k, v)
+    t_chunk = _time(jax.jit(
+        lambda a, b, c: chunked_attention(a, b, c, chunk=256)), q, k, v)
+    t_band = _time(jax.jit(
+        lambda a, b, c: chunked_attention(a, b, c, window=256, chunk=256)),
+        q, k, v)
+    rows.append(f"kernels/attention_full_2k,{t_full * 1e6:.0f},baseline")
+    rows.append(f"kernels/attention_chunked_2k,{t_chunk * 1e6:.0f},"
+                f"vs_full={t_full / t_chunk:.2f}x")
+    rows.append(f"kernels/attention_banded_w256_2k,{t_band * 1e6:.0f},"
+                f"vs_full={t_full / t_band:.2f}x")
+
+    # SSD chunked scan
+    Bm_, L, Hs, P, G, N = 2, 2048, 8, 64, 1, 64
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bm_, L, Hs, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bm_, L, Hs)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hs,)) * 0.3)
+    Bmat = jax.random.normal(ks[3], (Bm_, L, G, N)) * 0.3
+    Cmat = jax.random.normal(ks[4], (Bm_, L, G, N)) * 0.3
+    t_ssd = _time(jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0]),
+                  x, dt, A, Bmat, Cmat)
+    toks = Bm_ * L
+    rows.append(f"kernels/ssd_chunked_2k,{t_ssd * 1e6:.0f},"
+                f"tokens_per_s={toks / t_ssd:.0f}")
+
+    # pseudo-Voigt analysis op (the paper's A): XLA path throughput
+    d = bragg_patches(key, 4096)
+    patches = d["patches"][..., 0]
+    t_pv = _time(jax.jit(
+        lambda p: analyze_patches(p, use_kernel=False)["centers_px"]),
+        patches)
+    per_peak_us = t_pv / 4096 * 1e6
+    # paper: conventional A = 2.44 us/peak on 1024 cores; BraggNN E = 0.35us
+    rows.append(f"kernels/pseudo_voigt_per_peak,{per_peak_us:.2f},"
+                f"paper_A_us=2.44")
+
+    # BraggNN inference (the paper's E) on this host
+    from repro.configs import BraggNNConfig
+    from repro.models import braggnn
+    cfg = BraggNNConfig()
+    params = braggnn.init_params(key, cfg)
+    fwd = jax.jit(lambda p, x: braggnn.forward(p, x, cfg))
+    t_e = _time(fwd, params, d["patches"])
+    # NOTE: on this 1-core host E is slower than A; the paper's 200x E
+    # speedup comes from edge accelerators — the ratio is reported for
+    # visibility, not as a claim.
+    rows.append(f"kernels/braggnn_E_per_peak,{t_e / 4096 * 1e6:.3f},"
+                f"paper_E_us=0.35;host_E_vs_A="
+                f"{per_peak_us / (t_e / 4096 * 1e6):.3f}x")
+    return rows

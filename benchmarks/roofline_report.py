@@ -1,0 +1,127 @@
+"""Generate the §Dry-run + §Roofline tables from dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir artifacts/dryrun_final]
+Prints markdown; also writes artifacts/roofline_table.md.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.roofline.analysis import from_artifact
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_all(d: str) -> List[Dict]:
+    arts = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_rows(arts: List[Dict], mesh: str = "16x16") -> List[str]:
+    rows = []
+    key = lambda a: (a["arch"], SHAPE_ORDER.index(a["shape"]))
+    for a in sorted([x for x in arts if x["mesh"] == mesh], key=key):
+        if a["status"] == "SKIPPED":
+            rows.append(f"| {a['arch']} | {a['shape']} | SKIP | "
+                        f"{a['skip_reason'][:60]}… ||||||")
+            continue
+        t = from_artifact(a)
+        rows.append(
+            f"| {t.arch} | {t.shape} | {fmt_s(t.compute_term)} | "
+            f"{fmt_s(t.memory_term)} | {fmt_s(t.collective_term)} | "
+            f"**{t.dominant}** | {t.model_flops:.2e} | "
+            f"{t.useful_flops_ratio:.2f} | {t.mfu_upper_bound:.2f} |")
+    return rows
+
+
+def dryrun_rows(arts: List[Dict]) -> List[str]:
+    rows = []
+    key = lambda a: (a["arch"], SHAPE_ORDER.index(a["shape"]), a["mesh"])
+    for a in sorted(arts, key=key):
+        if a["status"] == "SKIPPED":
+            rows.append(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+                        f"SKIP | {a['skip_reason'][:50]}… ||||")
+            continue
+        mem = a.get("memory_analysis", {})
+        gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)
+              - mem.get("alias_size_in_bytes", 0)) / 1e9
+        coll = a.get("collectives", {})
+        sched = ",".join(f"{k.split('-')[-1][:4]}x{int(v['count'])}"
+                         for k, v in sorted(coll.items()))
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | OK | "
+            f"{gb:.2f} | {a['collective_bytes_total']:.2e} | "
+            f"{sched} | {a['compile_s']:.0f}s |")
+    return rows
+
+
+def perf_variant_rows(d: str) -> List[str]:
+    """§Perf tagged-variant artifacts (artifacts/perf/*.json)."""
+    rows = []
+    for a in load_all(d):
+        if a.get("status") != "OK":
+            continue
+        t = from_artifact(a)
+        tag = a.get("tag", "")
+        rows.append(
+            f"| {t.arch} | {t.shape} | {tag} | {a.get('moe_impl')} | "
+            f"{a.get('sharding_policy')} | {fmt_s(t.compute_term)} | "
+            f"{fmt_s(t.collective_term)} | {t.dominant} |")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun_final")
+    ap.add_argument("--perf-dir", default="artifacts/perf")
+    ap.add_argument("--out", default="artifacts/roofline_table.md")
+    args = ap.parse_args()
+    arts = load_all(args.dir)
+    n_ok = sum(1 for a in arts if a["status"] == "OK")
+    n_skip = sum(1 for a in arts if a["status"] == "SKIPPED")
+
+    lines = []
+    lines.append(f"## Dry-run matrix ({n_ok} compiled, {n_skip} skipped)\n")
+    lines.append("| arch | shape | mesh | status | bytes/dev GB | "
+                 "coll B/dev | collective schedule | compile |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    lines.extend(dryrun_rows(arts))
+    lines.append("")
+    lines.append("## Roofline (single-pod 16x16, 256 chips)\n")
+    lines.append("| arch | shape | t_compute | t_memory | t_collective | "
+                 "dominant | MODEL_FLOPS | useful ratio | MFU bound |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    lines.extend(roofline_rows(arts, "16x16"))
+    import os as _os
+    if _os.path.isdir(args.perf_dir):
+        lines.append("")
+        lines.append("## §Perf tagged variants (see EXPERIMENTS.md §Perf)\n")
+        lines.append("| arch | shape | tag | moe_impl | policy | "
+                     "t_compute | t_collective | dominant |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        lines.extend(perf_variant_rows(args.perf_dir))
+    text = "\n".join(lines)
+    print(text)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

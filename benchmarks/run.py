@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_table1 — Table 1: end-to-end turnaround (local vs remote DCAI)
+  * bench_fig3   — Figure 3: transfer throughput vs concurrency
+  * bench_fig4   — Figure 4: conventional vs ML-surrogate crossover
+  * bench_kernels— kernel/op micro-benchmarks (A and E ops incl.)
+  * roofline     — §Roofline summary from dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_fig3, bench_fig4, bench_kernels,
+                            bench_moe_impls, bench_table1)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_table1, bench_fig3, bench_fig4, bench_kernels,
+                bench_moe_impls):
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod.__name__},0,ERROR={type(e).__name__}")
+
+    # roofline summary (reads dry-run artifacts if the sweep has been run;
+    # prefers the final shipped sweep)
+    art_dir = os.path.join(os.getcwd(), "artifacts", "dryrun_final")
+    if not os.path.isdir(art_dir):
+        art_dir = os.path.join(os.getcwd(), "artifacts", "dryrun_paper_faithful")
+    if os.path.isdir(art_dir):
+        try:
+            from benchmarks.roofline_report import load_all
+            from repro.roofline.analysis import from_artifact
+            arts = [a for a in load_all(art_dir)
+                    if a["status"] == "OK" and a["mesh"] == "16x16"]
+            n_dom = {}
+            for a in arts:
+                t = from_artifact(a)
+                n_dom[t.dominant] = n_dom.get(t.dominant, 0) + 1
+                print(f"roofline/{t.arch}/{t.shape},"
+                      f"{t.step_time_lower_bound * 1e6:.0f},"
+                      f"dominant={t.dominant};mfu_bound={t.mfu_upper_bound:.2f}")
+            print(f"roofline/summary,0,combos={len(arts)};"
+                  + ";".join(f"{k}={v}" for k, v in sorted(n_dom.items())))
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Figure-4 style decision analysis (the paper's §4.2 'model based analysis').
+
+Uses the analytical cost model to decide, for a given experiment, whether to
+run conventional analysis or the ML-surrogate workflow — and shows how the
+decision shifts with the labeled fraction p and the DCAI training time.
+
+Run: PYTHONPATH=src python examples/crossover_analysis.py
+"""
+from repro.core import build_system
+
+
+def main() -> None:
+    cm = build_system().costmodel
+
+    print("N peaks      conventional@DC   ML surrogate    winner")
+    for n in (10**4, 10**5, 10**6, 10**7, 10**8, 10**9):
+        conv = cm.f_conventional_dc(n)
+        ml = cm.f_ml(n, p=0.1)
+        win = "ML" if ml.total < conv.total else "conventional"
+        print(f"{n:9.0e}   {conv.total:12.1f}s   {ml.total:12.1f}s    {win}")
+
+    n_star = cm.crossover(p=0.1)
+    print(f"\ncrossover N* = {n_star:,} peaks (p=10%, T=19s Cerebras)")
+
+    print("\nsensitivity:")
+    import dataclasses
+    for p in (0.02, 0.05, 0.1, 0.2):
+        print(f"  p={p:4.2f}: N* = {cm.crossover(p=p):,}")
+    names = {6.0: "Cerebras (CookieNetAE)", 19.0: "Cerebras (BraggNN)",
+             139.0: "SambaNova 1-RDU", 1102.0: "local V100"}
+    for t in (6.0, 19.0, 139.0, 1102.0):
+        cm2 = build_system().costmodel
+        cm2.costs = dataclasses.replace(cm2.costs, train=t)
+        print(f"  T={t:7.1f}s: N* = {cm2.crossover(p=0.1):,}  ({names[t]})")
+
+    # decision advice for a typical HEDM scan
+    for n in (5 * 10**5, 5 * 10**7):
+        print(f"\nadvise(N={n:.0e}): {cm.advise(n)}")
+
+
+if __name__ == "__main__":
+    main()

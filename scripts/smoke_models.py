@@ -1,0 +1,38 @@
+"""Quick dev harness: run every assigned arch's smoke variant fwd + decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import build_model
+
+only = sys.argv[1:] or ASSIGNED_ARCHS
+for name in only:
+    cfg = get_config(name).smoke_variant()
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_positions, cfg.frontend.d_embed))
+        loss, met = m.loss(params, batch)
+    elif cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.frontend.n_tokens, cfg.frontend.d_embed))
+        loss, met = m.loss(params, batch)
+    else:
+        loss, met = m.loss(params, batch)
+    assert jnp.isfinite(loss), (name, loss)
+
+    # decode one token
+    cache = m.init_cache(B, 64)
+    logits, cache = m.decode_step(params, cache, tokens[:, :1])
+    assert logits.shape == (B, 1, cfg.vocab_size), (name, logits.shape)
+    assert jnp.all(jnp.isfinite(logits)), name
+    print(f"OK {name:26s} loss={float(loss):.4f}")
+print("all smoke OK")

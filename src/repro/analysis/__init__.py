@@ -1,0 +1,1 @@
+from repro.analysis.pseudo_voigt import analyze_patches, label_for_braggnn  # noqa: F401

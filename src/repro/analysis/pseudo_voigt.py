@@ -1,0 +1,47 @@
+"""The conventional "A"(nalyze) operation: pseudo-Voigt Bragg-peak fitting.
+
+This is the compute step the paper's ML surrogate replaces (BraggNN predicts
+what this produces, ~200x faster).  Two execution paths:
+  * ``analyze_patches(..., use_kernel=True)``  — Pallas TPU kernel
+    (kernels/pseudo_voigt.py; interpret mode on CPU);
+  * ``use_kernel=False`` — pure-jnp XLA path (kernels/ref.py).
+
+Output: per-patch peak centers (y0, x0) in pixels + fit diagnostics.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+
+
+def analyze_patches(patches: jax.Array, *, n_iter: int = 5,
+                    use_kernel: bool = True) -> Dict[str, jax.Array]:
+    """patches: (N, ph, pw) or (N, ph, pw, 1) -> dict of fit results."""
+    if patches.ndim == 4:
+        patches = patches[..., 0]
+    if use_kernel:
+        fits = kernel_ops.pseudo_voigt_fit(patches, n_iter=n_iter)
+    else:
+        fits = kernel_ref.pseudo_voigt_reference(patches, n_iter=n_iter)
+    return {
+        "centers_px": fits[:, :2],            # (y0, x0)
+        "gammas": fits[:, 2:4],
+        "amplitudes": fits[:, 4:6],
+    }
+
+
+def label_for_braggnn(patches: jax.Array, *, use_kernel: bool = True
+                      ) -> jax.Array:
+    """Produce BraggNN training targets (centers normalized to [0,1])."""
+    if patches.ndim == 4:
+        p2 = patches[..., 0]
+    else:
+        p2 = patches
+    res = analyze_patches(p2, use_kernel=use_kernel)
+    n = p2.shape[1] - 1
+    return res["centers_px"] / n

@@ -1,0 +1,48 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    FrontendStub,
+    MoEConfig,
+    SSMConfig,
+    XLSTMConfig,
+    available_archs,
+    get_config,
+)
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES,
+    InputShape,
+    all_shapes,
+    get_shape,
+    smoke_shape,
+)
+
+# registration side-effects
+from repro.configs import (  # noqa: F401
+    command_r_35b,
+    deepseek_moe_16b,
+    gemma_7b,
+    llava_next_mistral_7b,
+    moonshot_v1_16b_a3b,
+    qwen3_moe_235b_a22b,
+    starcoder2_7b,
+    whisper_base,
+    xlstm_1p3b,
+    zamba2_2p7b,
+)
+from repro.configs.paper_models import (  # noqa: F401
+    BraggNNConfig,
+    CookieNetAEConfig,
+)
+
+ASSIGNED_ARCHS = (
+    "zamba2-2.7b",
+    "moonshot-v1-16b-a3b",
+    "qwen3-moe-235b-a22b",
+    "starcoder2-7b",
+    "deepseek-moe-16b",
+    "xlstm-1.3b",
+    "whisper-base",
+    "command-r-35b",
+    "gemma-7b",
+    "llava-next-mistral-7b",
+)

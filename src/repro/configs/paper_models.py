@@ -1,0 +1,41 @@
+"""Configs for the paper's own edge DNNs: BraggNN and CookieNetAE.
+
+These are not part of the assigned-architecture pool; they are the models the
+paper actually (re)trains through the workflow (Table 1) and are used by the
+end-to-end examples and Table-1 benchmark.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class BraggNNConfig:
+    """BraggNN [arXiv:2008.08198]: 11x11 Bragg-peak patch -> (y, x) center."""
+
+    name: str = "braggnn"
+    patch: int = 11
+    base_channels: int = 64          # first conv width
+    fcsz: tuple = (16, 8, 4, 2)      # fully-connected stack
+    imgsz: int = 11
+
+    @property
+    def input_shape(self) -> tuple:
+        return (self.patch, self.patch, 1)
+
+
+@dataclass(frozen=True)
+class CookieNetAEConfig:
+    """CookieNetAE: 16-channel eToF energy-histogram image -> per-channel pdf.
+
+    8 convolution layers, 343,937 trainable parameters (verified by test),
+    ReLU activations, MSE loss, Adam lr=1e-3 (paper §5.2).
+    """
+
+    name: str = "cookienetae"
+    channels: int = 16               # CookieBox eToF channels (image rows)
+    bins: int = 128                  # 1 eV energy bins (image cols)
+
+    @property
+    def input_shape(self) -> tuple:
+        return (self.channels, self.bins, 1)

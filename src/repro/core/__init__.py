@@ -1,0 +1,5 @@
+"""The paper's primary contribution: the geographically distributed
+workflow system (flows + funcX + transfer + cost model + sim clock)."""
+from repro.core.system import System, build_system, dnn_trainer_flow  # noqa: F401
+from repro.core.simclock import SimClock  # noqa: F401
+from repro.core.costmodel import CostModel, OperationCosts  # noqa: F401

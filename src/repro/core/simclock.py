@@ -1,0 +1,72 @@
+"""Hybrid simulation clock.
+
+The paper's evaluation metric is *end-to-end turnaround time* across a
+geographically distributed workflow.  On this single-host container the
+compute steps run for real (measured wall time) while the WAN/service costs
+are simulated (the paper's own linear transfer model and measured service
+overheads).  ``SimClock`` fuses the two:
+
+  * ``advance(dt)``      — add simulated seconds (transfer, queueing, RTT);
+  * ``measure()``        — context manager measuring real wall time of a
+                           compute step and adding it to the clock;
+  * ``charge(dt)``       — add *modeled* compute seconds (e.g. DCAI training
+                           time derived from the roofline model) without
+                           running anything for that long.
+
+Every addition is tagged so benchmarks can decompose turnaround into
+(real compute / modeled compute / simulated WAN+service) — EXPERIMENTS.md
+reports these separately.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Tuple
+
+
+@dataclasses.dataclass
+class ClockEntry:
+    kind: str        # "real" | "modeled" | "sim"
+    label: str
+    seconds: float
+    at: float        # sim timestamp when the entry started
+
+
+class SimClock:
+    def __init__(self) -> None:
+        self._now = 0.0
+        self.log: List[ClockEntry] = []
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, seconds: float, label: str = "", kind: str = "sim"
+                ) -> None:
+        assert seconds >= 0, (label, seconds)
+        self.log.append(ClockEntry(kind, label, seconds, self._now))
+        self._now += seconds
+
+    def charge(self, seconds: float, label: str = "") -> None:
+        self.advance(seconds, label, kind="modeled")
+
+    @contextlib.contextmanager
+    def measure(self, label: str = "") -> Iterator[None]:
+        t0 = time.perf_counter()
+        start = self._now
+        yield
+        dt = time.perf_counter() - t0
+        self.log.append(ClockEntry("real", label, dt, start))
+        self._now += dt
+
+    # ------------------------------------------------------------------
+    def breakdown(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"real": 0.0, "modeled": 0.0, "sim": 0.0}
+        for e in self.log:
+            out[e.kind] += e.seconds
+        out["total"] = self._now
+        return out
+
+    def timeline(self) -> List[Tuple[float, str, str, float]]:
+        return [(e.at, e.kind, e.label, e.seconds) for e in self.log]

@@ -1,0 +1,400 @@
+"""Pallas TPU flash-attention (forward) with causal + sliding-window masks.
+
+TPU-native schedule (not a CUDA port):
+  * grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the trailing
+    (minor) grid axis executes sequentially on a TPU core, so the online-
+    softmax running state (m, l, acc) lives in VMEM scratch and is carried
+    across kv-block steps of one q block;
+  * BlockSpecs tile q/k/v into (block_q x head_dim) / (block_kv x head_dim)
+    VMEM tiles; block sizes default to 128 to keep the MXU matmuls
+    128-aligned;
+  * GQA is expressed in the k/v index_map (q-head -> kv-head, no repeat);
+  * fully-masked kv blocks (outside the causal band or sliding window) are
+    skipped with ``pl.when`` — the band structure, not the full quadratic,
+    is what gets executed.
+
+Validated in interpret mode against kernels/ref.py (pure jnp oracle); see
+tests/test_kernels_attention.py for the shape/dtype sweep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, block_q: int, block_kv: int, seq_len: int,
+                 causal: bool, window: int):
+    i = pl.program_id(2)          # q block index
+    j = pl.program_id(3)          # kv block index
+    nkv = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # is this kv block inside the causal/window band of this q block?
+    q_lo = i * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = j * block_kv
+    k_hi = k_lo + block_kv - 1
+    in_band = True
+    if causal:
+        in_band = k_lo <= q_hi
+    if window:
+        in_band = in_band & (k_hi > q_lo - window)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bkv, D)
+        v = v_ref[0, 0]                                 # (bkv, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, bkv)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                          # (bq, bkv)
+        l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (bq, D)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, S, D).  Returns (B, H, S, D).
+
+    S must be divisible by the block sizes (pad upstream); D is the head
+    dim (any size; MXU prefers multiples of 128).
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    nq = S // block_q
+    nkv = S // block_kv
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        seq_len=S, causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ===========================================================================
+# Backward pass (dq, dk, dv) — same banded schedule as the forward.
+# ===========================================================================
+def _attn_fwd_lse_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                         m_scr, l_scr, acc_scr, *, scale, block_q, block_kv,
+                         seq_len, causal, window):
+    """Forward that also emits the logsumexp rows needed by backward."""
+    _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                 scale=scale, block_q=block_q, block_kv=block_kv,
+                 seq_len=seq_len, causal=causal, window=window)
+    j = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(j == nkv - 1)
+    def _emit():
+        lse = m_scr[...][:, 0] + jnp.log(jnp.maximum(l_scr[...][:, 0],
+                                                     1e-30))
+        lse_ref[0, 0] = lse.astype(lse_ref.dtype)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, scale, block_q, block_kv, causal, window):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = i * block_q
+    k_lo = j * block_kv
+    in_band = True
+    if causal:
+        in_band = k_lo <= q_lo + block_q - 1
+    if window:
+        in_band = in_band & (k_lo + block_kv - 1 > q_lo - window)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0].astype(jnp.float32)
+        delta = delta_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        acc_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        dq_ref[0, 0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, scale, block_q, block_kv,
+                causal, window, group):
+    j = pl.program_id(2)          # kv block
+    g = pl.program_id(3)          # head within kv group
+    i = pl.program_id(4)          # q block
+    nq = pl.num_programs(4)
+
+    @pl.when((g == 0) & (i == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q_lo = i * block_q
+    k_lo = j * block_kv
+    in_band = True
+    if causal:
+        in_band = k_lo <= q_lo + block_q - 1
+    if window:
+        in_band = in_band & (k_lo + block_kv - 1 > q_lo - window)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0].astype(jnp.float32)
+        delta = delta_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)  # (bq, bkv)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bkv, D)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (bkv, D)
+
+    @pl.when((g == pl.num_programs(3) - 1) & (i == nq - 1))
+    def _finalize():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+def _flash_fwd_lse(q, k, v, *, causal=True, window=0, block_q=128,
+                   block_kv=128, interpret=False):
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    nq, nkv = S // block_q, S // block_kv
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(
+        _attn_fwd_lse_kernel, scale=scale, block_q=block_q,
+        block_kv=block_kv, seq_len=S, causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+def _flash_bwd(q, k, v, o, lse, do, *, causal=True, window=0, block_q=128,
+               block_kv=128, interpret=False):
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    nq, nkv = S // block_q, S // block_kv
+    scale = 1.0 / (D ** 0.5)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                                  # (B, H, S)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, block_q=block_q,
+                          block_kv=block_kv, causal=causal, window=window),
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, block_q=block_q,
+                          block_kv=block_kv, causal=causal, window=window,
+                          group=group),
+        grid=(B, Hkv, nkv, group, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, kh, j, g, i, G=group: (b, kh * G + g, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, kh, j, g, i: (b, kh, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, kh, j, g, i: (b, kh, j, 0)),
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, kh, j, g, i, G=group: (b, kh * G + g, i, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, kh, j, g, i, G=group: (b, kh * G + g, i)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, kh, j, g, i, G=group: (b, kh * G + g, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, kh, j, g, i: (b, kh, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, kh, j, g, i: (b, kh, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, S, D), k.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, S, D), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_kv, D), jnp.float32),
+            pltpu.VMEM((block_kv, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_trainable(q, k, v, causal=True, window=0, block_q=128,
+                              block_kv=128, interpret=False):
+    """Differentiable flash attention: Pallas forward AND backward."""
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_kv=block_kv,
+                           interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_kv, interpret):
+    o, lse = _flash_fwd_lse(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_kv=block_kv,
+                            interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, block_q, block_kv, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, o, lse, do, causal=causal,
+                            window=window, block_q=block_q,
+                            block_kv=block_kv, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention_trainable.defvjp(_fa_fwd, _fa_bwd)

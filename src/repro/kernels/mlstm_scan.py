@@ -1,0 +1,117 @@
+"""Pallas TPU mLSTM chunkwise-parallel kernel (xLSTM's matrix-memory cell).
+
+Same TPU-native schedule as ssm_scan: grid = (batch, heads, num_chunks) with
+the chunk axis minor/sequential, so the stabilized recurrent state
+(C: hd x hd matrix memory, n: hd normalizer, m: scalar stabilizer) lives in
+VMEM scratch and is carried across chunks.  Per chunk, everything is
+(Q x hd)/(Q x Q) matmul work on the MXU plus VPU gate math:
+
+    b      = cumsum(log_f)                       intra-chunk gate decay
+    W[t,j] = b_t - b_j + log_i_j   (j <= t)      log intra weights
+    m_pos  = max(rowmax(W), b + m_prev)          per-position stabilizer
+    S      = (q k^T / sqrt(hd)) * exp(W - m_pos)
+    h      = [S v + e^(b+m_prev-m_pos) (q C_prev)] / max(|den|, e^-m_pos)
+    state  = e^(bQ+m_prev-m_new) C_prev + (k e^(bQ-b+log_i-m_new))^T v
+
+Oracle: models/xlstm.py::mlstm_chunkwise (same math, stacked-batch jnp) —
+itself cross-validated against the sequential decode recurrence in
+tests/test_decode_consistency.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, h_ref,
+                  c_scr, n_scr, m_scr, *, chunk: int, hd: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+
+    scale = 1.0 / (hd ** 0.5)
+    q = q_ref[0, 0].astype(jnp.float32) * scale    # (Q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    li = li_ref[0, 0].astype(jnp.float32)          # (Q,)
+    lf = lf_ref[0, 0].astype(jnp.float32)
+
+    b = jnp.cumsum(lf)                             # (Q,)
+    bQ = b[-1]
+    m_prev = m_scr[0, 0]
+
+    # intra-chunk log weights
+    wmat = b[:, None] - b[None, :] + li[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    wmat = jnp.where(jj <= ii, wmat, NEG)
+    m_pos = jnp.maximum(wmat.max(axis=1), b + m_prev)   # (Q,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    S = s * jnp.exp(wmat - m_pos[:, None])
+
+    inter_w = jnp.exp(b + m_prev - m_pos)          # (Q,)
+    num = jax.lax.dot_general(S, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    num = num + inter_w[:, None] * jax.lax.dot_general(
+        q, c_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    den = S.sum(axis=1) + inter_w * jax.lax.dot_general(
+        q, n_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_pos))
+    h_ref[0, 0] = (num / denom[:, None]).astype(h_ref.dtype)
+
+    # state update
+    upd_w = bQ - b + li                            # (Q,)
+    m_new = jnp.maximum(bQ + m_prev, upd_w.max())
+    k_scaled = k * jnp.exp(upd_w - m_new)[:, None]
+    decay = jnp.exp(bQ + m_prev - m_new)
+    c_scr[...] = decay * c_scr[...] + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_scr[...] = decay * n_scr[...] + k_scaled.sum(axis=0)[:, None]
+    m_scr[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array, log_i: jax.Array,
+               log_f: jax.Array, *, chunk: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """q/k/v: (B, H, L, hd); log_i/log_f: (B, H, L) fp32.
+    Returns h (B, H, L, hd)."""
+    B, H, L, hd = q.shape
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+
+    return pl.pallas_call(
+        functools.partial(_mlstm_kernel, chunk=chunk, hd=hd),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd),
+                               lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),   # C matrix memory
+            pltpu.VMEM((hd, 1), jnp.float32),    # n normalizer
+            pltpu.VMEM((1, 1), jnp.float32),     # m stabilizer
+        ],
+        interpret=interpret,
+    )(q, k, v, log_i, log_f)

@@ -1,0 +1,118 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (Pallas
+interprets the kernel body in Python); on a real TPU the same calls compile
+to Mosaic.  ``KERNEL_INTERPRET`` auto-detects the backend; pass
+``interpret=`` explicitly to override.
+
+Each wrapper handles padding/layout so callers can use model-native shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pseudo_voigt as _pv
+from repro.kernels import ssm_scan as _ssd
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Model-layout wrapper: q (B,S,H,D), k/v (B,S,Hkv,D) -> (B,S,H,D).
+
+    Pads S up to a block multiple (masked out via the causal mask since
+    padded queries only ever see padded keys at the tail).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B, S, H, D = q.shape
+    bq = min(block_q, max(16, S))
+    bkv = min(block_kv, max(16, S))
+    pad = (-S) % max(bq, bkv)
+    if pad:
+        zq = jnp.zeros((B, pad, H, D), q.dtype)
+        zk = jnp.zeros((B, pad, k.shape[2], D), k.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=bq, block_kv=bkv, interpret=interpret)
+    out = jnp.swapaxes(out, 1, 2)
+    return out[:, :S] if pad else out
+
+
+# ---------------------------------------------------------------------------
+def ssd_scan_heads(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                   Cm: jax.Array, *, chunk: int = 128,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Model-layout wrapper matching models/ssm.py::ssd_chunked.
+
+    x: (B,L,H,P); dt: (B,L,H) (softplus'd); A: (H,) negative;
+    Bm/Cm: (B,L,G,N).  Returns y (B,L,H,P).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B, L, H, P = x.shape
+    xdt = (x * dt[..., None].astype(x.dtype))
+    xdt = jnp.transpose(xdt, (0, 2, 1, 3))              # (B,H,L,P)
+    dA = jnp.transpose(dt * A[None, None, :], (0, 2, 1))  # (B,H,L)
+    Bm_t = jnp.transpose(Bm, (0, 2, 1, 3))              # (B,G,L,N)
+    Cm_t = jnp.transpose(Cm, (0, 2, 1, 3))
+    c = min(chunk, L)
+    y = _ssd.ssd_scan(xdt, dA.astype(jnp.float32), Bm_t, Cm_t,
+                      chunk=c, interpret=interpret)
+    return jnp.transpose(y, (0, 2, 1, 3))               # (B,L,H,P)
+
+
+# ---------------------------------------------------------------------------
+def pseudo_voigt_fit(patches: jax.Array, *, n_iter: int = 5,
+                     block: int = 256,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """patches (Np, ph, pw) -> (Np, 6); pads Np to a block multiple."""
+    if interpret is None:
+        interpret = default_interpret()
+    Np = patches.shape[0]
+    blk = min(block, max(8, Np))
+    pad = (-Np) % blk
+    if pad:
+        patches = jnp.concatenate(
+            [patches, jnp.zeros((pad,) + patches.shape[1:], patches.dtype)])
+    out = _pv.pseudo_voigt_fit(patches, n_iter=n_iter, block=blk,
+                               interpret=interpret)
+    return out[:Np]
+
+
+# ---------------------------------------------------------------------------
+def mlstm_scan_heads(q: jax.Array, k: jax.Array, v: jax.Array,
+                     log_i: jax.Array, log_f: jax.Array, *,
+                     chunk: int = 128,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Model-layout wrapper matching models/xlstm.py::mlstm_chunkwise.
+
+    q/k/v: (B, L, H, hd); log_i/log_f: (B, L, H).  Returns (B, L, H, hd).
+    """
+    from repro.kernels import mlstm_scan as _ml
+    if interpret is None:
+        interpret = default_interpret()
+    B, L, H, hd = q.shape
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    li = jnp.transpose(log_i, (0, 2, 1)).astype(jnp.float32)
+    lf = jnp.transpose(log_f, (0, 2, 1)).astype(jnp.float32)
+    h = _ml.mlstm_scan(qt, kt, vt, li, lf, chunk=min(chunk, L),
+                       interpret=interpret)
+    return jnp.transpose(h, (0, 2, 1, 3))

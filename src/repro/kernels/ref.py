@@ -1,0 +1,165 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification the kernel must match
+(asserted with ``assert_allclose`` over shape/dtype sweeps in tests/).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# flash_attention oracle
+# ---------------------------------------------------------------------------
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B,H,S,D); k/v: (B,Hkv,S,D) -> (B,H,S,D).  Plain masked softmax."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, S, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan oracle — direct (non-chunked) linear recurrence
+# ---------------------------------------------------------------------------
+def ssd_reference(xdt: jax.Array, dA: jax.Array, Bm: jax.Array,
+                  Cm: jax.Array) -> jax.Array:
+    """Sequential SSM recurrence, the ground truth for the chunked forms.
+
+    xdt: (B,H,L,P); dA: (B,H,L); Bm/Cm: (B,G,L,N) -> y (B,H,L,P)
+    h_t = exp(dA_t) h_{t-1} + xdt_t B_t^T ;  y_t = h_t C_t
+    """
+    B, H, L, P = xdt.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)    # (B,H,L,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    def step(h, inp):
+        x_t, dA_t, B_t, C_t = inp        # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        h = h * jnp.exp(dA_t)[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t, B_t)
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xdt.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(dA.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(Bh.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(Ch.astype(jnp.float32), 2, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(xdt.dtype)   # (B,H,L,P)
+
+
+# ---------------------------------------------------------------------------
+# pseudo_voigt oracle — separable marginal Gauss-Newton fit
+# ---------------------------------------------------------------------------
+import math
+
+_ETA = 0.5                      # fixed Lorentzian fraction
+_C = 1.0 / math.sqrt(2.0 * math.log(2.0))   # sigma = _C * gamma
+
+
+def pv_profile(u: jax.Array, gamma: jax.Array) -> jax.Array:
+    """Unit-amplitude pseudo-Voigt profile at offsets u."""
+    g2 = gamma * gamma
+    lor = g2 / (u * u + g2)
+    sig = _C * gamma
+    gau = jnp.exp(-(u * u) / (2.0 * sig * sig))
+    return _ETA * lor + (1.0 - _ETA) * gau
+
+
+def _pv_grads(u, gamma):
+    g2 = gamma * gamma
+    lor = g2 / (u * u + g2)
+    sig = _C * gamma
+    gau = jnp.exp(-(u * u) / (2.0 * sig * sig))
+    d_lor_dx0 = 2.0 * u * lor * lor / g2
+    d_gau_dx0 = gau * u / (sig * sig)
+    d_lor_dg = 2.0 * u * u * lor * lor / (g2 * gamma)
+    d_gau_dg = gau * u * u / (_C * _C * gamma ** 3)
+    dp_dx0 = _ETA * d_lor_dx0 + (1 - _ETA) * d_gau_dx0
+    dp_dg = _ETA * d_lor_dg + (1 - _ETA) * d_gau_dg
+    p = _ETA * lor + (1 - _ETA) * gau
+    return p, dp_dx0, dp_dg
+
+
+def pv_fit_1d(y: jax.Array, n_iter: int = 5,
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fit A * pV(x - x0; gamma) + bg to y (..., n) by Gauss-Newton.
+
+    Returns (x0, gamma, A).  bg is the per-profile min (subtracted, not fit).
+    """
+    n = y.shape[-1]
+    x = jnp.arange(n, dtype=jnp.float32)
+    yf = y.astype(jnp.float32)
+    bg = yf.min(axis=-1, keepdims=True)
+    yc = yf - bg
+    total = jnp.maximum(yc.sum(axis=-1), 1e-12)
+
+    x0 = (yc * x).sum(axis=-1) / total
+    var = (yc * (x - x0[..., None]) ** 2).sum(axis=-1) / total
+    gamma = jnp.sqrt(jnp.maximum(var, 0.25))
+    A = jnp.maximum(yc.max(axis=-1), 1e-12)
+
+    for _ in range(n_iter):
+        u = x - x0[..., None]
+        p, dp_dx0, dp_dg = _pv_grads(u, gamma[..., None])
+        f = A[..., None] * p
+        r = yc - f
+        # jacobian columns: dA, dx0, dgamma
+        j0 = p
+        j1 = A[..., None] * dp_dx0
+        j2 = A[..., None] * dp_dg
+        # normal equations (3x3), solved in closed form
+        a00 = (j0 * j0).sum(-1); a01 = (j0 * j1).sum(-1); a02 = (j0 * j2).sum(-1)
+        a11 = (j1 * j1).sum(-1); a12 = (j1 * j2).sum(-1); a22 = (j2 * j2).sum(-1)
+        b0 = (j0 * r).sum(-1); b1 = (j1 * r).sum(-1); b2 = (j2 * r).sum(-1)
+        # regularize
+        lam = 1e-6 * (a00 + a11 + a22) + 1e-12
+        a00 = a00 + lam; a11 = a11 + lam; a22 = a22 + lam
+        det = (a00 * (a11 * a22 - a12 * a12)
+               - a01 * (a01 * a22 - a12 * a02)
+               + a02 * (a01 * a12 - a11 * a02))
+        det = jnp.where(jnp.abs(det) < 1e-20, 1e-20, det)
+        i00 = a11 * a22 - a12 * a12
+        i01 = a02 * a12 - a01 * a22
+        i02 = a01 * a12 - a02 * a11
+        i11 = a00 * a22 - a02 * a02
+        i12 = a02 * a01 - a00 * a12
+        i22 = a00 * a11 - a01 * a01
+        dA = (i00 * b0 + i01 * b1 + i02 * b2) / det
+        dx0 = (i01 * b0 + i11 * b1 + i12 * b2) / det
+        dg = (i02 * b0 + i12 * b1 + i22 * b2) / det
+        A = jnp.maximum(A + dA, 1e-12)
+        x0 = jnp.clip(x0 + dx0, 0.0, n - 1.0)
+        gamma = jnp.clip(gamma + dg, 0.3, float(n))
+    return x0, gamma, A
+
+
+def pseudo_voigt_reference(patches: jax.Array, n_iter: int = 5) -> jax.Array:
+    """patches (Np, ph, pw) -> (Np, 6): (y0, x0, gy, gx, Ay, Ax).
+
+    Separable fit: pseudo-Voigt GN on the row- and column-marginals.
+    """
+    my = patches.sum(axis=2)   # (Np, ph)  marginal over columns -> y profile
+    mx = patches.sum(axis=1)   # (Np, pw)
+    y0, gy, Ay = pv_fit_1d(my, n_iter)
+    x0, gx, Ax = pv_fit_1d(mx, n_iter)
+    return jnp.stack([y0, x0, gy, gx, Ay, Ax], axis=-1)

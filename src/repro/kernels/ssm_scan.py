@@ -1,0 +1,105 @@
+"""Pallas TPU Mamba2/SSD chunked-scan kernel.
+
+TPU-native schedule: grid = (batch, heads, num_chunks); the chunk axis is the
+minor (sequential) grid dimension, so the recurrent SSM state (P x N) lives in
+VMEM scratch and is carried across chunks — the inter-chunk recurrence costs
+no HBM round-trip.  Per chunk the kernel computes, entirely in VMEM:
+
+    cum   = cumsum(dA)                         (Q,)      decay within chunk
+    Lmat  = tril(exp(cum_i - cum_j))           (Q, Q)    intra-chunk decays
+    CB    = C @ B^T                            (Q, Q)    MXU
+    y     = (CB * Lmat) @ xdt                  (Q, P)    MXU   [intra]
+          + exp(cum)[:,None] * (C @ state^T)   (Q, P)    MXU   [inter]
+    state = exp(cum[-1]) * state + xdt^T @ (B * exp(cum[-1]-cum))   [update]
+
+Inputs are pre-projected per head (the wrapper in ops.py pre-multiplies
+x by dt and folds A into dA = dt * A_h), so the kernel is pure scan math.
+Oracle: kernels/ref.py::ssd_reference (also exercised against
+models/ssm.py::ssd_chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, dA_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    dA = dA_ref[0, 0].astype(jnp.float32)         # (Q,) negative
+    Bm = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+
+    cum = jnp.cumsum(dA)                          # (Q,)
+
+    # intra-chunk decay matrix
+    diff = cum[:, None] - cum[None, :]            # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    W = CB * Lmat                                  # (Q, Q)
+    y = jax.lax.dot_general(W, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: carried state contribution
+    state = state_scr[...]                         # (P, N)
+    y_off = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + jnp.exp(cum)[:, None] * y_off
+
+    # state update
+    decay_last = jnp.exp(cum[-1] - cum)            # (Q,)
+    Bd = Bm * decay_last[:, None]                  # (Q, N)
+    upd = jax.lax.dot_general(xdt, Bd, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = jnp.exp(cum[-1]) * state + upd
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xdt: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
+             chunk: int = 128, interpret: bool = False) -> jax.Array:
+    """Chunked SSD scan.
+
+    xdt: (B, H, L, P)  inputs pre-multiplied by dt
+    dA:  (B, H, L)     dt * A_h (negative)
+    Bm:  (B, G, L, N)  input map (groups broadcast to heads via index_map)
+    Cm:  (B, G, L, N)  output map
+    Returns y (B, H, L, P).
+    """
+    B, H, L, P = xdt.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rep = H // G
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b, h, c, r=rep: (b, h // r, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b, h, c, r=rep: (b, h // r, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, P), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xdt, dA, Bm, Cm)

@@ -1,0 +1,1 @@
+# launch layer: mesh construction, sharding rules, dry-run, train/serve CLIs

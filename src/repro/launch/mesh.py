@@ -1,0 +1,41 @@
+"""Production mesh construction (DESIGN.md §5, system-prompt contract).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / single host)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# hardware constants for the roofline model (TPU v5e)
+CHIP_PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+CHIP_HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9                 # bytes/s per link (~ per-direction)

@@ -1,0 +1,290 @@
+"""Sharding rules: parameter PartitionSpecs + batch/cache specs per arch.
+
+Logical roles on the production mesh (DESIGN.md §5):
+  * "data"  — batch / FSDP axis (16-way per pod; with multi-pod, batch maps
+              to ("pod", "data"));
+  * "model" — tensor / expert / head axis (16-way).
+
+Rules are (leaf-name regex, dims-from-end axis preferences).  Every
+assignment is validated for divisibility against the actual leaf shape and
+degrades gracefully (axis dropped) when a dim doesn't divide — this is what
+lets ONE rule table cover all 10 architectures (e.g. kv-head sharding
+degrades to replication for GQA configs whose 4 kv heads don't split 16
+ways, while the 128-dim head size still FSDP-shards).
+
+Axis preference entries may be tuples of alternatives: the first axis (or
+axis-tuple) that divides the dim wins.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+AxisChoice = Union[None, str, Tuple[str, ...]]
+
+# dims counted FROM THE END of the leaf shape; leading (layer-stack) dims
+# are automatically unsharded.
+#   entry = list of alternatives tried in order; each alternative is an axis
+#   name or tuple of axis names (mapped jointly).
+RULES: List[Tuple[str, Tuple[Sequence[AxisChoice], ...]]] = [
+    # --- MoE ---------------------------------------------------------------
+    (r"experts_w_(gate|up)$", (["model"], ["data"], [None])),   # (E, d, h)
+    (r"experts_w_down$", (["model"], [None], ["data"])),        # (E, h, d)
+    (r"router$", ([None], ["model"])),                          # (d, E)
+    # --- attention -----------------------------------------------------------
+    (r"\bwq$", (["data"], ["model"], [None])),                  # (d, H, D)
+    # kv heads that don't divide the model axis REPLICATE (never D-shard:
+    # a sharded contraction dim turns every score matmul into an
+    # all-reduce — §Perf-4)
+    (r"\bw(k|v)$", (["data"], ["model", None], [None])),        # (d,Hkv,D)
+    (r"\bwo$", (["model"], [None], ["data"])),                  # (H, D, d)
+    (r"b(q|k|v)$", (["model", None], [None])),                  # (H, D)
+    # --- MLP ------------------------------------------------------------------
+    (r"w_(gate|up|z)$", (["data"], ["model"])),                 # (d, ff)
+    (r"(w_down|ffn_down)$", (["model"], ["data"])),             # (ff, d)
+    (r"ffn_(gate|up)$", (["data"], ["model"])),
+    (r"b_up$", (["model"],)),
+    # --- embeddings / head ------------------------------------------------------
+    (r"\bembedding$", (["model"], ["data"])),                   # (V, d)
+    (r"head/w$|head.*\bw$", (["data"], ["model"])),             # (d, V)
+    (r"dec_pos$", ([None], ["model", "data", None])),
+    (r"frame_proj$|projector/w1$", ([None], ["model", "data", None])),
+    (r"projector/w2$", (["model", "data", None], [None])),
+    # --- mamba2 --------------------------------------------------------------
+    (r"mamba/w_in$|\bw_in$", (["data"], ["model"])),            # (d, big)
+    (r"conv_w$", ([None], ["model", "data", None])),            # (K, Cd)
+    (r"conv_b$", (["model", "data", None],)),
+    (r"mamba/w_out$", (["model"], ["data"])),                   # (d_in, d)
+    (r"norm_scale$", (["model", "data", None],)),
+    # --- xlstm ----------------------------------------------------------------
+    (r"w_if$", (["data"], [None])),                             # (d_in, 2H)
+    (r"r_gates$", ([None], ["model", None], [None])),           # (4,H,hd,hd)
+    (r"w_gates$", (["data"], ["model", "data", None])),         # (d, 4d)
+    (r"out_norm_scale$", (["model", "data", None],)),
+]
+
+_DEFAULT: Tuple[Sequence[AxisChoice], ...] = ((None,),)
+
+# §Perf sharding-policy overrides, prepended to RULES (first match wins).
+POLICY_OVERRIDES: Dict[str, List[Tuple[str, Tuple[Sequence[AxisChoice], ...]]]] = {
+    # paper-faithful baseline
+    "baseline": [],
+    # §Perf-3 (small models): pure data parallelism — replicate every
+    # parameter, batch over ("pod","data"); grads reduce once per step.
+    "replicated": [(r".", ((None,), (None,), (None,), (None,), (None,)))],
+    # §Perf-2 (recurrent stacks): keep FSDP for the big projections but
+    # replicate everything the per-timestep sLSTM scan body touches, so the
+    # 4096-iteration loop is collective-free.
+    "local_recurrent": [
+        (r"r_gates$", ((None,), (None,), (None,), (None,))),
+        (r"w_gates$", (["data"], (None,))),
+        (r"b_gates$", ((None,),)),
+    ],
+}
+
+
+def _axis_size(mesh_axes: Dict[str, int], choice: AxisChoice) -> int:
+    if choice is None:
+        return 1
+    if isinstance(choice, tuple):
+        n = 1
+        for a in choice:
+            n *= mesh_axes[a]
+        return n
+    return mesh_axes[choice]
+
+
+def spec_for_leaf(path: str, shape: Tuple[int, ...],
+                  mesh_axes: Dict[str, int],
+                  data_axes: Tuple[str, ...] = ("data",),
+                  policy: str = "baseline") -> P:
+    """Build a PartitionSpec for one leaf by rule table + divisibility."""
+    prefs: Optional[Tuple[Sequence[AxisChoice], ...]] = None
+    for pattern, p in POLICY_OVERRIDES.get(policy, []) + RULES:
+        if re.search(pattern, path):
+            prefs = p
+            break
+    if prefs is None:
+        prefs = _DEFAULT
+
+    ndim = len(shape)
+    spec: List[AxisChoice] = [None] * ndim
+    used: set = set()
+    # apply from the end
+    for k, alternatives in enumerate(prefs):
+        dim = ndim - len(prefs) + k
+        if dim < 0:
+            continue
+        for alt in alternatives:
+            if alt is None:
+                break
+            # expand "data" to the full batch axes tuple (e.g. pod+data)
+            cand: AxisChoice = alt
+            if alt == "data" and len(data_axes) > 1:
+                cand = tuple(data_axes)
+            names = cand if isinstance(cand, tuple) else (cand,)
+            if any(n in used for n in names):
+                continue
+            if shape[dim] % _axis_size(mesh_axes, cand) == 0:
+                spec[dim] = cand
+                used.update(names)
+                break
+
+    # §Perf-4: attention projections whose head dim cannot take the model
+    # axis must REPLICATE outright — keeping the d-dim FSDP-sharded makes
+    # XLA partial-reduce the (replicated-batch) activations instead of
+    # gathering the small weight (observed: 455 s of all-reduce on
+    # starcoder2 36H/4kv prefill).
+    if re.search(r"\bw[qkvo]$", path) and not any(
+            s == "model" or (isinstance(s, tuple) and "model" in s)
+            for s in spec):
+        return P(*([None] * ndim))
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _fsdp_flat_spec(shape: Tuple[int, ...],
+                    mesh_axes: Dict[str, int]) -> P:
+    """§Perf-2 policy: weight STORAGE sharded over the whole mesh (one dim
+    over ("pod","data","model") combined), weights gathered at use, compute
+    purely data-parallel — no model-parallel activation collectives.  The
+    right regime for models whose head structure doesn't divide the model
+    axis (xlstm's 4 heads vs a 16-way axis)."""
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh_axes)
+    # small leaves stay replicated: sharding them buys nothing and makes
+    # their in-scan gradient contributions psum per iteration (§Perf-2 it.5)
+    n_elem = 1
+    for s in shape:
+        n_elem *= s
+    if n_elem < (1 << 23):
+        return P(*([None] * len(shape)))
+    # try combined suffixes then single axes, largest dim first
+    dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for k in range(len(all_axes), 0, -1):
+        axes = all_axes[-k:]
+        n = 1
+        for a in axes:
+            n *= mesh_axes[a]
+        for dim in dims:
+            if shape[dim] % n == 0 and shape[dim] >= n:
+                spec: List[AxisChoice] = [None] * len(shape)
+                spec[dim] = axes if len(axes) > 1 else axes[0]
+                return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(tree: PyTree, mesh_axes: Dict[str, int],
+                data_axes: Tuple[str, ...] = ("data",),
+                policy: str = "baseline") -> PyTree:
+    """Specs for a whole parameter / optimizer-state tree."""
+    def per_leaf(path, leaf):
+        shape = tuple(leaf.shape)
+        if policy == "fsdp_flat":
+            return _fsdp_flat_spec(shape, mesh_axes)
+        return spec_for_leaf(_path_str(path), shape, mesh_axes, data_axes,
+                             policy)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+def batch_spec(shape: Tuple[int, ...], mesh_axes: Dict[str, int],
+               data_axes: Tuple[str, ...] = ("data",)) -> P:
+    """Shard the leading (batch) dim over the batch axes if divisible;
+    degrade to fewer axes (then replication) for small batches."""
+    b = shape[0]
+    for k in range(len(data_axes), 0, -1):
+        axes = tuple(data_axes[-k:])
+        n = 1
+        for a in axes:
+            n *= mesh_axes[a]
+        if b % n == 0:
+            ax: AxisChoice = axes if len(axes) > 1 else axes[0]
+            return P(ax, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_specs(tree: PyTree, mesh_axes: Dict[str, int],
+                data_axes: Tuple[str, ...] = ("data",)) -> PyTree:
+    """KV-cache / recurrent-state specs.
+
+    Heuristic per leaf: find the largest shardable dim among {batch-like,
+    slot-like, head-like} — batch dims map to data axes, trailing
+    (head/feature) dims to "model" when divisible.  Leaves are e.g.
+    k/v (L, B, S, Hkv, D), ssm state (seg, per, B, H, P, N), positions.
+    """
+    def per_leaf(path, leaf):
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        spec: List[AxisChoice] = [None] * ndim
+        p = _path_str(path)
+        if ndim == 0:
+            return P()
+        # integer bookkeeping (positions) — replicate
+        if leaf.dtype in (jnp.int32, jnp.int64):
+            return P(*spec)
+        # batch-ish dim: first dim whose size divides the data axes product
+        placed_data = False
+        data_dim = -1
+        for k in range(len(data_axes), 0, -1):
+            axes = tuple(data_axes[-k:])
+            n = 1
+            for a in axes:
+                n *= mesh_axes[a]
+            for dim in range(ndim - 1):
+                if shape[dim] % n == 0 and shape[dim] >= n:
+                    spec[dim] = axes if len(axes) > 1 else axes[0]
+                    placed_data = True
+                    data_dim = dim
+                    break
+            if placed_data:
+                break
+        # model axis: KV caches (…, B, S, Hkv, D) shard the SLOT dim S
+        # (flash-decode style: per-shard partial softmax, tiny stat merge) —
+        # never the head_dim D (a sharded contraction dim turns every
+        # decode score into an activation all-reduce, §Perf-4); heads only
+        # when they divide.
+        m = mesh_axes.get("model", 1)
+        candidates = []
+        if ndim >= 4:
+            candidates = [ndim - 3, ndim - 2]      # slots, then kv heads
+        elif ndim >= 2:
+            candidates = [ndim - 2]
+        for dim in candidates:
+            if dim <= data_dim or dim < 0 or spec[dim] is not None:
+                continue
+            if shape[dim] % m == 0 and shape[dim] >= m:
+                spec[dim] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, tree)
+
+
+def to_named(tree_specs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def maybe_shard(x: jax.Array, spec: P) -> jax.Array:
+    """Sharding constraint that no-ops when no mesh is active (CPU tests)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+    ok = all(
+        (a is None) or all(n in names for n in (a if isinstance(a, tuple)
+                                                else (a,)))
+        for a in spec)
+    if not ok:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,184 @@
+"""Abstract input specs + step functions for every (arch x shape) combo.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation); the step
+builders return the functions the launcher jits:
+
+  * train_4k    -> ``train_step(params, opt_state, batch)``   (the T op)
+  * prefill_32k -> ``prefill_step(params, batch)``            (admission)
+  * decode_32k / long_500k -> ``serve_step(params, cache, tokens)`` (the E op)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.models import build_model
+from repro.models.api import ModelAPI
+from repro.optim import adamw
+
+PyTree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+def abstract_params(api: ModelAPI) -> PyTree:
+    return jax.eval_shape(api.init, SDS((2,), jnp.uint32))
+
+
+def _decoder_len(cfg: ArchConfig, seq: int) -> int:
+    if cfg.is_encoder_decoder and cfg.max_decoder_positions:
+        return min(seq, cfg.max_decoder_positions)
+    return seq
+
+
+def batch_abstract(cfg: ArchConfig, shape: InputShape) -> Dict[str, SDS]:
+    """Training / prefill batch ShapeDtypeStructs."""
+    B = shape.global_batch
+    S = shape.seq_len
+    if cfg.family == "audio":
+        S_dec = _decoder_len(cfg, S)
+        return {
+            "frames": SDS((B, cfg.encoder_positions, cfg.frontend.d_embed),
+                          jnp.bfloat16),
+            "tokens": SDS((B, S_dec), jnp.int32),
+            "labels": SDS((B, S_dec), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        n_img = cfg.frontend.n_tokens
+        S_text = max(S - n_img, 16)
+        return {
+            "patches": SDS((B, n_img, cfg.frontend.d_embed), jnp.bfloat16),
+            "tokens": SDS((B, S_text), jnp.int32),
+            "labels": SDS((B, S_text), jnp.int32),
+        }
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+
+
+def cache_abstract(api: ModelAPI, shape: InputShape) -> PyTree:
+    window = api.effective_window(shape.seq_len)
+    return jax.eval_shape(
+        functools.partial(api.init_cache, shape.global_batch, shape.seq_len,
+                          window=window))
+
+
+def decode_tokens_abstract(shape: InputShape) -> SDS:
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+def make_loss_for_shape(api: ModelAPI, shape: InputShape, *,
+                        attn_chunk: int = 512, remat: bool = True):
+    window = api.effective_window(shape.seq_len)
+    cfg = api.cfg
+
+    def loss(params, batch):
+        kwargs: Dict[str, Any] = dict(window=window, attn_chunk=attn_chunk,
+                                      remat=remat)
+        if cfg.family == "audio":
+            return api.loss(params, batch, **{k: v for k, v in kwargs.items()
+                                              if k != "window"})
+        return api.loss(params, batch, **kwargs)
+
+    return loss
+
+
+def make_train_step_fn(api: ModelAPI, shape: InputShape, *,
+                       lr: float = 1e-4, attn_chunk: int = 512,
+                       remat: bool = True,
+                       pre_gather: bool = False) -> Callable:
+    loss = make_loss_for_shape(api, shape, attn_chunk=attn_chunk,
+                               remat=remat)
+    opt = adamw(lr, grad_clip_norm=1.0)
+
+    def _gathered_bf16(tree):
+        """§Perf-2: one bf16 all-gather of the FSDP-sharded master weights
+        per step (outside the layer scans), instead of per-segment/remat
+        re-gathers in fp32.  Differentiable: grads flow through the cast."""
+        from jax.sharding import PartitionSpec as P
+
+        def leaf(x):
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                return x
+            y = x.astype(jnp.bfloat16)
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is not None and not mesh.empty:
+                y = jax.lax.with_sharding_constraint(
+                    y, P(*([None] * y.ndim)))
+            return y
+
+        return jax.tree.map(leaf, tree)
+
+    def train_step(params, opt_state, batch):
+        def loss_of(p, b):
+            return loss(_gathered_bf16(p) if pre_gather else p, b)
+
+        (l, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+            params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = l
+        from repro.optim.optimizers import global_norm
+        metrics["grad_norm"] = global_norm(grads)
+        return new_params, new_opt, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step_fn(api: ModelAPI, shape: InputShape, *,
+                         attn_chunk: int = 512) -> Callable:
+    window = api.effective_window(shape.seq_len)
+    cfg = api.cfg
+
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            logits, _ = api.forward(params, batch["tokens"],
+                                    frames=batch["frames"],
+                                    attn_chunk=attn_chunk, remat=False)
+        elif cfg.family == "vlm":
+            logits, _ = api.forward(params, batch["tokens"],
+                                    patches=batch["patches"], window=window,
+                                    attn_chunk=attn_chunk, remat=False)
+        else:
+            logits, _ = api.forward(params, batch["tokens"], window=window,
+                                    attn_chunk=attn_chunk, remat=False)
+        # serving admission only needs the last position (next-token sampling)
+        return logits[:, -1].astype(jnp.bfloat16)
+
+    return prefill_step
+
+
+def cast_params_bf16(tree):
+    """Inference-time parameter dtype (serving uses bf16 checkpoints)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l, tree)
+
+
+def make_serve_step_fn(api: ModelAPI, shape: InputShape) -> Callable:
+    window = api.effective_window(shape.seq_len)
+
+    def serve_step(params, cache, tokens):
+        return api.decode_step(params, cache, tokens, window=window)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+def combo_supported(cfg: ArchConfig, shape: InputShape
+                    ) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, cfg.long_context_skip_reason or "no long-context path"
+    if shape.is_decode and not cfg.supports_decode:
+        return False, "encoder-only architecture has no decode step"
+    return True, ""

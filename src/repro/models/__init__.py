@@ -1,0 +1,1 @@
+from repro.models.api import ModelAPI, build_model  # noqa: F401

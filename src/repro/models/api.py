@@ -1,0 +1,118 @@
+"""Unified model API — one interface over all architecture families.
+
+``build_model(cfg)`` returns a :class:`ModelAPI` with:
+  * ``init(key)``                         -> params
+  * ``loss(params, batch)``               -> (loss, metrics)      [train]
+  * ``forward(params, tokens, ...)``      -> (logits, aux)        [prefill]
+  * ``init_cache(batch, cache_len)``      -> cache/state
+  * ``decode_step(params, cache, tok)``   -> (logits, new cache)  [serve]
+  * ``effective_window(seq_len)``         -> attention window for a shape
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, recurrent, transformer, vlm
+
+PyTree = Any
+
+# full-attention archs switch to their long-context SWA variant above this
+LONG_CONTEXT_THRESHOLD = 65_536
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[..., Tuple[jax.Array, Dict]]
+    forward: Callable[..., Tuple[jax.Array, jax.Array]]
+    init_cache: Callable[..., PyTree]
+    decode_step: Callable[..., Tuple[jax.Array, PyTree]]
+
+    def effective_window(self, seq_len: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window:
+            return cfg.sliding_window
+        if cfg.long_context_window and seq_len > LONG_CONTEXT_THRESHOLD:
+            return cfg.long_context_window
+        return 0
+
+
+def build_model(cfg: ArchConfig) -> ModelAPI:
+    fam = cfg.family
+
+    if fam == "hybrid":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: recurrent.init_zamba_params(key, cfg),
+            loss=_lm_loss_wrapper(recurrent.zamba_forward, cfg),
+            forward=lambda p, t, **kw: recurrent.zamba_forward(p, t, cfg, **kw),
+            init_cache=lambda b, n, **kw: recurrent.init_zamba_cache(
+                cfg, b, n, **kw),
+            decode_step=lambda p, c, t, **kw: recurrent.zamba_decode_step(
+                p, c, t, cfg, **kw),
+        )
+    if fam == "ssm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: recurrent.init_xlstm_params(key, cfg),
+            loss=_lm_loss_wrapper(recurrent.xlstm_forward, cfg),
+            forward=lambda p, t, **kw: recurrent.xlstm_forward(p, t, cfg, **kw),
+            init_cache=lambda b, n, **kw: recurrent.init_xlstm_cache(
+                cfg, b, n, **kw),
+            decode_step=lambda p, c, t, **kw: recurrent.xlstm_decode_step(
+                p, c, t, cfg, **kw),
+        )
+    if fam == "audio":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            loss=lambda p, b, **kw: encdec.loss_fn(p, b, cfg, **kw),
+            forward=lambda p, t, **kw: _encdec_forward(p, t, cfg, **kw),
+            init_cache=lambda b, n, **kw: encdec.init_cache(cfg, b, n, **kw),
+            decode_step=lambda p, c, t, **kw: encdec.decode_step(
+                p, c, t, cfg, **kw),
+        )
+    if fam == "vlm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: vlm.init_params(key, cfg),
+            loss=lambda p, b, **kw: vlm.loss_fn(p, b, cfg, **kw),
+            forward=lambda p, t, **kw: vlm.forward(p, t, cfg, **kw),
+            init_cache=lambda b, n, **kw: vlm.init_cache(cfg, b, n, **kw),
+            decode_step=lambda p, c, t, **kw: vlm.decode_step(
+                p, c, t, cfg, **kw),
+        )
+    # dense / moe
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        loss=lambda p, b, **kw: transformer.loss_fn(p, b, cfg, **kw),
+        forward=lambda p, t, **kw: transformer.forward(p, t, cfg, **kw),
+        init_cache=lambda b, n, **kw: transformer.init_cache(cfg, b, n, **kw),
+        decode_step=lambda p, c, t, **kw: transformer.decode_step(
+            p, c, t, cfg, **kw),
+    )
+
+
+def _lm_loss_wrapper(forward_fn, cfg: ArchConfig):
+    def loss(params, batch, *, window: int = 0, attn_chunk: int = 512,
+             remat: bool = True):
+        logits, aux = forward_fn(params, batch["tokens"], cfg, window=window,
+                                 attn_chunk=attn_chunk, remat=remat)
+        return transformer.lm_loss(logits, batch["labels"], aux, 0.0)
+
+    return loss
+
+
+def _encdec_forward(params, tokens, cfg, *, frames=None, window: int = 0,
+                    attn_chunk: int = 512, remat: bool = True, **kw):
+    enc = encdec.encode(params, frames, cfg)
+    logits = encdec.decode_train(params, tokens, enc, cfg,
+                                 attn_chunk=attn_chunk, remat=remat)
+    return logits, jnp.zeros((), jnp.float32)

@@ -1,0 +1,93 @@
+"""BraggNN [arXiv:2008.08198] — Bragg-peak localization from 11x11 patches.
+
+Faithful JAX port of the public reference (github.com/lzhengchun/BraggNN):
+  * conv 3x3 (valid) -> 64 channels on the 11x11 patch,
+  * a non-local self-attention block over the 9x9 feature map,
+  * conv stack 64 -> 32 -> 8 (3x3 valid),
+  * FC stack (fcsz = 16, 8, 4, 2) -> (y, x) sub-pixel peak center.
+All convs/FCs use leaky-relu as in the reference.  ~45K parameters — the
+paper's point is precisely that such edge models retrain in seconds on a
+DCAI system.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import BraggNNConfig
+from repro.models.common import dense_init, split_keys
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return (jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout),
+                                        jnp.float32) / fan_in ** 0.5)
+
+
+def _conv(x, w, b=None, padding="VALID"):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y = y + b
+    return y
+
+
+def init_params(key, cfg: BraggNNConfig) -> Dict:
+    c = cfg.base_channels
+    ks = split_keys(key, 12)
+    p: Dict = {
+        "conv1_w": _conv_init(ks[0], 3, 3, 1, c),
+        "conv1_b": jnp.zeros((c,)),
+        # non-local attention block (1x1 convs: theta, phi, g, out)
+        "nl_theta": _conv_init(ks[1], 1, 1, c, c // 2),
+        "nl_phi": _conv_init(ks[2], 1, 1, c, c // 2),
+        "nl_g": _conv_init(ks[3], 1, 1, c, c // 2),
+        "nl_out": _conv_init(ks[4], 1, 1, c // 2, c),
+        "conv2_w": _conv_init(ks[5], 3, 3, c, c // 2),
+        "conv2_b": jnp.zeros((c // 2,)),
+        "conv3_w": _conv_init(ks[6], 3, 3, c // 2, 8),
+        "conv3_b": jnp.zeros((8,)),
+    }
+    # feature map after three VALID 3x3 convs on 11x11: 9 -> 7 -> 5
+    flat = 5 * 5 * 8
+    sizes = (flat,) + cfg.fcsz
+    for i in range(len(cfg.fcsz)):
+        p[f"fc{i}_w"] = dense_init(ks[7 + i], (sizes[i], sizes[i + 1]))
+        p[f"fc{i}_b"] = jnp.zeros((sizes[i + 1],))
+    return p
+
+
+def forward(params: Dict, x: jax.Array, cfg: BraggNNConfig) -> jax.Array:
+    """x: (B, 11, 11, 1) normalized patches -> (B, 2) peak centers in [0,1]."""
+    lrelu = lambda v: jax.nn.leaky_relu(v, 0.01)
+    h = lrelu(_conv(x, params["conv1_w"], params["conv1_b"]))   # (B,9,9,64)
+
+    # non-local self-attention over spatial positions
+    B, H, W, C = h.shape
+    theta = _conv(h, params["nl_theta"]).reshape(B, H * W, -1)
+    phi = _conv(h, params["nl_phi"]).reshape(B, H * W, -1)
+    g = _conv(h, params["nl_g"]).reshape(B, H * W, -1)
+    attn = jax.nn.softmax(
+        jnp.einsum("bqc,bkc->bqk", theta, phi) / (theta.shape[-1] ** 0.5),
+        axis=-1)
+    nl = jnp.einsum("bqk,bkc->bqc", attn, g).reshape(B, H, W, -1)
+    h = h + _conv(nl, params["nl_out"])
+
+    h = lrelu(_conv(h, params["conv2_w"], params["conv2_b"]))   # (B,7,7,32)
+    h = lrelu(_conv(h, params["conv3_w"], params["conv3_b"]))   # (B,5,5,8)
+    h = h.reshape(B, -1)
+    n_fc = len(cfg.fcsz)
+    for i in range(n_fc):
+        h = h @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
+        if i < n_fc - 1:
+            h = lrelu(h)
+    return jax.nn.sigmoid(h)      # peak center normalized to the patch
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: BraggNNConfig) -> Tuple:
+    pred = forward(params, batch["patches"], cfg)
+    mse = jnp.mean((pred - batch["centers"]) ** 2)
+    return mse, {"mse": mse}

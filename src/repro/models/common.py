@@ -1,0 +1,173 @@
+"""Shared model utilities: dtype policy, initializers, norms, embeddings.
+
+All models are functional: ``init(key, cfg) -> params`` pytrees of plain dicts
+and pure ``apply`` functions.  Compute runs in ``Policy.compute_dtype``
+(bf16 by default) with fp32 master params and fp32 softmax/norm accumulators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_compute(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating)
+            else x,
+            tree,
+        )
+
+
+DEFAULT_POLICY = Policy()
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape: Sequence[int], *, in_axis: int = 0,
+               scale: float = 1.0, dtype=jnp.float32) -> jax.Array:
+    """Variance-scaling (fan-in) truncated-normal initializer."""
+    fan_in = shape[in_axis]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape: Sequence[int], *, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_params(d: int) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def layernorm_params(d: int, use_bias: bool = True) -> Dict[str, jax.Array]:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if use_bias:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_params(kind: str, d: int, use_bias: bool = True) -> Dict[str, jax.Array]:
+    if kind == "rmsnorm":
+        return rmsnorm_params(d)
+    return layernorm_params(d, use_bias)
+
+
+def apply_norm(kind: str, p: Dict[str, jax.Array], x: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    """Normalize in fp32, return in x.dtype."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+        if "bias" in p:
+            out = out + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# In-model sharding constraints (no-op without an active mesh)
+# ---------------------------------------------------------------------------
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Constrain ``x`` along logical dims: "batch" | "model" | None.
+
+    "batch" expands to the mesh's ("pod","data") axes when present.  Every
+    assignment is divisibility-checked; without an active mesh (CPU tests)
+    this is a no-op, so model code can call it unconditionally.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    spec = []
+    for size, d in zip(x.shape, dims):
+        choice = None
+        if d == "batch" and batch_axes:
+            for k in range(len(batch_axes), 0, -1):
+                axes = batch_axes[-k:]
+                n = 1
+                for a in axes:
+                    n *= sizes[a]
+                if size % n == 0:
+                    choice = axes if len(axes) > 1 else axes[0]
+                    break
+        elif d == "model" and "model" in names:
+            if size % sizes["model"] == 0:
+                choice = "model"
+        spec.append(choice)
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting
+# ---------------------------------------------------------------------------
+def count_params(tree: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder transformer backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a STUB (assignment carve-out): the
+model consumes precomputed frame embeddings ``frames (B, 1500, d_model)``.
+Everything downstream — sinusoidal encoder positions, bidirectional encoder,
+learned decoder positions (clamped at max_decoder_positions-1 for structural
+lowering of longer assigned shapes), causal self-attention + cross-attention
+decoder, tied LM head — is real.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.common import apply_norm, embed_init, norm_params, split_keys
+
+PyTree = Any
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    scaled = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+def _enc_block_params(key, cfg: ArchConfig) -> Dict:
+    k1, k2 = split_keys(key, 2)
+    return {
+        "attn_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "attn": layers.attention_params(k1, cfg),
+        "mlp_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "mlp": layers.mlp_params(k2, cfg),
+    }
+
+
+def _dec_block_params(key, cfg: ArchConfig) -> Dict:
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "self_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "self_attn": layers.attention_params(k1, cfg),
+        "cross_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "cross_attn": layers.attention_params(k2, cfg),
+        "mlp_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "mlp": layers.mlp_params(k3, cfg),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    keys = split_keys(key, 4 + cfg.n_encoder_layers + cfg.n_layers)
+    p = {
+        "embed": layers.embedding_params(keys[0], cfg.vocab_size, cfg.d_model),
+        "dec_pos": embed_init(keys[1], (cfg.max_decoder_positions,
+                                        cfg.d_model)),
+        # frontend-stub projection: frame embeds -> d_model (real, learned)
+        "frame_proj": embed_init(keys[2], (cfg.frontend.d_embed, cfg.d_model))
+        if cfg.frontend else None,
+        "enc_final_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "dec_final_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "enc_blocks": _stack([
+            _enc_block_params(keys[3 + i], cfg)
+            for i in range(cfg.n_encoder_layers)
+        ]),
+        "dec_blocks": _stack([
+            _dec_block_params(keys[3 + cfg.n_encoder_layers + i], cfg)
+            for i in range(cfg.n_layers)
+        ]),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+def encode(params: Dict, frames: jax.Array, cfg: ArchConfig,
+           compute_dtype=jnp.bfloat16, remat: bool = True) -> jax.Array:
+    """frames (B, T_enc, d_embed) -> (B, T_enc, d_model)."""
+    x = frames.astype(compute_dtype)
+    if params.get("frame_proj") is not None:
+        x = x @ params["frame_proj"].astype(compute_dtype)
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(compute_dtype)
+
+    def block_body(bp, x):
+        xn = apply_norm(cfg.norm_type, bp["attn_norm"], x)
+        # bidirectional: reuse full_attention without causal mask
+        q, k, v = layers.project_qkv(bp["attn"], xn,
+                                     jnp.arange(x.shape[1]), cfg)
+        a = layers.full_attention(q, k, v, causal=False)
+        x = x + layers.project_out(bp["attn"], a, cfg)
+        xm = apply_norm(cfg.norm_type, bp["mlp_norm"], x)
+        return x + layers.apply_mlp(bp["mlp"], xm, cfg)
+
+    if remat:
+        # §Perf-3 iter 2: without this the 1500^2 bidirectional attention
+        # probabilities of every encoder layer are saved for backward
+        block_body = jax.checkpoint(block_body)
+
+    def block(x, bp):
+        return block_body(bp, x), None
+
+    x, _ = jax.lax.scan(block, x, params["enc_blocks"])
+    return apply_norm(cfg.norm_type, params["enc_final_norm"], x)
+
+
+def _dec_positions(cfg: ArchConfig, positions: jax.Array) -> jax.Array:
+    return jnp.minimum(positions, cfg.max_decoder_positions - 1)
+
+
+def _cross_attention(bp: Dict, x, enc_kv, cfg):
+    xn = apply_norm(cfg.norm_type, bp["cross_norm"], x)
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xn, bp["cross_attn"]["wq"].astype(dt))
+    if cfg.use_bias:
+        q = q + bp["cross_attn"]["bq"].astype(dt)
+    a = layers.full_attention(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return x + layers.project_out(bp["cross_attn"], a, cfg)
+
+
+def encoder_kv(params: Dict, enc_out: jax.Array, cfg: ArchConfig) -> Dict:
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    def one(bp):
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross_attn"]["wv"].astype(dt))
+        if cfg.use_bias:
+            k = k + bp["cross_attn"]["bk"].astype(dt)
+            v = v + bp["cross_attn"]["bv"].astype(dt)
+        return {"k": k, "v": v}
+
+    return jax.vmap(one)(params["dec_blocks"])   # leaves: (L, B, T_enc, ...)
+
+
+def decode_train(params: Dict, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ArchConfig, *, attn_chunk: int = 512,
+                 remat: bool = True) -> jax.Array:
+    """Teacher-forced decoder.  tokens (B, S) -> logits (B, S, V)."""
+    dt = enc_out.dtype
+    x = layers.embed_tokens(params["embed"], tokens, dt)
+    pos = _dec_positions(cfg, jnp.arange(tokens.shape[1]))
+    x = x + params["dec_pos"].astype(dt)[pos]
+    cross = encoder_kv(params, enc_out, cfg)
+
+    def block(x, inp):
+        bp, ckv = inp
+
+        def inner(x_):
+            xn = apply_norm(cfg.norm_type, bp["self_norm"], x_)
+            q, k, v = layers.project_qkv(bp["self_attn"], xn,
+                                         jnp.arange(x_.shape[1]), cfg)
+            a = layers.causal_attention(q, k, v, chunk=attn_chunk)
+            h = x_ + layers.project_out(bp["self_attn"], a, cfg)
+            h = _cross_attention(bp, h, ckv, cfg)
+            hm = apply_norm(cfg.norm_type, bp["mlp_norm"], h)
+            return h + layers.apply_mlp(bp["mlp"], hm, cfg)
+
+        if remat:
+            inner = jax.checkpoint(inner)
+        return inner(x), None
+
+    x, _ = jax.lax.scan(block, x, (params["dec_blocks"], cross))
+    x = apply_norm(cfg.norm_type, params["dec_final_norm"], x)
+    return layers.lm_logits(None, params["embed"], x, True)
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig, *,
+            window: int = 0, attn_chunk: int = 512,
+            remat: bool = True) -> Tuple[jax.Array, Dict]:
+    del window
+    enc = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, batch["tokens"], enc, cfg,
+                          attn_chunk=attn_chunk, remat=remat)
+    from repro.models.transformer import lm_loss
+    return lm_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    del window
+    Hkv, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "self": {
+            "k": jnp.zeros((L, batch, cache_len, Hkv, D), dtype),
+            "v": jnp.zeros((L, batch, cache_len, Hkv, D), dtype),
+        },
+        # cross K/V computed once at request admission (prefill)
+        "cross": {
+            "k": jnp.zeros((L, batch, cfg.encoder_positions, Hkv, D), dtype),
+            "v": jnp.zeros((L, batch, cfg.encoder_positions, Hkv, D), dtype),
+        },
+        "slot_positions": -jnp.ones((batch, cache_len), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                cfg: ArchConfig, *, window: int = 0,
+                compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    del window
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+    x = x + params["dec_pos"].astype(compute_dtype)[
+        _dec_positions(cfg, pos)][:, None]
+
+    n_slots = cache["self"]["k"].shape[2]
+    slot = pos % n_slots
+    bidx = jnp.arange(B)
+    slot_positions = cache["slot_positions"].at[bidx, slot].set(pos)
+
+    def block(x, inp):
+        bp, kv, ckv = inp
+        xn = apply_norm(cfg.norm_type, bp["self_norm"], x)
+        q, k, v = layers.project_qkv(bp["self_attn"], xn, pos[:, None], cfg)
+        nk = kv["k"].at[bidx, slot].set(k[:, 0].astype(kv["k"].dtype))
+        nv = kv["v"].at[bidx, slot].set(v[:, 0].astype(kv["v"].dtype))
+        a = layers.decode_attention(q, nk, nv, slot_positions, pos)
+        x = x + layers.project_out(bp["self_attn"], a, cfg)
+        x = _cross_attention(bp, x, ckv, cfg)
+        xm = apply_norm(cfg.norm_type, bp["mlp_norm"], x)
+        x = x + layers.apply_mlp(bp["mlp"], xm, cfg)
+        return x, {"k": nk, "v": nv}
+
+    x, new_self = jax.lax.scan(
+        block, x, (params["dec_blocks"], cache["self"], cache["cross"]))
+    x = apply_norm(cfg.norm_type, params["dec_final_norm"], x)
+    logits = layers.lm_logits(None, params["embed"], x, True)
+    return logits, {
+        "self": new_self,
+        "cross": cache["cross"],
+        "slot_positions": slot_positions,
+        "pos": pos + 1,
+    }

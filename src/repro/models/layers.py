@@ -1,0 +1,337 @@
+"""Core transformer layers: GQA attention (chunked flash-style), MLPs, embed.
+
+Attention has three execution paths:
+  * ``full``   — plain masked einsum softmax; used for small sequences.
+  * ``chunked``— double-loop online-softmax (flash-style) in pure jnp; the
+                 XLA path for long sequences; the inner loop over KV chunks
+                 has a *dynamic* trip count so causal/windowed bands do no
+                 wasted work.  This mirrors the Pallas kernel's schedule
+                 (kernels/flash_attention.py) and is its oracle cousin.
+  * ``decode`` — one query token against a (possibly rolling) KV cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import apply_norm, apply_rope, dense_init, split_keys
+
+NEG_INF = -1e30
+
+
+def _model_axis_size() -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+
+
+def maybe_expand_kv(q: jax.Array, k: jax.Array, v: jax.Array):
+    """§Perf-4: when Q-heads divide the model axis but KV-heads don't, the
+    (Hkv, G) GQA grouping forces XLA to reshard scores per chunk (observed
+    as 10.9 GB all-reduces per q-chunk on starcoder2: 36H/4kv on a 16-way
+    axis).  Repeating KV to H heads keeps every attention einsum local —
+    a memory-for-collectives trade that wins by orders of magnitude."""
+    H, Hkv = q.shape[2], k.shape[2]
+    m = _model_axis_size()
+    if m > 1 and H % m == 0 and Hkv % m != 0 and H != Hkv:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Attention parameters
+# ---------------------------------------------------------------------------
+def attention_params(key, cfg: ArchConfig) -> Dict:
+    d, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    kq, kk, kv, ko = split_keys(key, 4)
+    p = {
+        "wq": dense_init(kq, (d, H, D)),
+        "wk": dense_init(kk, (d, Hkv, D)),
+        "wv": dense_init(kv, (d, Hkv, D)),
+        "wo": dense_init(ko, (H, D, d), in_axis=0, scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+    # scale wo fan-in correctly: treat (H*D) as fan-in
+    p["wo"] = p["wo"] * (D ** 0.5) / ((H * D) ** 0.5)
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H, D), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv, D), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv, D), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.ones((D,), jnp.float32)
+        p["k_norm_scale"] = jnp.ones((D,), jnp.float32)
+    return p
+
+
+def _headwise_rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def project_qkv(p: Dict, x: jax.Array, positions: jax.Array, cfg: ArchConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> q (B,S,H,D), k/v (B,S,Hkv,D), RoPE'd."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = _headwise_rmsnorm(q, p["q_norm_scale"])
+        k = _headwise_rmsnorm(k, p["k_norm_scale"])
+    if cfg.max_decoder_positions:      # learned positions handled elsewhere
+        return q, k, v
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def project_out(p: Dict, attn_out: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """attn_out: (B, S, H, D) -> (B, S, d_model)."""
+    y = jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"].astype(attn_out.dtype))
+    # barrier keeps the row-parallel psum this contraction induces in bf16
+    # (XLA otherwise hoists the next norm's f32 convert above it: 2x bytes)
+    y = jax.lax.optimization_barrier(y)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Full (small-seq) attention
+# ---------------------------------------------------------------------------
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: int = 0,
+                   q_offset: int = 0) -> jax.Array:
+    """q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D).  Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg, k).astype(jnp.float32)
+    scores = scores / (D ** 0.5)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (XLA path for long sequences)
+# ---------------------------------------------------------------------------
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      window: int = 0, chunk: int = 512) -> jax.Array:
+    """Causal (optionally sliding-window) chunked attention, differentiable.
+
+    Two schedules (both reverse-mode differentiable, both rematerialized per
+    chunk so backward memory stays O(S*chunk) instead of O(S^2)):
+      * sliding window — outer scan over q chunks; each chunk attends to a
+        statically-sized band of keys fetched with ``dynamic_slice``
+        (work is O(S * window), the band, not the full quadratic);
+      * causal full — outer scan over q chunks, inner scan over kv chunks
+        with ``lax.cond`` skipping chunks above the diagonal.
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    nq = S // C
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, nq, C, Hkv, G, D)
+
+    if window and window + C < S:
+        Lb = window + C                      # static band length
+
+        def band_attn(q_i, k_band, v_band, qpos, kpos):
+            s = jnp.einsum("bqkgd,bskd->bqkgs", q_i * scale,
+                           k_band).astype(jnp.float32)
+            mask = (kpos[None, :] <= qpos[:, None]) & \
+                   (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            w = jax.nn.softmax(s, axis=-1).astype(q_i.dtype)
+            return jnp.einsum("bqkgs,bskd->bqkgd", w, v_band)
+
+        band_attn = jax.checkpoint(band_attn)
+
+        def q_chunk_step(_, i):
+            q_i = qg[:, i]
+            qpos = i * C + jnp.arange(C)
+            start = jnp.clip(i * C + C - Lb, 0, S - Lb)
+            k_band = jax.lax.dynamic_slice_in_dim(k, start, Lb, axis=1)
+            v_band = jax.lax.dynamic_slice_in_dim(v, start, Lb, axis=1)
+            kpos = start + jnp.arange(Lb)
+            return None, band_attn(q_i, k_band, v_band, qpos, kpos)
+
+        _, chunks = jax.lax.scan(q_chunk_step, None, jnp.arange(nq))
+        out = jnp.moveaxis(chunks, 0, 1).reshape(B, S, Hkv, G, D)
+        return out.reshape(B, S, H, D)
+
+    # ---- causal (or window wider than seq) online-softmax schedule -------
+    def kv_compute(carry, q_i, qpos, j):
+        m, l, acc = carry
+        k_j = jax.lax.dynamic_slice_in_dim(k, j * C, C, axis=1)
+        v_j = jax.lax.dynamic_slice_in_dim(v, j * C, C, axis=1)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", q_i * scale,
+                       k_j).astype(jnp.float32)
+        kpos = j * C + jnp.arange(C)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p_ij = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p_ij.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgs,bskd->bqkgd", p_ij.astype(q.dtype), v_j
+        ).astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    kv_compute = jax.checkpoint(kv_compute, static_argnums=())
+
+    def q_chunk_step(_, i):
+        q_i = qg[:, i]
+        qpos = i * C + jnp.arange(C)
+        m0 = jnp.full((B, C, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, C, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, C, Hkv, G, D), jnp.float32)
+
+        def kv_step(carry, j):
+            new = jax.lax.cond(
+                j <= i,
+                lambda c: kv_compute(c, q_i, qpos, j),
+                lambda c: c,
+                carry)
+            return new, None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nq))
+        out_i = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out_i.astype(q.dtype)
+
+    _, chunks = jax.lax.scan(q_chunk_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, S, Hkv, G, D)
+    return out.reshape(B, S, H, D)
+
+
+def causal_attention(q, k, v, *, window: int = 0,
+                     chunk_threshold: int = 2048, chunk: int = 512):
+    """Dispatch between full and chunked paths on sequence length."""
+    k, v = maybe_expand_kv(q, k, v)
+    if q.shape[1] <= chunk_threshold:
+        return full_attention(q, k, v, causal=True, window=window)
+    return chunked_attention(q, k, v, window=window, chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention: one new token vs a (rolling) KV cache
+# ---------------------------------------------------------------------------
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_positions: jax.Array, pos: jax.Array, *,
+                     window: int = 0) -> jax.Array:
+    """q: (B,1,H,D); caches: (B,S_slots,Hkv,D); slot_positions: (B,S_slots)
+    giving the absolute token position held in each slot (-1 = empty);
+    pos: (B,) current decode position."""
+    B, _, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s / (D ** 0.5)
+    valid = (slot_positions >= 0) & (slot_positions <= pos[:, None])
+    if window:
+        valid &= (pos[:, None] - slot_positions) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_params(key, cfg: ArchConfig, d_ff: Optional[int] = None,
+               d_in: Optional[int] = None) -> Dict:
+    d = d_in or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = split_keys(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p = {
+            "w_gate": dense_init(k1, (d, ff)),
+            "w_up": dense_init(k2, (d, ff)),
+            "w_down": dense_init(k3, (ff, d), scale=1.0),
+        }
+    else:  # non-gated gelu
+        p = {
+            "w_up": dense_init(k1, (d, ff)),
+            "w_down": dense_init(k2, (ff, d), scale=1.0),
+        }
+    if cfg.use_bias:
+        p["b_up"] = jnp.zeros((ff,), jnp.float32)
+        p["b_down"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_mlp(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = "silu" if cfg.mlp_type == "swiglu" else "gelu"
+        g = common.activation(act, x @ p["w_gate"].astype(dt))
+        u = x @ p["w_up"].astype(dt)
+        if cfg.use_bias:
+            u = u + p["b_up"].astype(dt)
+        h = g * u
+    else:
+        h = x @ p["w_up"].astype(dt)
+        if cfg.use_bias:
+            h = h + p["b_up"].astype(dt)
+        h = common.activation("gelu", h)
+    y = h @ p["w_down"].astype(dt)
+    if cfg.use_bias:
+        y = y + p["b_down"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def embedding_params(key, vocab: int, d: int) -> Dict:
+    return {"embedding": common.embed_init(key, (vocab, d))}
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    x = p["embedding"].astype(dtype)[tokens]
+    # §Perf-4: the gather from the (vocab-model, d-data)-sharded table
+    # otherwise REPLICATES its output over the data axis, and the whole
+    # residual stream downstream inherits full-batch replication
+    return common.constrain(x, "batch", None, None)
+
+
+def lm_head_params(key, d: int, vocab: int) -> Dict:
+    return {"w": dense_init(key, (d, vocab))}
+
+
+def lm_logits(head_p: Optional[Dict], embed_p: Dict, x: jax.Array,
+              tie: bool) -> jax.Array:
+    if tie:
+        w = embed_p["embedding"].astype(x.dtype).T
+    else:
+        w = head_p["w"].astype(x.dtype)
+    return (x @ w).astype(jnp.float32)

@@ -1,0 +1,286 @@
+"""Mixture-of-Experts layer — GShard-style capacity dispatch, pjit-friendly.
+
+Design (see DESIGN.md §5):
+  * tokens are grouped by batch row (G = B groups of S tokens); each group
+    computes its own expert capacity ``C = ceil(S * k / E * capacity_factor)``
+    so the dispatch/combine einsums have static shapes;
+  * everything is expressed as einsums over one-hot dispatch tensors, so
+    expert parallelism falls out of pjit sharding constraints
+    (experts -> "model" axis, groups -> "data" axis) and the token
+    all-to-all is induced by XLA, not hand-written;
+  * DeepSeek-style shared experts are a dense MLP added to every token;
+  * the router computes a GShard auxiliary load-balance loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import layers
+from repro.models.common import constrain, dense_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+def moe_params(key, cfg: ArchConfig) -> Dict:
+    """Parameters for one MoE layer (router + routed experts + shared)."""
+    mo = cfg.moe
+    assert mo is not None
+    d, E, h = cfg.d_model, mo.n_experts, mo.d_expert
+    kr, kg, ku, kd, ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(kr, (d, E), scale=1.0),
+        # stacked expert weights: leading axis = expert (sharded on "model")
+        "experts_w_gate": dense_init(kg, (E, d, h), in_axis=1),
+        "experts_w_up": dense_init(ku, (E, d, h), in_axis=1),
+        "experts_w_down": dense_init(kd, (E, h, d), in_axis=1, scale=1.0),
+    }
+    if mo.n_shared_experts:
+        shared_ff = mo.d_expert * mo.n_shared_experts
+        p["shared"] = layers.mlp_params(ks, cfg, d_ff=shared_ff)
+    return p
+
+
+def expert_capacity(n_tokens_per_group: int, mo: MoEConfig) -> int:
+    c = math.ceil(n_tokens_per_group * mo.experts_per_token
+                  / mo.n_experts * mo.capacity_factor)
+    return max(1, c)
+
+
+# ---------------------------------------------------------------------------
+def route_topk(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """logits (..., E) -> (gates (..., k), indices (..., k)).
+
+    Gates are softmax probabilities renormalized over the selected k.
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(axis=-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def load_balance_loss(probs: jax.Array, dispatch_counts: jax.Array,
+                      n_experts: int) -> jax.Array:
+    """GShard aux loss: E * mean_e(frac_tokens_e * mean_prob_e)."""
+    # probs: (G, S, E) softmax router probs; dispatch_counts: (G, S, E) 0/1
+    me = probs.mean(axis=(0, 1))                       # (E,)
+    ce = dispatch_counts.astype(jnp.float32).mean(axis=(0, 1))  # (E,)
+    return n_experts * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+def apply_moe(p: Dict, x: jax.Array, cfg: ArchConfig,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    B is the group axis (G = B).  All shapes static; capacity-dropped tokens
+    fall back to the shared experts / residual only.  Dispatch strategy is
+    ``cfg.moe.impl``: "gshard" (einsum baseline) or "gather" (§Perf-1).
+    """
+    mo = cfg.moe
+    assert mo is not None
+    if mo.impl == "gather":
+        return apply_moe_gather(p, x, cfg)
+    B, S, d = x.shape
+    E, k = mo.n_experts, mo.experts_per_token
+    C = expert_capacity(S, mo)
+    dt = x.dtype
+
+    # ---- router (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    logits = constrain(logits, "batch", None, None)
+    probs = jax.nn.softmax(logits, axis=-1)            # (G,S,E)
+    gates, idx = route_topk(logits, k)                 # (G,S,k)
+
+    # one-hot expert choice per slot: (G,S,k,E)
+    choice = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+
+    # position-in-expert for capacity: cumulative count of earlier claims on
+    # the same expert, ordered (token, slot).  flatten slots into the token
+    # order so slot 0 of token t precedes slot 0 of token t+1.
+    flat = choice.reshape(B, S * k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat          # (G, S*k, E)
+    pos_in_e = pos_in_e.reshape(B, S, k, E)
+    within_cap = (pos_in_e < C)
+    keep = choice * within_cap                          # (G,S,k,E) 0/1
+
+    aux = load_balance_loss(probs, keep.sum(axis=2), E)
+
+    # capacity-slot one-hot (G,S,k,C); dispatch/combine materialized directly
+    # in compute dtype — these are the big (G,S,E,C) tensors (sharded over
+    # groups -> data and experts -> model).
+    slot = jax.nn.one_hot(
+        jnp.sum(pos_in_e * choice, axis=-1).astype(jnp.int32), C,
+        dtype=dt)                                       # (G,S,k,C)
+    keep_c = keep.astype(dt)
+    dispatch = jnp.einsum("gske,gskc->gsec", keep_c, slot)          # (G,S,E,C)
+    combine = jnp.einsum("gske,gsk,gskc->gsec",
+                         keep_c, gates.astype(dt), slot)
+
+    # ---- dispatch -> expert compute -> combine -----------------------------
+    # explicit constraints keep tokens batch-sharded and experts
+    # model-sharded through the layer (propagation alone replicates here)
+    dispatch = constrain(dispatch, "batch", None, "model", None)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, x)                  # (E,G,C,d)
+    xe = constrain(xe, "model", "batch", None, None)
+    act = "silu" if cfg.mlp_type == "swiglu" else "gelu"
+    g = jnp.einsum("egcd,edh->egch", xe, p["experts_w_gate"].astype(dt))
+    u = jnp.einsum("egcd,edh->egch", xe, p["experts_w_up"].astype(dt))
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(g, approximate=True) * u
+    ye = jnp.einsum("egch,ehd->egcd", h, p["experts_w_down"].astype(dt))
+    ye = constrain(ye, "model", "batch", None, None)
+    y = jnp.einsum("gsec,egcd->gsd", combine, ye)                  # (G,S,d)
+    y = constrain(y, "batch", None, None)
+
+    # ---- shared experts -----------------------------------------------------
+    if mo.n_shared_experts:
+        y = y + layers.apply_mlp(p["shared"], x, cfg)
+
+    return y, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# §Perf-1: gather/scatter dispatch — zero-FLOP routing (beyond paper).
+#
+# The GShard one-hot dispatch/combine einsums cost 4*E*C*d MACs per token —
+# for qwen3-moe at 32k prefill that is 84% of ALL program FLOPs (see
+# EXPERIMENTS.md §Roofline).  This path builds integer routing tables and
+# uses gather (dispatch) + gather-and-weight (combine) instead; autodiff
+# turns the gathers into scatter-adds, still zero MACs.
+# ---------------------------------------------------------------------------
+def apply_moe_gather(p: Dict, x: jax.Array, cfg: ArchConfig,
+                     ) -> Tuple[jax.Array, jax.Array]:
+    mo = cfg.moe
+    assert mo is not None
+    B, S, d = x.shape
+    E, k = mo.n_experts, mo.experts_per_token
+    C = expert_capacity(S, mo)
+    dt = x.dtype
+
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    logits = constrain(logits, "batch", None, None)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = route_topk(logits, k)                  # (G,S,k)
+
+    choice = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G,S,k,E)
+    flat = choice.reshape(B, S * k, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, k, E)
+    within_cap = pos_in_e < C
+    keep = choice * within_cap                          # (G,S,k,E) 0/1
+    aux = load_balance_loss(probs, keep.sum(axis=2), E)
+
+    keep_slot = jnp.sum(keep, axis=-1)                  # (G,S,k) 0/1
+    slot_c = jnp.sum(pos_in_e * choice, axis=-1).astype(jnp.int32)  # (G,S,k)
+
+    # routing table: (G, E, C) -> source token index + validity.
+    # kept batch-sharded / expert-REPLICATED: the table is tiny (int32) and
+    # a data-dependent scatter across a model-sharded E would force SPMD to
+    # replicate the whole router region over "data" (§Perf-1 iter 6).
+    s_idx = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, k))
+    g_idx = jnp.broadcast_to(jnp.arange(B)[:, None, None], (B, S, k))
+    buf = jnp.zeros((B, E, C), jnp.int32)
+    buf = constrain(buf, "batch", None, None)
+    # (token+1) so 0 marks an empty capacity slot; kept (e,c) pairs are
+    # unique per group, so scatter-add has no collisions
+    buf = buf.at[g_idx, idx, slot_c].add(
+        ((s_idx + 1) * keep_slot).astype(jnp.int32))
+    buf = constrain(buf, "batch", None, None)
+    valid = buf > 0                                     # (G,E,C)
+    tok = jnp.maximum(buf - 1, 0)
+
+    # dispatch: pure gather along S
+    tok = constrain(tok, "batch", None, None)
+    xe = jax.vmap(lambda xg, tg: xg[tg])(x, tok)         # (G,E,C,d)
+    xe = xe * valid[..., None].astype(dt)
+    xe = jnp.swapaxes(xe, 0, 1)                          # (E,G,C,d)
+    xe = constrain(xe, "model", "batch", None, None)
+
+    act = "silu" if cfg.mlp_type == "swiglu" else "gelu"
+    g = jnp.einsum("egcd,edh->egch", xe, p["experts_w_gate"].astype(dt))
+    u = jnp.einsum("egcd,edh->egch", xe, p["experts_w_up"].astype(dt))
+    h = (jax.nn.silu(g) if act == "silu"
+         else jax.nn.gelu(g, approximate=True)) * u
+    ye = jnp.einsum("egch,ehd->egcd", h, p["experts_w_down"].astype(dt))
+    ye = constrain(ye, "model", "batch", None, None)
+
+    # combine (§Perf-1 iter 5): explicit expert-parallel combine via
+    # shard_map — each model shard gathers from its LOCAL expert block and
+    # psums the (G,S,d) result, so the cross-shard reduction happens at
+    # 1x d (bf16), not at the (G,S,k,d) fp32 partials XLA's gather
+    # partitioning produces (16x less all-reduce traffic).  Falls back to
+    # the plain gather combine without a mesh (CPU tests) or when shapes
+    # don't divide the mesh axes.
+    w = (gates * keep_slot).astype(dt)                   # (G,S,k)
+    y = _expert_parallel_combine(ye, idx, slot_c, w)
+    if y is None:
+        ye_g = jnp.swapaxes(ye, 0, 1)                    # (G,E,C,d)
+        yk = jax.vmap(lambda yg, eg, cg: yg[eg, cg])(ye_g, idx, slot_c)
+        y = jnp.einsum("gsk,gskd->gsd", w, yk)
+    y = constrain(y, "batch", None, None)
+
+    if mo.n_shared_experts:
+        y = y + layers.apply_mlp(p["shared"], x, cfg)
+    return y, aux.astype(jnp.float32)
+
+
+def _expert_parallel_combine(ye, idx, slot_c, w):
+    """shard_map combine: local expert gather + psum over "model".
+
+    ye (E,G,C,d) sharded (model, batch); idx/slot_c/w (G,S,k) batch-sharded.
+    Returns y (G,S,d) or None when the shard_map path doesn't apply.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return None
+    from jax.sharding import PartitionSpec as P
+
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    E, G, C, d = ye.shape
+    S, k = idx.shape[1], idx.shape[2]
+    # pick the largest batch-axis suffix that divides G
+    bspec = None
+    for kk in range(len(batch_axes), 0, -1):
+        axes = batch_axes[-kk:]
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if G % n == 0 and G >= n:
+            bspec = axes if len(axes) > 1 else axes[0]
+            break
+    if E % sizes["model"] != 0:
+        return None
+
+    def body(ye_blk, idx_blk, slot_blk, w_blk):
+        # ye_blk (E_loc, G_loc, C, d); others (G_loc, S, k)
+        m_idx = jax.lax.axis_index("model")
+        e_loc = ye_blk.shape[0]
+        local = idx_blk - m_idx * e_loc
+        valid = (local >= 0) & (local < e_loc)
+        local_c = jnp.clip(local, 0, e_loc - 1)
+        wv = w_blk * valid.astype(w_blk.dtype)
+
+        def per_g(ye_g, l_g, c_g, w_g):
+            yk = ye_g[l_g, c_g]                   # (S, k, d)
+            return jnp.einsum("sk,skd->sd", w_g, yk)
+
+        ypart = jax.vmap(per_g)(jnp.swapaxes(ye_blk, 0, 1),
+                                local_c, slot_blk, wv)
+        # barrier keeps the psum on the wire in bf16 (XLA otherwise hoists
+        # the downstream norm's f32 convert above the all-reduce: 2x bytes)
+        return jax.lax.optimization_barrier(jax.lax.psum(ypart, "model"))
+
+    gspec = P(bspec, None, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("model", bspec, None, None), gspec, gspec, gspec),
+        out_specs=gspec, check_vma=False,
+    )(ye, idx, slot_c, w)

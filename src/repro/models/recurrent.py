@@ -1,0 +1,266 @@
+"""Recurrent-family LMs: zamba2 (Mamba2 + shared attention) and xLSTM.
+
+Both are assembled as *segment scans*:
+  * zamba2: 9 segments x (6 mamba2 layers + one SHARED-weight attention+MLP
+    block applied at segment end).  The shared block's weights are tied across
+    all applications (zamba2's signature trick) — they live outside the scan.
+  * xlstm:  6 segments x (7 mLSTM blocks + 1 sLSTM block)  (xLSTM[7:1]).
+
+Decode carries per-layer recurrent state (SSM state / mLSTM matrix memory /
+sLSTM scalar state) plus one KV cache per shared-attention application.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, ssm as ssm_lib, xlstm as xlstm_lib
+from repro.models.common import apply_norm, norm_params, split_keys
+
+PyTree = Any
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ===========================================================================
+# zamba2-style hybrid
+# ===========================================================================
+def zamba_segments(cfg: ArchConfig) -> Tuple[int, int]:
+    per = cfg.hybrid_attn_every
+    assert per and cfg.n_layers % per == 0
+    return cfg.n_layers // per, per
+
+
+def init_zamba_params(key, cfg: ArchConfig) -> Dict:
+    n_seg, per = zamba_segments(cfg)
+    keys = split_keys(key, 4 + n_seg * per)
+    p = {
+        "embed": layers.embedding_params(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "head": layers.lm_head_params(keys[1], cfg.d_model, cfg.vocab_size),
+        # ONE shared attention+MLP block (weights tied across applications)
+        "shared": {
+            "attn_norm": norm_params(cfg.norm_type, cfg.d_model),
+            "attn": layers.attention_params(keys[2], cfg),
+            "mlp_norm": norm_params(cfg.norm_type, cfg.d_model),
+            "mlp": layers.mlp_params(keys[3], cfg),
+        },
+    }
+    seg_params = []
+    ki = 4
+    for _s in range(n_seg):
+        lp = []
+        for _l in range(per):
+            lp.append({
+                "norm": norm_params(cfg.norm_type, cfg.d_model),
+                "mamba": ssm_lib.mamba2_params(keys[ki], cfg),
+            })
+            ki += 1
+        seg_params.append(_stack(lp))
+    p["segments"] = _stack(seg_params)     # leaves: (n_seg, per, ...)
+    return p
+
+
+def _shared_attn_apply(sp: Dict, x, positions, cfg, *, window, attn_chunk=512):
+    xn = apply_norm(cfg.norm_type, sp["attn_norm"], x)
+    q, k, v = layers.project_qkv(sp["attn"], xn, positions, cfg)
+    a = layers.causal_attention(q, k, v, window=window, chunk=attn_chunk)
+    x = x + layers.project_out(sp["attn"], a, cfg)
+    xm = apply_norm(cfg.norm_type, sp["mlp_norm"], x)
+    return x + layers.apply_mlp(sp["mlp"], xm, cfg)
+
+
+def zamba_forward(params: Dict, tokens: jax.Array, cfg: ArchConfig, *,
+                  window: int = 0, compute_dtype=jnp.bfloat16,
+                  attn_chunk: int = 512, remat: bool = True,
+                  extra_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def mamba_step(x, lp):
+        xn = apply_norm(cfg.norm_type, lp["norm"], x)
+        y, _ = ssm_lib.apply_mamba2(lp["mamba"], xn, cfg)
+        return x + y, None
+
+    def seg_step(x, seg):
+        def inner(x_):
+            h, _ = jax.lax.scan(mamba_step, x_, seg)
+            return _shared_attn_apply(params["shared"], h, positions, cfg,
+                                      window=window, attn_chunk=attn_chunk)
+        if remat:
+            inner = jax.checkpoint(inner)
+        return inner(x), None
+
+    x, _ = jax.lax.scan(seg_step, x, params["segments"])
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params["head"], params["embed"], x, False)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_zamba_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+                     window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    n_seg, per = zamba_segments(cfg)
+    n_slots = min(window, cache_len) if window else cache_len
+    Hkv, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    st = ssm_lib.init_mamba2_state(cfg, batch)
+    return {
+        "mamba": jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (n_seg, per) + x.shape).astype(x.dtype).copy(), st),
+        "shared_kv": {
+            "k": jnp.zeros((n_seg, batch, n_slots, Hkv, D), dtype),
+            "v": jnp.zeros((n_seg, batch, n_slots, Hkv, D), dtype),
+        },
+        "slot_positions": -jnp.ones((batch, n_slots), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def zamba_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                      cfg: ArchConfig, *, window: int = 0,
+                      compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+
+    n_slots = cache["shared_kv"]["k"].shape[2]
+    slot = pos % n_slots
+    bidx = jnp.arange(B)
+    slot_positions = cache["slot_positions"].at[bidx, slot].set(pos)
+
+    def mamba_step(x, inp):
+        lp, st = inp
+        xn = apply_norm(cfg.norm_type, lp["norm"], x)
+        y, new_st = ssm_lib.apply_mamba2(lp["mamba"], xn, cfg, state=st)
+        return x + y, new_st
+
+    def seg_step(x, inp):
+        seg, seg_state, kv = inp
+        x, new_states = jax.lax.scan(mamba_step, x, (seg, seg_state))
+        # shared attention with this segment-application's own KV cache
+        sp = params["shared"]
+        xn = apply_norm(cfg.norm_type, sp["attn_norm"], x)
+        q, k, v = layers.project_qkv(sp["attn"], xn, pos[:, None], cfg)
+        new_k = kv["k"].at[bidx, slot].set(k[:, 0].astype(kv["k"].dtype))
+        new_v = kv["v"].at[bidx, slot].set(v[:, 0].astype(kv["v"].dtype))
+        a = layers.decode_attention(q, new_k, new_v, slot_positions, pos,
+                                    window=window)
+        x = x + layers.project_out(sp["attn"], a, cfg)
+        xm = apply_norm(cfg.norm_type, sp["mlp_norm"], x)
+        x = x + layers.apply_mlp(sp["mlp"], xm, cfg)
+        return x, (new_states, {"k": new_k, "v": new_v})
+
+    x, (new_mamba, new_kv) = jax.lax.scan(
+        seg_step, x,
+        (params["segments"], cache["mamba"], cache["shared_kv"]))
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params["head"], params["embed"], x, False)
+    return logits, {
+        "mamba": new_mamba,
+        "shared_kv": new_kv,
+        "slot_positions": slot_positions,
+        "pos": pos + 1,
+    }
+
+
+# ===========================================================================
+# xLSTM
+# ===========================================================================
+def xlstm_segments(cfg: ArchConfig) -> Tuple[int, int]:
+    per = cfg.xlstm.slstm_every
+    assert per and cfg.n_layers % per == 0
+    return cfg.n_layers // per, per - 1   # (n_segments, mlstm per segment)
+
+
+def init_xlstm_params(key, cfg: ArchConfig) -> Dict:
+    n_seg, n_ml = xlstm_segments(cfg)
+    keys = split_keys(key, 2 + cfg.n_layers)
+    p = {
+        "embed": layers.embedding_params(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": norm_params(cfg.norm_type, cfg.d_model),
+        "head": layers.lm_head_params(keys[1], cfg.d_model, cfg.vocab_size),
+    }
+    ki = 2
+    mls, sls = [], []
+    for _s in range(n_seg):
+        seg = []
+        for _l in range(n_ml):
+            seg.append(xlstm_lib.mlstm_params(keys[ki], cfg)); ki += 1
+        mls.append(_stack(seg))
+        sls.append(xlstm_lib.slstm_params(keys[ki], cfg)); ki += 1
+    p["mlstm"] = _stack(mls)     # (n_seg, n_ml, ...)
+    p["slstm"] = _stack(sls)     # (n_seg, ...)
+    return p
+
+
+def xlstm_forward(params: Dict, tokens: jax.Array, cfg: ArchConfig, *,
+                  window: int = 0, compute_dtype=jnp.bfloat16,
+                  attn_chunk: int = 512, remat: bool = True,
+                  extra_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    del window, attn_chunk
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+
+    def ml_step(x, lp):
+        y, _ = xlstm_lib.apply_mlstm_block(lp, x, cfg)
+        return y, None
+
+    def seg_step(x, inp):
+        mseg, sp = inp
+        def inner(x_):
+            h, _ = jax.lax.scan(ml_step, x_, mseg)
+            h, _ = xlstm_lib.apply_slstm_block(sp, h, cfg)
+            return h
+        if remat:
+            inner = jax.checkpoint(inner)
+        return inner(x), None
+
+    x, _ = jax.lax.scan(seg_step, x, (params["mlstm"], params["slstm"]))
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params["head"], params["embed"], x, False)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_xlstm_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+                     window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    del cache_len, window, dtype
+    n_seg, n_ml = xlstm_segments(cfg)
+    ml = xlstm_lib.init_mlstm_state(cfg, batch)
+    sl = xlstm_lib.init_slstm_state(cfg, batch)
+    return {
+        "mlstm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_seg, n_ml) + x.shape).copy(), ml),
+        "slstm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_seg,) + x.shape).copy(), sl),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def xlstm_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                      cfg: ArchConfig, *, window: int = 0,
+                      compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    del window
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+
+    def ml_step(x, inp):
+        lp, st = inp
+        y, new_st = xlstm_lib.apply_mlstm_block(lp, x, cfg, state=st)
+        return y, new_st
+
+    def seg_step(x, inp):
+        mseg, sp, mstate, sstate = inp
+        x, new_m = jax.lax.scan(ml_step, x, (mseg, mstate))
+        x, new_s = xlstm_lib.apply_slstm_block(sp, x, cfg, state=sstate)
+        return x, (new_m, new_s)
+
+    x, (new_ml, new_sl) = jax.lax.scan(
+        seg_step, x,
+        (params["mlstm"], params["slstm"], cache["mlstm"], cache["slstm"]))
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params["head"], params["embed"], x, False)
+    return logits, {"mlstm": new_ml, "slstm": new_sl, "pos": cache["pos"] + 1}

@@ -1,0 +1,249 @@
+"""Mamba2 (SSD) block — chunked state-space dual form, TPU-friendly.
+
+The sequence dimension is processed in chunks: a quadratic intra-chunk term
+(MXU-friendly matmuls) plus a linear inter-chunk recurrence carried by
+``lax.scan`` over chunk index.  This mirrors the Pallas kernel in
+``kernels/ssm_scan.py`` (same schedule; the kernel fuses the intra-chunk math
+into VMEM tiles).
+
+Shapes follow the Mamba2 paper: heads H = d_inner / head_dim (P = head_dim),
+state size N = d_state, B/C shared across heads in ``n_groups`` groups.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.common import dense_init, split_keys
+
+
+def _cfg(cfg: ArchConfig) -> SSMConfig:
+    assert cfg.ssm is not None
+    return cfg.ssm
+
+
+def dims(cfg: ArchConfig) -> Dict[str, int]:
+    s = _cfg(cfg)
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return dict(d_inner=d_inner, H=H, P=s.head_dim, N=s.d_state,
+                G=s.n_groups, K=s.d_conv)
+
+
+# ---------------------------------------------------------------------------
+def mamba2_params(key, cfg: ArchConfig) -> Dict:
+    dm = dims(cfg)
+    d, d_in, H, N, G, K = (cfg.d_model, dm["d_inner"], dm["H"], dm["N"],
+                           dm["G"], dm["K"])
+    conv_dim = d_in + 2 * G * N
+    k1, k2, k3, k4 = split_keys(key, 4)
+    # dt bias: inverse softplus of dt ~ U[1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(k3, (H,), jnp.float32)
+                 * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    a = jax.random.uniform(k4, (H,), jnp.float32, 1.0, 16.0)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": dense_init(k1, (d, 2 * d_in + 2 * G * N + H)),
+        "conv_w": (jax.random.normal(k2, (K, conv_dim), jnp.float32)
+                   * (1.0 / (K * conv_dim) ** 0.5)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(split_keys(key, 5)[4], (d_in, d), scale=1.0),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ArchConfig):
+    dm = dims(cfg)
+    d_in, G, N, H = dm["d_inner"], dm["G"], dm["N"], dm["H"]
+    z, x, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N],
+        axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,Cd); w: (K,Cd). state: (B,K-1,Cd)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    return out + b.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (pure jnp; oracle for kernels/ssm_scan.py)
+# ---------------------------------------------------------------------------
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """State-space dual chunked scan.
+
+    x:  (B, L, H, P)   inputs per head
+    dt: (B, L, H)      positive step sizes (already softplus'd)
+    A:  (H,)           negative decay rates
+    Bm: (B, L, G, N)   input maps; Cm: (B, L, G, N) output maps
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    B, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    rep = H // G
+
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bm, rep, axis=2)      # (B,L,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    xr = x.reshape(B, nc, Q, H, P)
+    dtr = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    Br = Bh.reshape(B, nc, Q, H, N)
+    Cr = Ch.reshape(B, nc, Q, H, N)
+
+    dA = dtr * A[None, None, None, :]               # (B,nc,Q,H) negative
+    cum = jnp.cumsum(dA, axis=2)                    # inclusive cumsum in chunk
+
+    # intra-chunk decay matrix: decay[i,j] = exp(cum_i - cum_j) for j<=i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+
+    xdt = xr * dtr[..., None].astype(x.dtype)       # (B,nc,Q,H,P)
+
+    # intra-chunk (diagonal block) output
+    CB = jnp.einsum("bcqhn,bckhn->bcqkh", Cr, Br).astype(jnp.float32)
+    W = CB * Lmat                                   # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", W.astype(x.dtype), xdt)
+
+    # per-chunk input to the recurrent state
+    decay_last = jnp.exp(cum[:, :, -1:, :] - cum)   # (B,nc,Q,H)
+    states_in = jnp.einsum("bckhn,bckh,bckhp->bchpn",
+                           Br, decay_last.astype(x.dtype), xdt)  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])         # (B,nc,H) total decay
+
+    def chunk_step(state, inp):
+        s_in, cdecay = inp                          # (B,H,P,N), (B,H)
+        out_state = state                           # state BEFORE this chunk
+        new_state = state * cdecay[..., None, None].astype(state.dtype) + s_in
+        return new_state, out_state
+
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    # scan over chunk axis
+    s_in_seq = jnp.moveaxis(states_in.astype(jnp.float32), 1, 0)
+    cdecay_seq = jnp.moveaxis(chunk_decay, 1, 0)
+    final_state, prev_states = jax.lax.scan(
+        chunk_step, s0, (s_in_seq, cdecay_seq))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)   # (B,nc,H,P,N)
+
+    # inter-chunk (off-diagonal) output: contribution of carried state
+    in_decay = jnp.exp(cum)                         # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cr, prev_states.astype(x.dtype),
+                       in_decay.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y, final_state
+
+
+def ssd_decode_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    A: jax.Array, B_t: jax.Array, C_t: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step.  state (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    B_t/C_t (B,G,N) -> broadcast to heads."""
+    B, H, P, N = state.shape
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)               # (B,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A)      # (B,H)
+    upd = jnp.einsum("bhp,bhn->bhpn", (x_t * dt_t[..., None]).astype(jnp.float32),
+                     Bh.astype(jnp.float32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32))
+    return new_state, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+def _gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    xf = (x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def apply_mamba2(p: Dict, x: jax.Array, cfg: ArchConfig,
+                 state: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,d).  state (decode): {"ssm": (B,H,P,N), "conv": (B,K-1,Cd)}.
+
+    Training/prefill: state=None, chunked scan, returns (y, None).
+    Decode: S==1, returns (y, new_state).
+    """
+    dm = dims(cfg)
+    H, P, N, G, K = dm["H"], dm["P"], dm["N"], dm["G"], dm["K"]
+    Bsz, S, _ = x.shape
+    dt_ = x.dtype
+
+    zxbcdt = x @ p["w_in"].astype(dt_)
+    z, xin, Bc, Cc, dt_raw = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+
+    if state is None:
+        conv_out = causal_conv1d(conv_in, p["conv_w"], p["conv_b"])
+        conv_out = jax.nn.silu(conv_out)
+        xin, Bc, Cc = jnp.split(conv_out, [dm["d_inner"],
+                                           dm["d_inner"] + G * N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        xh = xin.reshape(Bsz, S, H, P)
+        y, _ = ssd_chunked(xh, dt, -jnp.exp(p["A_log"]),
+                           Bc.reshape(Bsz, S, G, N),
+                           Cc.reshape(Bsz, S, G, N),
+                           chunk=_cfg(cfg).chunk_size)
+        y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+        y = y.reshape(Bsz, S, dm["d_inner"])
+        y = _gated_rmsnorm(y, z, p["norm_scale"])
+        return y @ p["w_out"].astype(dt_), None
+
+    # ---- decode: one token ------------------------------------------------
+    assert S == 1
+    conv_state = state["conv"]                      # (B, K-1, Cd)
+    conv_out = causal_conv1d(conv_in, p["conv_w"], p["conv_b"],
+                             state=conv_state)
+    new_conv = jnp.concatenate([conv_state[:, 1:], conv_in], axis=1)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [dm["d_inner"],
+                                       dm["d_inner"] + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    new_ssm, y = ssd_decode_step(
+        state["ssm"], xin.reshape(Bsz, H, P), dt.reshape(Bsz, H),
+        -jnp.exp(p["A_log"]),
+        Bc.reshape(Bsz, G, N), Cc.reshape(Bsz, G, N))
+    y = y + xin.reshape(Bsz, H, P) * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(Bsz, 1, dm["d_inner"])
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return y @ p["w_out"].astype(dt_), {"ssm": new_ssm, "conv": new_conv}
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int) -> Dict:
+    dm = dims(cfg)
+    conv_dim = dm["d_inner"] + 2 * dm["G"] * dm["N"]
+    return {
+        "ssm": jnp.zeros((batch, dm["H"], dm["P"], dm["N"]), jnp.float32),
+        "conv": jnp.zeros((batch, dm["K"] - 1, conv_dim), jnp.bfloat16),
+    }

@@ -1,0 +1,296 @@
+"""Generic decoder-only transformer LM (dense + MoE), scan-over-layers.
+
+Layer parameters are stacked along a leading layer axis and iterated with
+``jax.lax.scan`` so the HLO stays compact for 94-layer configs.  MoE configs
+with ``first_dense_layers`` unroll those leading layers separately and scan
+the homogeneous MoE remainder.
+
+Step kinds:
+  * ``forward``      — (B, S) tokens -> (B, S, vocab) logits  (train/prefill)
+  * ``decode_step``  — (B, 1) token + KV cache -> logits + updated cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, moe as moe_lib
+from repro.models.common import apply_norm, norm_params, split_keys
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def _block_params(key, cfg: ArchConfig, *, use_moe: bool) -> Dict:
+    k1, k2 = split_keys(key, 2)
+    p = {
+        "attn_norm": norm_params(cfg.norm_type, cfg.d_model, cfg.use_bias),
+        "attn": layers.attention_params(k1, cfg),
+    }
+    if not cfg.parallel_block:
+        p["mlp_norm"] = norm_params(cfg.norm_type, cfg.d_model, cfg.use_bias)
+    if use_moe:
+        p["moe"] = moe_lib.moe_params(k2, cfg)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.first_dense_layers:
+            d_ff = cfg.moe.dense_d_ff or cfg.moe.d_expert
+        p["mlp"] = layers.mlp_params(k2, cfg, d_ff=d_ff)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    n_dense_head = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense_head
+    keys = split_keys(key, cfg.n_layers + 3)
+
+    p: Dict[str, PyTree] = {
+        "embed": layers.embedding_params(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": norm_params(cfg.norm_type, cfg.d_model, cfg.use_bias),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = layers.lm_head_params(keys[1], cfg.d_model, cfg.vocab_size)
+
+    if n_dense_head:
+        p["head_blocks"] = [
+            _block_params(keys[2 + i], cfg, use_moe=False)
+            for i in range(n_dense_head)
+        ]
+    p["blocks"] = _stack([
+        _block_params(keys[2 + n_dense_head + i], cfg,
+                      use_moe=cfg.moe is not None)
+        for i in range(n_scan)
+    ])
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def _apply_block(bp: Dict, x: jax.Array, positions: jax.Array,
+                 cfg: ArchConfig, *, window: int,
+                 attn_chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux)."""
+    xn = apply_norm(cfg.norm_type, bp["attn_norm"], x)
+    q, k, v = layers.project_qkv(bp["attn"], xn, positions, cfg)
+    attn = layers.causal_attention(q, k, v, window=window, chunk=attn_chunk)
+    attn = layers.project_out(bp["attn"], attn, cfg)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        # cohere-style: one shared norm, attn and mlp both from xn
+        mlp_out = layers.apply_mlp(bp["mlp"], xn, cfg)
+        return x + attn + mlp_out, aux
+
+    x = x + attn
+    xm = apply_norm(cfg.norm_type, bp["mlp_norm"], x)
+    if "moe" in bp:
+        mlp_out, aux = moe_lib.apply_moe(bp["moe"], xm, cfg)
+    else:
+        mlp_out = layers.apply_mlp(bp["mlp"], xm, cfg)
+    return x + mlp_out, aux
+
+
+def _apply_block_decode(bp: Dict, x: jax.Array, cache_l: Dict,
+                        slot_positions: jax.Array, pos: jax.Array,
+                        cfg: ArchConfig, *, window: int
+                        ) -> Tuple[jax.Array, Dict]:
+    """Decode one token through one block; cache_l: {"k","v"} (B,S,Hkv,D)."""
+    B = x.shape[0]
+    xn = apply_norm(cfg.norm_type, bp["attn_norm"], x)
+    q, k, v = layers.project_qkv(bp["attn"], xn, pos[:, None], cfg)
+    # write new k/v into the cache slot (rolling: slot = pos % n_slots)
+    n_slots = cache_l["k"].shape[1]
+    slot = (pos % n_slots)
+    bidx = jnp.arange(B)
+    new_k = cache_l["k"].at[bidx, slot].set(k[:, 0].astype(cache_l["k"].dtype))
+    new_v = cache_l["v"].at[bidx, slot].set(v[:, 0].astype(cache_l["v"].dtype))
+    attn = layers.decode_attention(q, new_k, new_v, slot_positions, pos,
+                                   window=window)
+    attn = layers.project_out(bp["attn"], attn, cfg)
+
+    if cfg.parallel_block:
+        mlp_out = layers.apply_mlp(bp["mlp"], xn, cfg)
+        return x + attn + mlp_out, {"k": new_k, "v": new_v}
+
+    x = x + attn
+    xm = apply_norm(cfg.norm_type, bp["mlp_norm"], x)
+    if "moe" in bp:
+        mlp_out, _ = moe_lib.apply_moe(bp["moe"], xm, cfg)
+    else:
+        mlp_out = layers.apply_mlp(bp["mlp"], xm, cfg)
+    return x + mlp_out, {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params: Dict, tokens: jax.Array, cfg: ArchConfig, *,
+            window: int = 0, extra_embeds: Optional[jax.Array] = None,
+            compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B,S) -> (logits (B,S,vocab) fp32, moe_aux scalar).
+
+    ``extra_embeds`` (B, S_extra, d_model): already-projected frontend
+    embeddings prepended to the token embeddings (VLM path).
+    """
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+    if getattr(cfg, "scale_embeddings", False):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(compute_dtype), x], axis=1)
+        # §Perf-4 follow-up: the frontend concat otherwise re-replicates the
+        # residual stream over the data axis (llava train was 22 s of
+        # collectives from this one op)
+        from repro.models.common import constrain
+        x = constrain(x, "batch", None, None)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for bp in params.get("head_blocks", []):
+        x, aux = _apply_block(bp, x, positions, cfg, window=window,
+                              attn_chunk=attn_chunk)
+        aux_total = aux_total + aux
+
+    def block_call(bp_, x_):
+        return _apply_block(bp_, x_, positions, cfg, window=window,
+                            attn_chunk=attn_chunk)
+
+    if remat:
+        # activation checkpointing: recompute block internals in backward
+        block_call = jax.checkpoint(block_call)
+
+    def layer_step(carry, bp):
+        x, aux_acc = carry
+        x_new, aux = block_call(bp, x)
+        return (x_new, aux_acc + aux), None
+
+    (x, aux_total), _ = jax.lax.scan(layer_step, (x, aux_total),
+                                     params["blocks"])
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params.get("head"), params["embed"], x,
+                              cfg.tie_embeddings)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            aux: jax.Array = None, aux_weight: float = 0.0,
+            z_loss: float = 1e-4) -> Tuple[jax.Array, Dict]:
+    """Cross-entropy with label -1 = ignore.  logits (B,S,V) fp32."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    zl = z_loss * ((logz * mask) ** 2).sum() / denom
+    loss = ce + zl
+    metrics = {"ce": ce, "z_loss": zl, "tokens": mask.sum()}
+    if aux is not None and aux_weight:
+        loss = loss + aux_weight * aux
+        metrics["moe_aux"] = aux
+    return loss, metrics
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig, *,
+            window: int = 0, attn_chunk: int = 512,
+            remat: bool = True) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg, window=window,
+                          extra_embeds=batch.get("extra_embeds"),
+                          attn_chunk=attn_chunk, remat=remat)
+    labels = batch["labels"]
+    if "extra_embeds" in batch and batch["extra_embeds"] is not None:
+        # frontend positions carry no LM loss
+        pad = -jnp.ones(batch["extra_embeds"].shape[:2], labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    aw = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    return lm_loss(logits, labels, aux, aw)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    """KV cache.  With a sliding window the cache is a rolling buffer of
+    ``min(window, cache_len)`` slots — decisive for long_500k memory."""
+    n_slots = min(window, cache_len) if window else cache_len
+    Hkv, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    n_dense_head = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense_head
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, batch, n_slots, Hkv, D), dtype),
+            "v": jnp.zeros((n, batch, n_slots, Hkv, D), dtype),
+        }
+
+    cache = {
+        "scan": kv(n_scan),
+        "slot_positions": -jnp.ones((batch, n_slots), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if n_dense_head:
+        cache["head"] = kv(n_dense_head)
+    return cache
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                cfg: ArchConfig, *, window: int = 0,
+                compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """tokens (B,1) -> (logits (B,1,V), new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+    if getattr(cfg, "scale_embeddings", False):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+
+    n_slots = cache["scan"]["k"].shape[2]
+    slot = pos % n_slots
+    slot_positions = cache["slot_positions"].at[jnp.arange(B), slot].set(pos)
+
+    new_head = []
+    for i, bp in enumerate(params.get("head_blocks", [])):
+        cl = {"k": cache["head"]["k"][i], "v": cache["head"]["v"][i]}
+        x, ncl = _apply_block_decode(bp, x, cl, slot_positions, pos, cfg,
+                                     window=window)
+        new_head.append(ncl)
+
+    def layer_step(x, inp):
+        bp, cl = inp
+        x, ncl = _apply_block_decode(bp, x, cl, slot_positions, pos, cfg,
+                                     window=window)
+        return x, ncl
+
+    x, new_scan = jax.lax.scan(layer_step, x,
+                               (params["blocks"], cache["scan"]))
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params.get("head"), params["embed"], x,
+                              cfg.tie_embeddings)
+
+    new_cache = {
+        "scan": new_scan,
+        "slot_positions": slot_positions,
+        "pos": pos + 1,
+    }
+    if new_head:
+        new_cache["head"] = {
+            "k": jnp.stack([c["k"] for c in new_head]),
+            "v": jnp.stack([c["v"] for c in new_head]),
+        }
+    return logits, new_cache

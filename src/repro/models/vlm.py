@@ -1,0 +1,81 @@
+"""LLaVA-NeXT-style VLM: stubbed vision tower + real projector + LM backbone.
+
+The CLIP ViT tower is a STUB (assignment carve-out): the model consumes
+precomputed patch embeddings ``patches (B, n_tokens, d_embed)`` shaped as the
+anyres tiling grid would emit (base image + tiles, 576 patches each).  The
+2-layer MLP projector and the Mistral-backbone language model are real.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.common import dense_init, split_keys
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    assert cfg.frontend is not None and cfg.frontend.kind == "image_patches"
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "projector": {
+            "w1": dense_init(k1, (cfg.frontend.d_embed, cfg.d_model)),
+            "b1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "w2": dense_init(k2, (cfg.d_model, cfg.d_model)),
+            "b2": jnp.zeros((cfg.d_model,), jnp.float32),
+        },
+        "lm": transformer.init_params(k3, cfg),
+    }
+
+
+def project_patches(params: Dict, patches: jax.Array,
+                    compute_dtype=jnp.bfloat16) -> jax.Array:
+    p = params["projector"]
+    x = patches.astype(compute_dtype)
+    x = jax.nn.gelu(x @ p["w1"].astype(compute_dtype)
+                    + p["b1"].astype(compute_dtype), approximate=True)
+    return x @ p["w2"].astype(compute_dtype) + p["b2"].astype(compute_dtype)
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: ArchConfig, *,
+            patches: Optional[jax.Array] = None, window: int = 0,
+            compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    extra = (project_patches(params, patches, compute_dtype)
+             if patches is not None else None)
+    return transformer.forward(params["lm"], tokens, cfg, window=window,
+                               extra_embeds=extra,
+                               compute_dtype=compute_dtype,
+                               attn_chunk=attn_chunk, remat=remat)
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig, *,
+            window: int = 0, attn_chunk: int = 512,
+            remat: bool = True) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          patches=batch.get("patches"), window=window,
+                          attn_chunk=attn_chunk, remat=remat)
+    labels = batch["labels"]
+    if batch.get("patches") is not None:
+        pad = -jnp.ones(batch["patches"].shape[:2], labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    aw = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    return transformer.lm_loss(logits, labels, aux, aw)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    return transformer.init_cache(cfg, batch, cache_len, window=window,
+                                  dtype=dtype)
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                cfg: ArchConfig, *, window: int = 0,
+                compute_dtype=jnp.bfloat16):
+    # image patches enter during prefill; token-by-token decode is text-only
+    return transformer.decode_step(params["lm"], cache, tokens, cfg,
+                                   window=window,
+                                   compute_dtype=compute_dtype)

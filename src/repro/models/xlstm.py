@@ -1,0 +1,332 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory with recurrent gate connections, sequential scan).
+
+mLSTM uses the stabilized chunkwise-parallel formulation (intra-chunk
+quadratic + inter-chunk (C, n, m) recurrence) — the TPU-friendly form; the
+recurrent step form is used for decode.  sLSTM has true recurrent weight
+connections (R acts on h_{t-1}) so it is inherently sequential; we scan over
+time, which is also what the reference CUDA kernel does.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, XLSTMConfig
+from repro.models.common import apply_norm, dense_init, norm_params, split_keys
+from repro.models.ssm import causal_conv1d
+
+
+def _x(cfg: ArchConfig) -> XLSTMConfig:
+    assert cfg.xlstm is not None
+    return cfg.xlstm
+
+
+def mlstm_dims(cfg: ArchConfig) -> Dict[str, int]:
+    d_in = int(cfg.d_model * _x(cfg).mlstm_proj_factor)
+    H = cfg.n_heads
+    return dict(d_in=d_in, H=H, hd=d_in // H)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-up-projection)
+# ---------------------------------------------------------------------------
+def mlstm_params(key, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    dm = mlstm_dims(cfg)
+    d_in, H, hd = dm["d_in"], dm["H"], dm["hd"]
+    K = _x(cfg).conv1d_kernel
+    ks = split_keys(key, 8)
+    return {
+        "norm": norm_params(cfg.norm_type, d),
+        "w_up": dense_init(ks[0], (d, d_in)),
+        "w_z": dense_init(ks[1], (d, d_in)),
+        "conv_w": (jax.random.normal(ks[2], (K, d_in), jnp.float32)
+                   * (1.0 / (K * d_in) ** 0.5)),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "wq": dense_init(ks[3], (d_in, d_in)),
+        "wk": dense_init(ks[4], (d_in, d_in)),
+        "wv": dense_init(ks[5], (d_in, d_in)),
+        "w_if": dense_init(ks[6], (d_in, 2 * H), scale=0.1),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        # forget-gate bias init positive => long memory at init
+        "b_f": jnp.linspace(3.0, 6.0, H),
+        "out_norm_scale": jnp.ones((d_in,), jnp.float32),
+        "w_down": dense_init(ks[7], (d_in, d), scale=1.0),
+    }
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int,
+                    state: Optional[Tuple] = None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B, L, H, hd); log_i/log_f: (B, L, H) fp32.
+    Returns (h (B,L,H,hd), (C (B,H,hd,hd), n (B,H,hd), m (B,H))).
+    """
+    B, L, H, hd = q.shape
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    scale = 1.0 / (hd ** 0.5)
+
+    qr = (q * scale).reshape(B, nc, Q, H, hd)
+    kr = k.reshape(B, nc, Q, H, hd)
+    vr = v.reshape(B, nc, Q, H, hd)
+    lir = log_i.reshape(B, nc, Q, H)
+    lfr = log_f.reshape(B, nc, Q, H)
+    b = jnp.cumsum(lfr, axis=2)                     # inclusive cumsum of log f
+    bQ = b[:, :, -1, :]                             # (B,nc,H) chunk total
+
+    # intra-chunk log weights: w[t,j] = b_t - b_j + li_j  (j <= t)
+    wmat = (b[:, :, :, None, :] - b[:, :, None, :, :]
+            + lir[:, :, None, :, :])                # (B,nc,Qt,Qj,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    wmat = jnp.where(tri[None, None, :, :, None], wmat, -jnp.inf)
+    w_max = wmat.max(axis=3)                        # (B,nc,Qt,H) local max
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        q_c, k_c, v_c, li_c, b_c, bQ_c, w_c, wmax_c = inp
+        # q_c (B,Q,H,hd) ... w_c (B,Qt,Qj,H), wmax_c (B,Qt,H)
+
+        # per-position stabilizer
+        m_pos = jnp.maximum(wmax_c, b_c + m_prev[:, None, :])   # (B,Q,H)
+
+        # intra-chunk
+        s = jnp.einsum("bqhd,bjhd->bqjh", q_c, k_c).astype(jnp.float32)
+        D = jnp.exp(w_c - m_pos[:, :, None, :])
+        S = s * D
+        num_intra = jnp.einsum("bqjh,bjhd->bqhd", S.astype(q.dtype), v_c)
+        den_intra = S.sum(axis=2)                                # (B,Q,H)
+
+        # inter-chunk (carried state)
+        inter_w = jnp.exp(b_c + m_prev[:, None, :] - m_pos)     # (B,Q,H)
+        num_inter = jnp.einsum("bqhd,bhde->bqhe", q_c,
+                               C_prev.astype(q.dtype))
+        num_inter = num_inter * inter_w[..., None].astype(q.dtype)
+        den_inter = jnp.einsum("bqhd,bhd->bqh", q_c.astype(jnp.float32),
+                               n_prev) * inter_w
+
+        num = num_intra.astype(jnp.float32) + num_inter.astype(jnp.float32)
+        den = den_intra + den_inter
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_pos))
+        h_c = (num / denom[..., None]).astype(q.dtype)
+
+        # state update
+        upd_w = bQ_c[:, None, :] - b_c + li_c                    # (B,Q,H)
+        m_new = jnp.maximum(bQ_c + m_prev, upd_w.max(axis=1))    # (B,H)
+        k_scaled = k_c.astype(jnp.float32) * jnp.exp(
+            upd_w - m_new[:, None, :])[..., None]
+        C_new = (C_prev * jnp.exp(bQ_c + m_prev - m_new)[..., None, None]
+                 + jnp.einsum("bqhd,bqhe->bhde", k_scaled,
+                              v_c.astype(jnp.float32)))
+        n_new = (n_prev * jnp.exp(bQ_c + m_prev - m_new)[..., None]
+                 + k_scaled.sum(axis=1))
+        return (C_new, n_new, m_new), h_c
+
+    xs = (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(kr, 1, 0),
+          jnp.moveaxis(vr, 1, 0), jnp.moveaxis(lir, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(bQ, 1, 0),
+          jnp.moveaxis(wmat, 1, 0), jnp.moveaxis(w_max, 1, 0))
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, L, H, hd)
+    return h, (Cf, nf, mf)
+
+
+def mlstm_decode_step(state, q, k, v, log_i, log_f):
+    """One step.  state (C,n,m); q/k/v (B,H,hd); gates (B,H) fp32."""
+    C_prev, n_prev, m_prev = state
+    hd = q.shape[-1]
+    q = q * (1.0 / hd ** 0.5)
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    f_eff = jnp.exp(log_f + m_prev - m_new)
+    i_eff = jnp.exp(log_i - m_new)
+    kf = k.astype(jnp.float32) * i_eff[..., None]
+    C_new = C_prev * f_eff[..., None, None] + jnp.einsum(
+        "bhd,bhe->bhde", kf, v.astype(jnp.float32))
+    n_new = n_prev * f_eff[..., None] + kf
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C_new)
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_new)
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = (num / denom[..., None]).astype(q.dtype)
+    return (C_new, n_new, m_new), h
+
+
+def _multihead_rmsnorm(x: jax.Array, scale: jax.Array, H: int,
+                       eps: float = 1e-6) -> jax.Array:
+    """Head-wise RMSNorm over (B,S,H,hd) flattened scale (d_in,)."""
+    B, S, d_in = x.shape
+    hd = d_in // H
+    xf = x.astype(jnp.float32).reshape(B, S, H, hd)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = (xf * jax.lax.rsqrt(var + eps)).reshape(B, S, d_in) * scale
+    return out.astype(x.dtype)
+
+
+def apply_mlstm_block(p: Dict, x: jax.Array, cfg: ArchConfig,
+                      state: Optional[Dict] = None,
+                      chunk: int = 128) -> Tuple[jax.Array, Optional[Dict]]:
+    """Residual mLSTM block.  x (B,S,d)."""
+    dm = mlstm_dims(cfg)
+    d_in, H, hd = dm["d_in"], dm["H"], dm["hd"]
+    B, S, _ = x.shape
+    dt = x.dtype
+
+    xn = apply_norm(cfg.norm_type, p["norm"], x)
+    x_up = xn @ p["w_up"].astype(dt)
+    z_up = xn @ p["w_z"].astype(dt)
+
+    if state is None:
+        conv = jax.nn.silu(causal_conv1d(x_up, p["conv_w"], p["conv_b"]))
+        new_conv = None
+    else:
+        conv = jax.nn.silu(causal_conv1d(x_up, p["conv_w"], p["conv_b"],
+                                         state=state["conv"]))
+        new_conv = jnp.concatenate([state["conv"][:, 1:], x_up], axis=1)
+
+    q = (conv @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (conv @ p["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (x_up @ p["wv"].astype(dt)).reshape(B, S, H, hd)
+    gates = (x_up.astype(jnp.float32) @ p["w_if"].astype(jnp.float32))
+    log_i = gates[..., :H] + p["b_i"]
+    log_f = jax.nn.log_sigmoid(gates[..., H:] + p["b_f"])
+
+    if state is None:
+        h, _ = mlstm_chunkwise(q, k, v, log_i, log_f, chunk)
+        new_state = None
+    else:
+        assert S == 1
+        (C, n, m), h = mlstm_decode_step(
+            (state["C"], state["n"], state["m"]),
+            q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0])
+        h = h[:, None]
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+
+    h = h.reshape(B, S, d_in)
+    h = _multihead_rmsnorm(h, p["out_norm_scale"], H)
+    h = h * jax.nn.silu(z_up)
+    return x + h @ p["w_down"].astype(dt), new_state
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> Dict:
+    dm = mlstm_dims(cfg)
+    K = _x(cfg).conv1d_kernel
+    return {
+        "C": jnp.zeros((batch, dm["H"], dm["hd"], dm["hd"]), jnp.float32),
+        "n": jnp.zeros((batch, dm["H"], dm["hd"]), jnp.float32),
+        "m": jnp.full((batch, dm["H"]), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, dm["d_in"]), jnp.bfloat16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (post-up-projection) — sequential scan
+# ---------------------------------------------------------------------------
+def slstm_params(key, cfg: ArchConfig) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = split_keys(key, 7)
+    pf = _x(cfg).slstm_proj_factor
+    ff = int(d * pf)
+    return {
+        "norm": norm_params(cfg.norm_type, d),
+        # input weights for 4 gates (i, f, z, o)
+        "w_gates": dense_init(ks[0], (d, 4 * d)),
+        # block-diagonal recurrent weights per head, per gate
+        "r_gates": dense_init(ks[1], (4, H, hd, hd), in_axis=2, scale=0.5),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.linspace(3.0, 6.0, d), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "out_norm": norm_params(cfg.norm_type, d),
+        # gated FFN (proj factor ~4/3)
+        "ffn_norm": norm_params(cfg.norm_type, d),
+        "ffn_gate": dense_init(ks[2], (d, ff)),
+        "ffn_up": dense_init(ks[3], (d, ff)),
+        "ffn_down": dense_init(ks[4], (ff, d), scale=1.0),
+    }
+
+
+def slstm_scan(p: Dict, xn: jax.Array, H: int,
+               state: Optional[Tuple] = None):
+    """xn: (B,S,d) pre-normed input.  Sequential over S.
+
+    Returns (h (B,S,d), final_state (c, n, m, h_prev) each (B,d) fp32)."""
+    B, S, d = xn.shape
+    hd = d // H
+    gates_in = (xn.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)
+                + p["b_gates"])                      # (B,S,4d)
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, m0, h0 = state
+
+    r = p["r_gates"].astype(jnp.float32)             # (4,H,hd,hd)
+
+    def step(carry, g_t):
+        c, n, m, h_prev = carry
+        hp = h_prev.reshape(B, H, hd)
+        rec = jnp.einsum("bhd,ghde->gbhe", hp, r).reshape(4, B, d)
+        gi, gf, gz, go = (g_t[..., :d] + rec[0],
+                          g_t[..., d:2 * d] + rec[1],
+                          g_t[..., 2 * d:3 * d] + rec[2],
+                          g_t[..., 3 * d:] + rec[3])
+        log_f = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(log_f + m, gi)
+        i_eff = jnp.exp(gi - m_new)
+        f_eff = jnp.exp(log_f + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c_new = f_eff * c + i_eff * z
+        n_new = f_eff * n + i_eff
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (cf, nf, mf, hf), hs = jax.lax.scan(
+        step, (c0, n0, m0, h0), jnp.moveaxis(gates_in, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (cf, nf, mf, hf)
+
+
+def apply_slstm_block(p: Dict, x: jax.Array, cfg: ArchConfig,
+                      state: Optional[Dict] = None
+                      ) -> Tuple[jax.Array, Optional[Dict]]:
+    H = cfg.n_heads
+    dt = x.dtype
+    xn = apply_norm(cfg.norm_type, p["norm"], x)
+    if state is None:
+        h, _ = slstm_scan(p, xn, H)
+        new_state = None
+    else:
+        h, (c, n, m, hf) = slstm_scan(
+            p, xn, H, state=(state["c"], state["n"], state["m"], state["h"]))
+        new_state = {"c": c, "n": n, "m": m, "h": hf}
+    h = apply_norm(cfg.norm_type, p["out_norm"], h.astype(dt))
+    x = x + h
+    # gated FFN
+    xf = apply_norm(cfg.norm_type, p["ffn_norm"], x)
+    g = jax.nn.gelu(xf @ p["ffn_gate"].astype(dt), approximate=True)
+    u = xf @ p["ffn_up"].astype(dt)
+    x = x + (g * u) @ p["ffn_down"].astype(dt)
+    return x, new_state
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adafactor, adam, adamw, global_norm,  # noqa: F401
+                                    Optimizer, sgd)
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,168 @@
+"""Optimizers (from scratch — no optax): Adam(W), SGD+momentum, Adafactor-lite.
+
+Functional API:
+    opt = adamw(lr=1e-3, ...)
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params)
+
+Optimizer state trees mirror the parameter tree, so the launcher can apply
+identical PartitionSpecs to both (FSDP-style sharded optimizer state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def _tree_zeros_like(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+def adamw(lr: float | Callable[[jax.Array], jax.Array] = 1e-3,
+          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          grad_clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": _tree_zeros_like(params),
+            "v": _tree_zeros_like(params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip_norm is not None:
+            gnorm = global_norm(gf)
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], gf)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], gf)
+        lr_t = lr(step) if callable(lr) else lr
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            d = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr=1e-3, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.9,
+        nesterov: bool = False,
+        grad_clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": _tree_zeros_like(params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip_norm is not None:
+            gnorm = global_norm(gf)
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        mu = jax.tree.map(lambda mu_, g: momentum * mu_ + g,
+                          state["mu"], gf)
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(p, mu_, g):
+            d = momentum * mu_ + g if nesterov else mu_
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, gf)
+        return new_params, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+def adafactor(lr: float | Callable = 1e-2, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (memory-lean for huge models)."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "slots": jax.tree.map(per_leaf, params,
+                                      is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** -0.8
+        lr_t = lr(step) if callable(lr) else lr
+
+        def per_leaf(g, slot, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in slot:
+                vr = beta2 * slot["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * slot["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                rmean = vr.mean(axis=-1, keepdims=True)
+                u = g / jnp.sqrt(
+                    jnp.expand_dims(vr / jnp.maximum(rmean, eps), -1)
+                    * jnp.expand_dims(vc, -2) + eps)
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * slot["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_slot = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            newp = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return newp, new_slot
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["slots"])
+        outs = [per_leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_slots = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"step": step, "slots": new_slots}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import RooflineTerms, from_artifact, load_artifact  # noqa: F401
+from repro.roofline import analytic, hlo_parse  # noqa: F401

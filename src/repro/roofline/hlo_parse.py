@@ -1,0 +1,165 @@
+"""Parse compiled HLO text for collective ops and their operand bytes.
+
+``cost_analysis()`` does not report collective bytes, so we sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the optimized HLO module (post-SPMD-partitioning, so
+shapes are per-device and replica_groups describe the participating rings).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.:  %x = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %y), ...
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"((?:-start|-done)?)\(",
+    re.MULTILINE)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every tensor literal in a shape string (handles
+    tuples like (f32[4,8], u32[])."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {"count": n, "bytes": output_bytes_sum}}.
+
+    Bytes counted are the (per-device) OUTPUT shape of each collective —
+    for all-gather that's the gathered result, for all-reduce the reduced
+    tensor, a consistent proxy for link traffic per device.
+    ``-start`` ops are counted; their ``-done`` twins are skipped.
+    """
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0})
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # -done repeats the -start shape
+        b = _shape_bytes(shape_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_bytes(hlo_text).values())
+
+
+def collective_summary_lines(hlo_text: str) -> List[str]:
+    info = collective_bytes(hlo_text)
+    return [f"{k}: count={int(v['count'])} bytes={v['bytes']:.3e}"
+            for k, v in sorted(info.items())]
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware accounting: a collective inside a while body executes once per
+# iteration, so body contributions must be multiplied by the loop trip count
+# (extracted from the s32 bound constant in the condition computation).
+# ---------------------------------------------------------------------------
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*", re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Map computation name -> its text block."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        if line and not line.startswith(" ") and ("{" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur_name = m.group(1)
+                cur_lines = [line]
+                comps[cur_name] = ""
+                continue
+        if cur_name is not None:
+            cur_lines.append(line)
+            if line.startswith("}"):
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+    return comps
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(m.group(1)) for m in _TRIP_RE.finditer(cond_text)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes_loop_aware(hlo_text: str, entry_hint: str = "main"
+                                ) -> Dict[str, Dict[str, float]]:
+    """Like :func:`collective_bytes` but multiplies while-body contributions
+    by the loop trip count (recursively, for nested scans)."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if entry_hint in name:
+            entry = name
+    if entry is None:  # fall back: computation that is not called anywhere
+        called = set()
+        for text in comps.values():
+            called.update(m.group(2) for m in _WHILE_RE.finditer(text))
+            called.update(m.group(1) for m in _WHILE_RE.finditer(text))
+        candidates = [n for n in comps if n not in called]
+        entry = candidates[-1] if candidates else next(iter(comps))
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def account(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {}          # cycle guard
+        text = comps.get(name, "")
+        out: Dict[str, float] = defaultdict(float)
+        for m in _OP_RE.finditer(text):
+            shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+            if suffix == "-done":
+                continue
+            out[kind] += _shape_bytes(shape_str)
+            out[kind + "_count"] += 1
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            sub = account(body)
+            for k, v in sub.items():
+                out[k] += trips * v if not k.endswith("_count") else v
+        memo[name] = dict(out)
+        return memo[name]
+
+    acc = account(entry)
+    result: Dict[str, Dict[str, float]] = {}
+    for k, v in acc.items():
+        if k.endswith("_count"):
+            continue
+        result[k] = {"bytes": v, "count": acc.get(k + "_count", 0)}
+    return result
+
+
+def total_collective_bytes_loop_aware(hlo_text: str) -> float:
+    return sum(v["bytes"]
+               for v in collective_bytes_loop_aware(hlo_text).values())

@@ -1,0 +1,1 @@
+from repro.serving.engine import BatchEngine, DecodeEngine, Request  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.train.trainer import (TrainerConfig, TrainState, fit,  # noqa: F401
+                                 make_train_step)
+from repro.train import checkpoint  # noqa: F401

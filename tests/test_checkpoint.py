@@ -1,0 +1,55 @@
+"""Checkpoint roundtrip, integrity, retention."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ck
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"layer": {"w": jax.random.normal(k1, (8, 16)),
+                      "b": jnp.zeros((16,), jnp.bfloat16)},
+            "step": jnp.array(7, jnp.int32),
+            "stack": jax.random.normal(k2, (3, 4, 5))}
+
+
+def test_roundtrip(tmp_path, key):
+    tree = _tree(key)
+    ck.save_checkpoint(str(tmp_path), 5, tree)
+    restored, manifest = ck.restore_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_retention(tmp_path, key):
+    tree = _tree(key)
+    for step in (1, 2, 3, 4, 5):
+        ck.save_checkpoint(str(tmp_path), step, tree, keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    kept = sorted(f for f in os.listdir(tmp_path) if f.endswith(".json"))
+    assert len(kept) == 2
+
+
+def test_shape_mismatch_rejected(tmp_path, key):
+    tree = _tree(key)
+    ck.save_checkpoint(str(tmp_path), 1, tree)
+    bad = dict(tree, stack=jnp.zeros((9, 9)))
+    with pytest.raises((ValueError, KeyError)):
+        ck.restore_checkpoint(str(tmp_path), bad)
+
+
+def test_corruption_detected(tmp_path, key):
+    tree = _tree(key)
+    base = ck.save_checkpoint(str(tmp_path), 1, tree)
+    data = dict(np.load(base + ".npz"))
+    data["a0"] = data["a0"] + 1.0       # corrupt one array
+    np.savez(base + ".npz", **data)
+    with pytest.raises(IOError):
+        ck.restore_checkpoint(str(tmp_path), tree)

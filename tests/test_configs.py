@@ -1,0 +1,81 @@
+"""Config registry: exact assigned dims, smoke-variant invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED_ARCHS, available_archs, get_config
+from repro.configs.shapes import SHAPES, get_shape
+
+# the assignment table, verbatim
+ASSIGNED_DIMS = {
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+    "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+}
+
+
+def test_all_assigned_archs_registered():
+    avail = available_archs()
+    for a in ASSIGNED_ARCHS:
+        assert a in avail
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_assigned_dimensions(arch):
+    L, d, H, kv, ff, V = ASSIGNED_DIMS[arch]
+    c = get_config(arch)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.d_ff, c.vocab_size) == (L, d, H, kv, ff, V), arch
+
+
+def test_special_features():
+    assert get_config("zamba2-2.7b").ssm.d_state == 64
+    assert get_config("qwen3-moe-235b-a22b").moe.n_experts == 128
+    assert get_config("qwen3-moe-235b-a22b").moe.experts_per_token == 8
+    assert get_config("deepseek-moe-16b").moe.n_shared_experts == 2
+    assert get_config("deepseek-moe-16b").moe.experts_per_token == 6
+    assert get_config("gemma-7b").resolved_head_dim == 256
+    assert get_config("starcoder2-7b").sliding_window == 4096
+    assert get_config("llava-next-mistral-7b").frontend.n_tokens == 2880
+    assert get_config("whisper-base").encoder_positions == 1500
+    assert get_config("xlstm-1.3b").xlstm.slstm_every == 8
+
+
+def test_shapes_exact():
+    assert (SHAPES["train_4k"].seq_len, SHAPES["train_4k"].global_batch) \
+        == (4096, 256)
+    assert (SHAPES["prefill_32k"].seq_len,
+            SHAPES["prefill_32k"].global_batch) == (32768, 32)
+    assert (SHAPES["decode_32k"].seq_len,
+            SHAPES["decode_32k"].global_batch) == (32768, 128)
+    assert (SHAPES["long_500k"].seq_len,
+            SHAPES["long_500k"].global_batch) == (524288, 1)
+    assert SHAPES["decode_32k"].is_decode
+    with pytest.raises(KeyError):
+        get_shape("nope")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_variant_preserves_family_and_ratio(arch):
+    c = get_config(arch)
+    s = c.smoke_variant()
+    assert s.family == c.family
+    assert s.block_layout()[0].split("+")[0] == \
+        c.block_layout()[0].split("+")[0]
+    if c.n_kv_heads < c.n_heads:
+        assert s.n_kv_heads < s.n_heads      # GQA ratio preserved in kind
+    s.validate()
+
+
+def test_long_context_policy():
+    from repro.launch.specs import combo_supported
+    shape = SHAPES["long_500k"]
+    skipped = [a for a in ASSIGNED_ARCHS
+               if not combo_supported(get_config(a), shape)[0]]
+    assert skipped == ["whisper-base"]

@@ -1,0 +1,50 @@
+"""Analytical cost model (paper §4): Eq. (1)-(3), Fig. 4 crossover."""
+import pytest
+
+from repro.core import build_system
+
+
+@pytest.fixture
+def cm():
+    return build_system().costmodel
+
+
+def test_eq1_components(cm):
+    n = 800_000
+    c = cm.f_conventional_dc(n)
+    # paper: A_dc = 2.44 us/peak on the 1024-core cluster
+    assert c.breakdown["analyze"] == pytest.approx(n * 2.44e-6)
+    assert c.breakdown["data_up"] > 0
+    assert c.total == pytest.approx(sum(c.breakdown.values()))
+
+
+def test_eq3_static_train_cost_dominates_small_n(cm):
+    """For small N the 19 s Cerebras train dominates f_ml."""
+    c = cm.f_ml(10_000, p=0.1)
+    assert c.breakdown["train"] == pytest.approx(19.0)
+    assert c.breakdown["train"] / c.total > 0.5
+
+
+def test_crossover_exists_and_orders_strategies(cm):
+    """Fig. 4: conventional wins for small N, ML surrogate for large N."""
+    n_star = cm.crossover(p=0.1)
+    assert n_star is not None
+    small = max(1, n_star // 10)
+    large = n_star * 10
+    assert cm.f_conventional_dc(small).total < cm.f_ml(small).total
+    assert cm.f_ml(large).total < cm.f_conventional_dc(large).total
+    # crossover in a physically sensible range (Fig. 4 shows ~1e6-1e8 peaks)
+    assert 10_000 < n_star < 10**9
+
+
+def test_advise(cm):
+    n_star = cm.crossover(p=0.1)
+    assert cm.advise(max(1, n_star // 10)) != "ml_surrogate"
+    assert cm.advise(n_star * 10) == "ml_surrogate"
+
+
+def test_per_datum_costs_converge_to_estimate_cost(cm):
+    """As N -> inf, ML per-datum cost -> E + transfer overhead share."""
+    per = cm.f_ml(10**9, p=0.1).per_datum(10**9)
+    # E = 0.35us; with p=0.1 upload+label adds ~(0.24+2.44)*0.1 us
+    assert per < 1.5e-6

@@ -1,0 +1,133 @@
+"""Flow engine: deploy/run, parameter references, retries, failure branches,
+auth scopes — the paper's §3 semantics."""
+import pytest
+
+from repro.core import build_system, dnn_trainer_flow
+from repro.core.auth import SCOPE_FLOWS
+from repro.core.flows import ActionFailure, ActionProvider, FlowError
+from repro.core.transfer import FileRef
+
+
+def _system_with_dataset(n_files=4, nbytes=10_000_000, **kw):
+    sys_ = build_system(**kw)
+    for i in range(n_files):
+        sys_.store.put("slac", FileRef(f"d{i}", nbytes))
+    return sys_
+
+
+def test_deploy_validates_definition():
+    sys_ = build_system()
+    with pytest.raises(FlowError):
+        sys_.flows.deploy({"StartAt": "Nope", "States": {}})
+    with pytest.raises(FlowError):
+        sys_.flows.deploy({"StartAt": "A", "States": {
+            "A": {"Provider": "transfer", "Next": "Missing"}}})
+    with pytest.raises(FlowError):
+        sys_.flows.deploy({"StartAt": "A", "States": {
+            "A": {"Provider": "not-a-provider", "End": True}}})
+
+
+def test_full_dnn_trainer_flow_sequence():
+    sys_ = _system_with_dataset()
+    tok = sys_.user_token()
+
+    def train():
+        sys_.store.put("alcf", FileRef("m.npz", 3_000_000, {"w": 1}))
+        return {"ok": True}
+
+    fid = sys_.funcx.register_function(train)
+    eid = sys_.funcx.register_endpoint("cerebras", mode="modeled")
+    flow_id = sys_.flows.deploy(dnn_trainer_flow())
+    run = sys_.flows.run(flow_id, {
+        "src": "slac", "dc": "alcf", "dataset": [f"d{i}" for i in range(4)],
+        "train_endpoint": eid, "train_function": fid,
+        "train_args": [], "train_kwargs": {}, "modeled_duration": 19.0,
+        "model_artifacts": ["m.npz"], "model_name": "m.npz",
+        "register_as": "braggnn", "version_tag": "v1", "metrics": {},
+    }, tok)
+    assert run.status == "SUCCEEDED"
+    assert [e.state for e in run.log] == [
+        "TransferData", "TrainModel", "TransferModel", "RegisterModel"]
+    assert run.turnaround > 19.0            # includes modeled train
+    assert sys_.store.exists("slac", "m.npz")  # model delivered to the edge
+    assert sys_.repo.latest("braggnn").version == 1
+
+
+def test_retry_then_failure_branch():
+    sys_ = build_system()
+    tok = sys_.user_token()
+
+    calls = {"n": 0}
+
+    class Flaky(ActionProvider):
+        name = "flaky"
+        required_scope = SCOPE_FLOWS
+
+        def run(self, params, ctx):
+            calls["n"] += 1
+            raise ActionFailure("always down")
+
+    class Notify(ActionProvider):
+        name = "notify"
+        required_scope = SCOPE_FLOWS
+
+        def run(self, params, ctx):
+            return {"notified": True}
+
+    sys_.flows.providers["flaky"] = Flaky()
+    sys_.flows.providers["notify"] = Notify()
+    fid = sys_.flows.deploy({
+        "StartAt": "Work",
+        "States": {
+            "Work": {"Provider": "flaky", "Retries": 2,
+                     "OnFailure": "Tell", "Next": "Done"},
+            "Tell": {"Provider": "notify", "End": True},
+            "Done": {"End": True},
+        },
+    })
+    run = sys_.flows.run(fid, {}, tok)
+    assert calls["n"] == 3                      # 1 + 2 retries
+    assert run.log[0].status == "FAILED"
+    assert run.log[1].state == "Tell"
+    assert run.status == "SUCCEEDED"            # failure branch handled it
+
+
+def test_missing_scope_fails_action():
+    sys_ = _system_with_dataset(1)
+    tok = sys_.auth.issue("limited", [SCOPE_FLOWS])   # no transfer scope
+    fid = sys_.flows.deploy({
+        "StartAt": "T",
+        "States": {"T": {"Provider": "transfer",
+                         "Parameters": {"src": "slac", "dst": "alcf",
+                                        "names": ["d0"]},
+                         "End": True}},
+    })
+    run = sys_.flows.run(fid, {}, tok)
+    assert run.status == "FAILED"
+    assert "lacks scope" in run.log[0].error
+
+
+def test_parameter_references_resolve_across_states():
+    sys_ = _system_with_dataset(2)
+    tok = sys_.user_token()
+
+    class Echo(ActionProvider):
+        name = "echo"
+        required_scope = SCOPE_FLOWS
+
+        def run(self, params, ctx):
+            return {"value": params["value"]}
+
+    sys_.flows.providers["echo"] = Echo()
+    fid = sys_.flows.deploy({
+        "StartAt": "A",
+        "States": {
+            "A": {"Provider": "echo", "Parameters": {"value": "$.input.x"},
+                  "Next": "B"},
+            "B": {"Provider": "echo",
+                  "Parameters": {"value": "$.results.A.value"},
+                  "End": True},
+        },
+    })
+    run = sys_.flows.run(fid, {"x": 42}, tok)
+    assert run.output["B"]["value"] == 42

@@ -1,0 +1,77 @@
+"""funcX fabric + hybrid clock semantics."""
+import time
+
+import pytest
+
+from repro.core import build_system
+from repro.core.simclock import SimClock
+
+
+def test_clock_kinds_and_breakdown():
+    c = SimClock()
+    c.advance(2.0, "wan", "sim")
+    c.charge(19.0, "dcai train")
+    with c.measure("real step"):
+        time.sleep(0.01)
+    br = c.breakdown()
+    assert br["sim"] == pytest.approx(2.0)
+    assert br["modeled"] == pytest.approx(19.0)
+    assert br["real"] >= 0.01
+    assert br["total"] == pytest.approx(sum(
+        (br["sim"], br["modeled"], br["real"])))
+    tl = c.timeline()
+    assert [e[1] for e in tl] == ["sim", "modeled", "real"]
+    assert tl[1][0] == pytest.approx(2.0)      # started after the WAN advance
+
+
+def test_clock_rejects_negative():
+    c = SimClock()
+    with pytest.raises(AssertionError):
+        c.advance(-1.0)
+
+
+def test_funcx_real_vs_modeled_endpoints():
+    sys_ = build_system()
+
+    def work(x):
+        time.sleep(0.02)
+        return x * 2
+
+    fid = sys_.funcx.register_function(work)
+    ep_real = sys_.funcx.register_endpoint("local-v100", mode="real")
+    ep_model = sys_.funcx.register_endpoint("cerebras", mode="modeled")
+
+    r1 = sys_.funcx.run(ep_real, fid, 21)
+    assert r1.result == 42 and r1.mode == "real"
+    assert r1.duration >= 0.02
+
+    r2 = sys_.funcx.run(ep_model, fid, 21, modeled_duration=19.0)
+    assert r2.result == 42 and r2.mode == "modeled"
+    assert r2.duration == pytest.approx(19.0)
+
+    br = sys_.clock.breakdown()
+    assert br["modeled"] == pytest.approx(19.0)
+    # service overhead charged for both invocations
+    assert br["sim"] >= r1.overhead + r2.overhead - 1e-6
+
+
+def test_funcx_speedup_scaling():
+    sys_ = build_system()
+
+    def work():
+        time.sleep(0.05)
+        return "ok"
+
+    fid = sys_.funcx.register_function(work)
+    ep = sys_.funcx.register_endpoint("cerebras", mode="modeled",
+                                      speedup_vs_host=50.0)
+    r = sys_.funcx.run(ep, fid)
+    # modeled duration = wall / speedup
+    assert r.duration < 0.05
+    assert r.duration == pytest.approx(0.05 / 50.0, rel=0.5)
+
+
+def test_unknown_endpoint_or_function_raises():
+    sys_ = build_system()
+    with pytest.raises(KeyError):
+        sys_.funcx.run("nope", "also-nope")

@@ -1,0 +1,78 @@
+"""Loop-aware HLO collective accounting (roofline/hlo_parse.py)."""
+import pytest
+
+from repro.roofline import hlo_parse as hp
+
+HLO = """
+HloModule jit_step
+
+%cond_inner (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %bound = s32[] constant(4)
+  ROOT %lt = pred[] compare(%iv, %bound), direction=LT
+}
+
+%body_inner (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8]{0} get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(%x), to_apply=%add
+  ROOT %t = (s32[], f32[8]) tuple(%iv2, %ar)
+}
+
+%cond_outer (q: (s32[], f32[8])) -> pred[] {
+  %q = (s32[], f32[8]) parameter(0)
+  %iv = s32[] get-tuple-element(%q), index=0
+  %bound = s32[] constant(3)
+  ROOT %lt = pred[] compare(%iv, %bound), direction=LT
+}
+
+%body_outer (q: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %q = (s32[], f32[8]) parameter(0)
+  %w = (s32[], f32[8]) while(%q), condition=%cond_inner, body=%body_inner
+  %y = f32[16]{0} all-gather(%x2), dimensions={0}
+  ROOT %t = (s32[], f32[8]) tuple(%iv3, %x3)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %w0 = (s32[], f32[8]) while(%init), condition=%cond_outer, body=%body_outer
+  %final = f32[32]{0} all-reduce(%z), to_apply=%add
+  ROOT %r = f32[8]{0} get-tuple-element(%w0), index=1
+}
+"""
+
+
+def test_flat_counts_bodies_once():
+    flat = hp.collective_bytes(HLO)
+    # one all-reduce in inner body (32B) + entry (128B); one all-gather (64B)
+    assert flat["all-reduce"]["bytes"] == 8 * 4 + 32 * 4
+    assert flat["all-gather"]["bytes"] == 16 * 4
+
+
+def test_loop_aware_multiplies_by_trip_counts():
+    aware = hp.collective_bytes_loop_aware(HLO, entry_hint="main")
+    # inner all-reduce: 8*4 bytes x 4 inner trips x 3 outer trips = 384
+    # entry all-reduce: 128
+    assert aware["all-reduce"]["bytes"] == 8 * 4 * 4 * 3 + 32 * 4
+    # outer-body all-gather: 64 x 3 trips
+    assert aware["all-gather"]["bytes"] == 16 * 4 * 3
+
+
+def test_trip_count_extraction():
+    comps = hp._split_computations(HLO)
+    assert hp._trip_count(comps["cond_inner"]) == 4
+    assert hp._trip_count(comps["cond_outer"]) == 3
+    assert hp._trip_count("no constants here") == 1
+
+
+def test_start_done_not_double_counted():
+    hlo = """
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %s = f32[64]{0} all-gather-start(%a), dimensions={0}
+  %d = f32[64]{0} all-gather-done(%s)
+}
+"""
+    flat = hp.collective_bytes(hlo)
+    assert flat["all-gather"]["count"] == 1
+    assert flat["all-gather"]["bytes"] == 64 * 4

@@ -1,0 +1,69 @@
+"""Pseudo-Voigt kernel vs oracle + hypothesis property: center recovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import pseudo_voigt_reference, pv_profile
+
+
+def _patches(key, n, cy, cx, g, amp=100.0, noise=0.5, p=11):
+    yy, xx = jnp.mgrid[0:p, 0:p]
+
+    def mk(cy_, cx_, g_):
+        return pv_profile(yy - cy_, g_) * pv_profile(xx - cx_, g_)
+
+    img = jax.vmap(mk)(cy, cx, g) * amp
+    return img + noise * jax.random.normal(key, img.shape)
+
+
+def test_kernel_matches_reference(key):
+    ks = jax.random.split(key, 4)
+    n = 96
+    cy = jax.random.uniform(ks[0], (n,), minval=3.0, maxval=8.0)
+    cx = jax.random.uniform(ks[1], (n,), minval=3.0, maxval=8.0)
+    g = jax.random.uniform(ks[2], (n,), minval=0.8, maxval=1.8)
+    patches = _patches(ks[3], n, cy, cx, g)
+    out_k = ops.pseudo_voigt_fit(patches, block=32, interpret=True)
+    out_r = pseudo_voigt_reference(patches)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cy=st.floats(3.5, 7.5), cx=st.floats(3.5, 7.5),
+    gamma=st.floats(0.8, 1.6), amp=st.floats(20.0, 300.0),
+)
+def test_center_recovery_property(cy, cx, gamma, amp):
+    """For any clean pseudo-Voigt peak the fitter recovers its center."""
+    key = jax.random.PRNGKey(int(cy * 1000) ^ int(cx * 917))
+    patches = _patches(key, 1, jnp.array([cy]), jnp.array([cx]),
+                       jnp.array([gamma]), amp=amp, noise=0.0)
+    fit = ops.pseudo_voigt_fit(patches, block=8, interpret=True)
+    assert abs(float(fit[0, 0]) - cy) < 0.05
+    assert abs(float(fit[0, 1]) - cx) < 0.05
+    assert float(fit[0, 2]) > 0
+
+
+def test_padding_path(key):
+    patches = _patches(key, 7, jnp.full((7,), 5.0), jnp.full((7,), 5.0),
+                       jnp.full((7,), 1.2))
+    out = ops.pseudo_voigt_fit(patches, block=8, interpret=True)
+    assert out.shape == (7, 6)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_analysis_op_labels(key):
+    """analysis.label_for_braggnn produces normalized centers in [0,1]."""
+    from repro.analysis import label_for_braggnn
+    from repro.data.synthetic import bragg_patches
+    d = bragg_patches(key, 32)
+    labels = label_for_braggnn(d["patches"])
+    assert labels.shape == (32, 2)
+    a = np.asarray(labels)
+    assert a.min() >= 0.0 and a.max() <= 1.0
+    # labels should be close to the ground-truth centers
+    assert float(jnp.abs(labels - d["centers"]).mean()) < 0.05

@@ -1,0 +1,155 @@
+"""Paper future-work #3: A||T overlap — cost model + real pipelined run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_system
+from repro.core.pipeline_flow import run_overlapped_label_train
+from repro.core.transfer import FileRef
+
+
+def test_costmodel_pipelined_beats_serial():
+    cm = build_system().costmodel
+    n = 10**8
+    serial = cm.f_ml(n, p=0.1)
+    pipe = cm.f_ml_pipelined(n, p=0.1)
+    assert pipe.total < serial.total
+    # saving is bounded by min(label, train)
+    label = serial.breakdown["label"]
+    train = serial.breakdown["train"]
+    assert serial.total - pipe.total <= min(label, train) + 1e-6
+
+
+def test_costmodel_pipelined_converges_to_max():
+    cm = build_system().costmodel
+    n = 10**8
+    a = cm.f_ml_pipelined(n, p=0.1, n_microbatches=10**6)
+    serial = cm.f_ml(n, p=0.1)
+    label = serial.breakdown["label"]
+    train = serial.breakdown["train"]
+    expect = serial.total - (label + train) + max(label, train)
+    assert a.total == pytest.approx(expect, rel=1e-3)
+
+
+def test_real_overlapped_pipeline_trains_and_saves_time(key):
+    from repro.analysis import label_for_braggnn
+    from repro.configs import BraggNNConfig
+    from repro.data.synthetic import bragg_patches
+    from repro.models import braggnn
+    from repro.optim import adam
+
+    sys_ = build_system()
+    cfg = BraggNNConfig()
+    d = bragg_patches(key, 512)
+    sys_.store.put("alcf", FileRef("scan.h5", 1, payload={
+        "patches": d["patches"]}))
+
+    opt = adam(1e-3)
+
+    def train_init():
+        params = braggnn.init_params(key, cfg)
+        return {"params": params, "opt": opt.init(params)}
+
+    @jax.jit
+    def _step(params, opt_state, batch):
+        (l, _), g = jax.value_and_grad(
+            lambda p: braggnn.loss_fn(p, batch, cfg), has_aux=True)(params)
+        p2, o2 = opt.update(g, opt_state, params)
+        return p2, o2, l
+
+    def train_shard(state, shard, labels):
+        p, o, l = _step(state["params"], state["opt"],
+                        {"patches": shard["patches"], "centers": labels})
+        return {"params": p, "opt": o}, {"loss": float(l)}
+
+    res = run_overlapped_label_train(
+        sys_, dataset_facility="alcf", dataset_name="scan.h5",
+        label_fn=lambda s: label_for_braggnn(s["patches"]),
+        train_init_fn=train_init, train_shard_fn=train_shard, n_shards=4)
+
+    assert res["metrics"]["loss"] > 0
+    assert res["pipelined_s"] < res["serial_s"]
+    assert res["saving_s"] > 0
+    assert sys_.store.exists("alcf", "model.npz")
+    # the clock was charged the pipelined time, not the serial time
+    assert sys_.clock.breakdown()["real"] == pytest.approx(
+        res["pipelined_s"], rel=1e-6)
+
+
+def test_data_repository_augmentation():
+    """Future-work #2: prior labeled datasets augment a new experiment."""
+    from repro.core.registry import DataRepository
+
+    repo = DataRepository()
+    repo.register("hedm-ni-alloy", FileRef("scan1", 1000),
+                  metadata={"detector": "GE", "energy_kev": 80})
+    repo.register("hedm-ni-alloy", FileRef("scan2", 2000),
+                  metadata={"detector": "GE", "energy_kev": 60})
+    repo.register("hedm-ni-alloy", FileRef("scan3-raw", 4000), labeled=False)
+    repo.register("ptycho", FileRef("other", 9000))
+
+    all_labeled = repo.augment_for("hedm-ni-alloy")
+    assert [e["artifact"].name for e in all_labeled] == ["scan1", "scan2"]
+    ge80 = repo.augment_for("hedm-ni-alloy", match={"energy_kev": 80})
+    assert len(ge80) == 1 and ge80[0]["artifact"].name == "scan1"
+    with_raw = repo.augment_for("hedm-ni-alloy", labeled_only=False)
+    assert len(with_raw) == 3
+    assert repo.total_bytes("hedm-ni-alloy") == 7000
+
+
+def test_overlap_as_flow_action(key):
+    """The A||T overlap runs as a first-class Flows action provider."""
+    import jax
+    from repro.analysis import label_for_braggnn
+    from repro.configs import BraggNNConfig
+    from repro.data.synthetic import bragg_patches
+    from repro.models import braggnn
+    from repro.optim import adam
+
+    sys_ = build_system()
+    tok = sys_.user_token()
+    cfg = BraggNNConfig()
+    d = bragg_patches(key, 256)
+    sys_.store.put("alcf", FileRef("scan.h5", 1,
+                                   payload={"patches": d["patches"]}))
+
+    opt = adam(1e-3)
+    lid = sys_.funcx.register_function(
+        lambda s: label_for_braggnn(s["patches"]), "label")
+    iid = sys_.funcx.register_function(
+        lambda: {"params": braggnn.init_params(jax.random.PRNGKey(0), cfg),
+                 "opt": opt.init(braggnn.init_params(
+                     jax.random.PRNGKey(0), cfg))}, "init")
+
+    def shard_step(state, shard, labels):
+        (l, _), g = jax.value_and_grad(
+            lambda p: braggnn.loss_fn(
+                p, {"patches": shard["patches"], "centers": labels}, cfg),
+            has_aux=True)(state["params"])
+        p2, o2 = opt.update(g, state["opt"], state["params"])
+        return {"params": p2, "opt": o2}, {"loss": float(l)}
+
+    sid = sys_.funcx.register_function(shard_step, "shard")
+
+    flow_id = sys_.flows.deploy({
+        "StartAt": "OverlapTrain",
+        "States": {
+            "OverlapTrain": {
+                "Provider": "overlap_label_train",
+                "Parameters": {
+                    "facility": "alcf", "dataset_name": "scan.h5",
+                    "label_function": lid,
+                    "train_init_function": iid,
+                    "train_shard_function": sid,
+                    "n_shards": 4, "artifact_name": "m.npz",
+                },
+                "End": True,
+            },
+        },
+    })
+    run = sys_.flows.run(flow_id, {}, tok)
+    assert run.status == "SUCCEEDED", run.log[0].error
+    out = run.output["OverlapTrain"]
+    assert out["saving_s"] > 0
+    assert out["pipelined_s"] < out["serial_s"]
+    assert sys_.store.exists("alcf", "m.npz")

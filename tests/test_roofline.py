@@ -1,0 +1,85 @@
+"""Roofline machinery: analytic accounting vs compiled cost_analysis on
+loop-free configs; HLO collective parser; term arithmetic."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import InputShape
+from repro.launch import specs as specs_lib
+from repro.launch.dryrun import moe_active_params
+from repro.models import build_model
+from repro.roofline import analytic, hlo_parse
+from repro.roofline.analysis import RooflineTerms
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,tol", [
+    ("starcoder2-7b", 0.10), ("gemma-7b", 0.10),
+    ("qwen3-moe-235b-a22b", 0.25),
+])
+def test_analytic_flops_match_compiled_loop_free(arch, tol):
+    """1-layer, short-seq (full attention), no-remat configs have no loops,
+    so cost_analysis is trustworthy there — analytic must agree."""
+    cfg0 = get_config(arch)
+    cfg = dataclasses.replace(cfg0, n_layers=1, vocab_size=2048)
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, first_dense_layers=0))
+    shape = InputShape("tiny_train", 256, 2, "train")
+    api = build_model(cfg)
+    params_sds = specs_lib.abstract_params(api)
+    step, opt = specs_lib.make_train_step_fn(api, shape, remat=False)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    batch_sds = specs_lib.batch_abstract(cfg, shape)
+    compiled = jax.jit(step).lower(params_sds, opt_sds, batch_sds).compile()
+    flops_hlo = compiled.cost_analysis()["flops"]
+
+    n_tot = sum(int(l.size) for l in jax.tree.leaves(params_sds))
+    n_act = moe_active_params(cfg, params_sds)
+    acct = analytic.step_account(cfg, shape, window=0, n_params_total=n_tot,
+                                 n_params_active=n_act, remat=False)
+    rel = abs(acct["flops"] - flops_hlo) / flops_hlo
+    assert rel < tol, (arch, acct["flops"], flops_hlo)
+
+
+# ---------------------------------------------------------------------------
+HLO_SAMPLE = """
+HloModule test
+ENTRY %main {
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %x), replica_groups={}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(f32[16,64]{1,0} %z), dimensions={0}
+  %a2a = (bf16[4,4]{1,0}) all-to-all(bf16[4,4]{1,0} %w)
+  %cp = u32[10]{0} collective-permute(u32[10]{0} %v)
+}
+"""
+
+
+def test_collective_parser_counts_and_bytes():
+    info = hlo_parse.collective_bytes(HLO_SAMPLE)
+    assert info["all-gather"]["count"] == 1
+    assert info["all-gather"]["bytes"] == 8 * 128 * 2
+    assert info["all-reduce"]["bytes"] == 256 * 4
+    assert info["reduce-scatter"]["bytes"] == 2 * 64 * 4
+    assert info["all-to-all"]["bytes"] == 4 * 4 * 2
+    assert info["collective-permute"]["bytes"] == 10 * 4
+    total = hlo_parse.total_collective_bytes(HLO_SAMPLE)
+    assert total == sum(v["bytes"] for v in info.values())
+
+
+def test_roofline_term_arithmetic():
+    t = RooflineTerms(arch="a", shape="s", mesh="m", n_chips=256,
+                      hlo_flops=256 * 197e12,      # exactly 1s of compute
+                      hlo_bytes=256 * 819e9 * 0.5,  # 0.5s of HBM
+                      collective_bytes_per_dev=50e9 * 0.25,  # 0.25s of ICI
+                      model_flops=256 * 197e12 * 0.6)
+    assert t.compute_term == pytest.approx(1.0)
+    assert t.memory_term == pytest.approx(0.5)
+    assert t.collective_term == pytest.approx(0.25)
+    assert t.dominant == "compute"
+    assert t.mfu_upper_bound == pytest.approx(0.6)
+    assert t.useful_flops_ratio == pytest.approx(0.6)

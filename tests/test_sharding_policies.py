@@ -1,0 +1,90 @@
+"""§Perf sharding policies: divisibility safety + intent."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding as sh
+from repro.launch import specs as specs_lib
+from repro.models import build_model
+
+AXES = {"data": 16, "model": 16}
+AXES_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+def _prod(entry, axes):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= axes[a]
+        return n
+    return axes[entry]
+
+
+@pytest.mark.parametrize("policy", ["replicated", "local_recurrent",
+                                    "fsdp_flat"])
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "whisper-base",
+                                  "qwen3-moe-235b-a22b"])
+def test_policy_specs_divisible(arch, policy):
+    cfg = get_config(arch)
+    api = build_model(cfg)
+    tree = specs_lib.abstract_params(api)
+    specs = sh.param_specs(tree, AXES_MP, data_axes=("pod", "data"),
+                           policy=policy)
+    for leaf, spec in zip(
+            jax.tree.leaves(tree),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for d, s in zip(leaf.shape, spec):
+            assert d % _prod(s, AXES_MP) == 0, (arch, policy, leaf.shape,
+                                                spec)
+
+
+def test_replicated_policy_replicates_everything():
+    cfg = get_config("whisper-base")
+    api = build_model(cfg)
+    tree = specs_lib.abstract_params(api)
+    specs = sh.param_specs(tree, AXES, policy="replicated")
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert all(s is None for s in spec)
+
+
+def test_fsdp_flat_shards_exactly_one_dim_of_big_leaves():
+    cfg = get_config("xlstm-1.3b")
+    api = build_model(cfg)
+    tree = specs_lib.abstract_params(api)
+    specs = sh.param_specs(tree, AXES, policy="fsdp_flat")
+    n_sharded = 0
+    for leaf, spec in zip(
+            jax.tree.leaves(tree),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        sharded_dims = [s for s in spec if s is not None]
+        assert len(sharded_dims) <= 1
+        if leaf.size >= (1 << 23):
+            assert len(sharded_dims) == 1, (leaf.shape, spec)
+            n_sharded += 1
+        else:
+            assert len(sharded_dims) == 0    # small leaves replicated
+    assert n_sharded > 0
+
+
+def test_constrain_noop_without_mesh(key):
+    import jax.numpy as jnp
+    from repro.models.common import constrain
+    x = jnp.ones((8, 4))
+    y = constrain(x, "batch", "model")
+    assert (y == x).all()
+
+
+def test_constrain_respects_divisibility():
+    import jax.numpy as jnp
+    from repro.models.common import constrain
+    n = len(jax.devices())
+    mesh = jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with jax.set_mesh(mesh):
+        # 7 doesn't divide the model axis unless n == 1 or 7
+        out = jax.jit(lambda x: constrain(x, "batch", "model"))(
+            jnp.ones((2, 7)))
+        assert out.shape == (2, 7)

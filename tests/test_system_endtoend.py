@@ -1,0 +1,97 @@
+"""End-to-end reproduction of the paper's evaluation logic (Table 1):
+running the full distributed workflow with REAL local training and the
+paper-calibrated remote model must show remote DCAI >> local turnaround."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import build_system, dnn_trainer_flow
+from repro.core.transfer import FileRef
+
+
+def _register_real_braggnn_training(sys_, steps=8):
+    """A real (tiny) BraggNN training function, runnable on any endpoint."""
+    import jax.numpy as jnp
+    from repro.configs import BraggNNConfig
+    from repro.data.synthetic import bragg_patches
+    from repro.models import braggnn
+    from repro.optim import adam
+
+    def train_braggnn():
+        cfg = BraggNNConfig()
+        key = jax.random.PRNGKey(0)
+        params = braggnn.init_params(key, cfg)
+        opt = adam(1e-3)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(p, s, batch):
+            (l, _), g = jax.value_and_grad(
+                lambda p_: braggnn.loss_fn(p_, batch, cfg),
+                has_aux=True)(p)
+            p2, s2 = opt.update(g, s, p)
+            return p2, s2, l
+
+        for i in range(steps):
+            d = bragg_patches(jax.random.fold_in(key, i), 32)
+            params, state, loss = step(
+                params, state, {"patches": d["patches"],
+                                "centers": d["centers"]})
+        sys_.store.put("alcf", FileRef("braggnn.npz", 3_000_000,
+                                       payload=params))
+        return {"final_loss": float(loss)}
+
+    return sys_.funcx.register_function(train_braggnn)
+
+
+@pytest.mark.slow
+def test_remote_dcai_beats_local_turnaround():
+    # --- remote scenario: workflow over WAN to the DCAI system ------------
+    remote = build_system()
+    tok = remote.user_token()
+    for i in range(10):
+        remote.store.put("slac", FileRef(f"d{i}.h5", 50_000_000))
+    fid = _register_real_braggnn_training(remote)
+    # Cerebras endpoint: modeled with the paper's measured 19 s
+    eid = remote.funcx.register_endpoint("cerebras", mode="modeled")
+    flow = remote.flows.deploy(dnn_trainer_flow())
+    run = remote.flows.run(flow, {
+        "src": "slac", "dc": "alcf",
+        "dataset": [f"d{i}.h5" for i in range(10)],
+        "train_endpoint": eid, "train_function": fid,
+        "train_args": [], "train_kwargs": {}, "modeled_duration": 19.0,
+        "model_artifacts": ["braggnn.npz"], "model_name": "braggnn.npz",
+        "register_as": "braggnn", "version_tag": "exp-001", "metrics": {},
+    }, tok)
+    assert run.status == "SUCCEEDED"
+    remote_turnaround = run.turnaround
+
+    # --- local scenario: same training on the local V100 (paper: 1102 s) --
+    local = build_system()
+    local_fid = _register_real_braggnn_training(local)
+    local_eid = local.funcx.register_endpoint("local-v100", mode="modeled")
+    tr = local.funcx.run(local_eid, local_fid, modeled_duration=1102.0)
+    local_turnaround = tr.duration + tr.overhead
+
+    # the paper's headline claim: remote is > 30x faster despite WAN costs
+    assert remote_turnaround < local_turnaround / 30.0
+    # and WAN+service overhead is a real, visible share of remote end-to-end
+    br = remote.clock.breakdown()
+    assert br["sim"] > 1.0
+    assert br["modeled"] == pytest.approx(19.0)
+    # the trained model really exists at the edge with real trained weights
+    entry = remote.repo.latest("braggnn")
+    assert entry.artifact.payload is not None
+
+
+def test_model_repository_foundation_selection():
+    """Future-work #1: best_foundation picks the best prior version."""
+    sys_ = build_system()
+    for i, vl in enumerate([0.5, 0.2, 0.3]):
+        sys_.store.put("slac", FileRef(f"m{i}", 1000))
+        sys_.repo.register("net", f"v{i}",
+                           sys_.store.get("slac", f"m{i}"),
+                           metrics={"val_loss": vl})
+    best = sys_.repo.best_foundation("net", "val_loss")
+    assert best.version == 2
+    assert best.metrics["val_loss"] == 0.2

@@ -1,0 +1,64 @@
+"""Transfer service: the paper's linear model + Fig-3 concurrency curve."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_system
+from repro.core.facility import paper_topology
+from repro.core.transfer import FileRef
+
+
+def test_linear_model_components():
+    sys_ = build_system()
+    # T = x/v + S: doubling bytes roughly doubles the bandwidth part
+    t1 = sys_.transfer.duration_model("slac", "alcf", 10**9, 1)
+    t2 = sys_.transfer.duration_model("slac", "alcf", 2 * 10**9, 1)
+    link = sys_.topo.link("slac", "alcf")
+    v = link.effective_rate(1)
+    assert abs((t2 - t1) - 10**9 / v) < 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(c1=st.integers(1, 16), c2=st.integers(1, 16))
+def test_throughput_monotonic_in_concurrency(c1, c2):
+    """Fig. 3 property: more concurrency never reduces effective rate."""
+    link = paper_topology().link("slac", "alcf")
+    lo, hi = min(c1, c2), max(c1, c2)
+    assert link.effective_rate(lo) <= link.effective_rate(hi) + 1e-9
+
+
+def test_fig3_saturates_above_1GBps():
+    """Paper: 'more than 1 GB/s when transferring multiple files'."""
+    link = paper_topology().link("slac", "alcf")
+    assert link.effective_rate(16) > 1e9
+    assert link.effective_rate(1) < 0.5e9
+
+
+def test_transfer_moves_payload_and_charges_clock():
+    sys_ = build_system()
+    sys_.store.put("slac", FileRef("a", 100_000_000, payload=b"x"))
+    t0 = sys_.clock.now
+    rec = sys_.transfer.submit("slac", "alcf", ["a"])
+    assert sys_.store.exists("alcf", "a")
+    assert sys_.store.get("alcf", "a").payload == b"x"
+    assert sys_.clock.now - t0 == pytest.approx(rec.duration)
+
+
+def test_fault_injection_retries_and_still_delivers():
+    sys_ = build_system(fault_rate=0.5, seed=42)
+    sys_.store.put("slac", FileRef("a", 50_000_000))
+    recs = [sys_.transfer.submit("slac", "alcf", ["a"]) for _ in range(10)]
+    assert any(r.retries > 0 for r in recs)     # faults occurred
+    assert all(r.duration > 0 for r in recs)    # and were recovered
+    clean = build_system(fault_rate=0.0)
+    clean.store.put("slac", FileRef("a", 50_000_000))
+    base = clean.transfer.submit("slac", "alcf", ["a"])
+    retried = [r for r in recs if r.retries > 0]
+    assert all(r.duration > base.duration for r in retried)
+
+
+def test_intra_facility_transfer_is_cheap():
+    sys_ = build_system()
+    sys_.store.put("slac", FileRef("a", 10**9))
+    rec = sys_.transfer.submit("slac", "slac", ["a"])
+    assert rec.duration < 0.5
