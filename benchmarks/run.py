@@ -16,12 +16,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_fig3, bench_fig4, bench_kernels,
-                            bench_moe_impls, bench_table1)
+                            bench_moe_impls, bench_serving, bench_table1)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_table1, bench_fig3, bench_fig4, bench_kernels,
-                bench_moe_impls):
+                bench_moe_impls, bench_serving):
         try:
             for row in mod.run():
                 print(row)

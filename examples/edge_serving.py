@@ -3,8 +3,9 @@
 1. BraggNN via BatchEngine — the paper's edge-AI inference (stateless,
    dynamic micro-batching with padded compiled shapes).
 2. An LLM (smoke-size gemma) via DecodeEngine — continuous batching over a
-   KV-cache slot grid, demonstrating the serving substrate the decode input
-   shapes (decode_32k / long_500k) exercise at production scale.
+   paged KV cache (block pool + block tables + token-budget scheduler),
+   demonstrating the serving substrate the decode input shapes
+   (decode_32k / long_500k) exercise at production scale.
 
 Run: PYTHONPATH=src python examples/edge_serving.py
 """
@@ -53,9 +54,10 @@ def serve_llm() -> None:
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     assert len(done) == 10
-    print(f"LLM DecodeEngine: {len(done)} requests, "
+    print(f"LLM {type(eng).__name__}: {len(done)} requests, "
           f"{eng.tokens_decoded} tokens in {eng.steps} engine steps "
           f"({eng.tokens_decoded / dt:.1f} tok/s incl. compile)")
+    print(f"  stats: {eng.stats()}")
 
 
 if __name__ == "__main__":

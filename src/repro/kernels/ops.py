@@ -55,6 +55,44 @@ def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, ctx_lens: jax.Array, *,
+                    window: int = 0,
+                    use_kernel: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Decode-time paged attention read: q (B, 1, H, D) or (B, H, D)
+    against KV pools (num_blocks, bs, Hkv, D) via per-lane block tables.
+
+    Backend dispatch: on TPU the Pallas kernel gathers blocks through its
+    scalar-prefetched index maps; on CPU the pure-JAX reference (an XLA
+    gather + masked softmax) is the production path — interpret-mode Pallas
+    is far too slow for a per-token serving loop.
+    """
+    from repro.kernels import paged_attention as _pa
+    from repro.kernels import ref as _ref
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        B, H, D = q.shape
+        Hkv = k_pool.shape[2]
+        qg = q.reshape(B, Hkv, H // Hkv, D)
+        out = _pa.paged_attention(qg, k_pool, v_pool, block_tables,
+                                  ctx_lens, window=window,
+                                  interpret=interpret)
+        out = out.reshape(B, H, D)
+    else:
+        out = _ref.paged_attention_reference(q, k_pool, v_pool,
+                                             block_tables, ctx_lens,
+                                             window=window)
+    return out[:, None] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
 def ssd_scan_heads(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                    Cm: jax.Array, *, chunk: int = 128,
                    interpret: Optional[bool] = None) -> jax.Array:

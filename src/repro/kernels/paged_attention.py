@@ -1,0 +1,122 @@
+"""Pallas TPU paged-attention (decode) kernel.
+
+One query token per lane attends over its KV sequence scattered across
+fixed-size physical blocks of a shared pool.  The gather is expressed in
+the BlockSpec index maps: the per-lane block table is a *scalar-prefetch*
+operand (``pltpu.PrefetchScalarGridSpec``), so the j-th kv DMA of lane b
+fetches physical block ``block_tables[b, j]`` directly from the pool — no
+materialized (B, S, ...) gather ever exists in HBM.
+
+Schedule:
+  * grid = (batch_lane, kv_head, logical_block); the trailing axis runs
+    sequentially on a TPU core, carrying the online-softmax state (m, l,
+    acc) for one lane/head across that lane's blocks in VMEM scratch;
+  * blocks at or past the lane's context length are skipped with
+    ``pl.when`` (their DMA still targets a legal pool slot — idle table
+    entries point at the reserved null block 0);
+  * GQA: all G = H/Hkv query heads of a kv head ride in one (G, D) tile.
+
+Validated in interpret mode against ``ref.paged_attention_reference``
+(tests/test_kernels_paged_attention.py); the pure-JAX reference is also the
+production CPU path (kernels/ops.py dispatches on backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, block_size: int,
+                       window: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)          # logical block index within lane b
+    nblk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = ctx_ref[b]              # valid tokens in lane b; query at ctx - 1
+
+    @pl.when(j * block_size < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
+        v = v_ref[0, :, 0]                               # (bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, bs)
+        kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 1)
+        mask = kpos < ctx
+        if window:
+            mask &= (ctx - 1 - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, D)
+        m_scr[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, ctx_lens: jax.Array, *,
+                    window: int = 0, interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, D); pools: (num_blocks, bs, Hkv, D);
+    block_tables: (B, max_blocks) int32 physical ids (null block = 0 for
+    unallocated logical blocks); ctx_lens: (B,) int32.
+    Returns (B, Hkv, G, D)."""
+    B, Hkv, G, D = q.shape
+    num_blocks, bs, Hkv_p, _ = k_pool.shape
+    assert Hkv_p == Hkv, (Hkv_p, Hkv)
+    max_blocks = block_tables.shape[1]
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(_paged_attn_kernel, block_size=bs,
+                               window=window, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, tables, ctx: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tables, ctx: (tables[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tables, ctx: (tables[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, tables, ctx: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # m
+            pltpu.VMEM((G, 1), jnp.float32),   # l
+            pltpu.VMEM((G, D), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
+      q, k_pool, v_pool)

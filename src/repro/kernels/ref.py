@@ -36,6 +36,43 @@ def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# paged_attention oracle — gather blocks, then plain masked softmax.
+# Also the production CPU decode path (ops.paged_attention dispatches here),
+# so its numerics deliberately mirror models/layers.py::decode_attention
+# (scores einsum in input dtype then cast, weights back in q.dtype): a paged
+# lane and a dense slot lane produce bit-identical logits.
+# ---------------------------------------------------------------------------
+def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, block_tables: jax.Array,
+                              ctx_lens: jax.Array, *,
+                              window: int = 0) -> jax.Array:
+    """q: (B, H, D) one query token per lane; pools: (num_blocks, bs, Hkv, D);
+    block_tables: (B, max_blocks) int32; ctx_lens: (B,).  Returns (B, H, D).
+
+    Logical kv position t of lane b lives in physical block
+    ``block_tables[b, t // bs]`` at offset ``t % bs``; positions at or past
+    ``ctx_lens[b]`` (and outside the sliding window) are masked out.
+    """
+    B, H, D = q.shape
+    _, bs, Hkv, _ = k_pool.shape
+    max_blocks = block_tables.shape[1]
+    G = H // Hkv
+    k = k_pool[block_tables].reshape(B, max_blocks * bs, Hkv, D)
+    v = v_pool[block_tables].reshape(B, max_blocks * bs, Hkv, D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+    s = s / (D ** 0.5)
+    kpos = jnp.arange(max_blocks * bs)[None, :]
+    valid = kpos < ctx_lens[:, None]
+    if window:
+        valid &= (ctx_lens[:, None] - 1 - kpos) < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
 # ssd_scan oracle — direct (non-chunked) linear recurrence
 # ---------------------------------------------------------------------------
 def ssd_reference(xdt: jax.Array, dA: jax.Array, Bm: jax.Array,

@@ -155,6 +155,8 @@ def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     # ---- analyses ---------------------------------------------------------
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # jax < 0.5: one dict per device
+        ca = ca[0] if ca else {}
     cost = {k: float(v) for k, v in ca.items()
             if isinstance(v, (int, float)) and k in
             ("flops", "bytes accessed", "transcendentals",

@@ -8,23 +8,32 @@ from __future__ import annotations
 from typing import Dict, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # jax < 0.5 has no explicit-sharding axis types
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (CPU tests / single host)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((n // model_parallel, model_parallel),
+                      ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> Dict[str, int]:

@@ -1,8 +1,9 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Spins up the DecodeEngine (continuous batching over a slot grid) on a smoke
-variant of the arch and runs a batch of synthetic requests through it —
-the edge-side "E" operation as a real process.
+Spins up the DecodeEngine — paged-KV continuous batching for transformer
+families, dense-slot fallback for recurrent ones — on a smoke variant of
+the arch and runs a batch of synthetic requests through it — the edge-side
+"E" operation as a real process.
 """
 from __future__ import annotations
 
@@ -25,6 +26,14 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per physical KV block (paged engine)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="physical KV pool size; 0 = dense-equivalent")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="max tokens per engine step; 0 = unlimited")
+    ap.add_argument("--engine", choices=["auto", "paged", "slot"],
+                    default="auto")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -35,8 +44,14 @@ def main() -> None:
     params = api.init(jax.random.PRNGKey(0))
 
     window = api.effective_window(args.cache_len)
-    eng = DecodeEngine(api, params, n_slots=args.slots,
-                       cache_len=args.cache_len, window=window)
+    paged = None if args.engine == "auto" else (args.engine == "paged")
+    kw = {}
+    if paged is not False and (paged or api.supports_paged):
+        kw = {"block_size": args.block_size,
+              "num_blocks": args.num_blocks or None,
+              "token_budget": args.token_budget}
+    eng = DecodeEngine(api, params, paged=paged, n_slots=args.slots,
+                       cache_len=args.cache_len, window=window, **kw)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for _ in range(args.requests):
@@ -45,9 +60,11 @@ def main() -> None:
         eng.submit(prompt, args.max_new)
     finished = eng.run_until_drained()
     dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} requests={len(finished)} "
-          f"engine_steps={eng.steps} tokens={eng.tokens_decoded} "
+    print(f"arch={cfg.name} engine={type(eng).__name__} "
+          f"requests={len(finished)} engine_steps={eng.steps} "
+          f"tokens={eng.tokens_decoded} "
           f"({eng.tokens_decoded / dt:.1f} tok/s incl. compile)")
+    print(f"  stats: {eng.stats()}")
     for r in finished[:3]:
         print(f"  req {r.request_id}: {len(r.generated)} tokens, "
               f"first 8 = {r.generated[:8]}")

@@ -277,7 +277,8 @@ def to_named(tree_specs: PyTree, mesh) -> PyTree:
 
 def maybe_shard(x: jax.Array, spec: P) -> jax.Array:
     """Sharding constraint that no-ops when no mesh is active (CPU tests)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.models.common import abstract_mesh
+    mesh = abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)

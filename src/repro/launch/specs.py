@@ -111,7 +111,8 @@ def make_train_step_fn(api: ModelAPI, shape: InputShape, *,
             if not jnp.issubdtype(x.dtype, jnp.floating):
                 return x
             y = x.astype(jnp.bfloat16)
-            mesh = jax.sharding.get_abstract_mesh()
+            from repro.models.common import abstract_mesh
+            mesh = abstract_mesh()
             if mesh is not None and not mesh.empty:
                 y = jax.lax.with_sharding_constraint(
                     y, P(*([None] * y.ndim)))

@@ -33,6 +33,14 @@ class ModelAPI:
     forward: Callable[..., Tuple[jax.Array, jax.Array]]
     init_cache: Callable[..., PyTree]
     decode_step: Callable[..., Tuple[jax.Array, PyTree]]
+    # paged-KV serving path (block pool + block tables); None for families
+    # whose decode state is O(1) recurrent rather than a growing KV sequence
+    init_paged_cache: Optional[Callable[..., PyTree]] = None
+    paged_decode_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.paged_decode_step is not None
 
     def effective_window(self, seq_len: int) -> int:
         cfg = self.cfg
@@ -87,6 +95,10 @@ def build_model(cfg: ArchConfig) -> ModelAPI:
             init_cache=lambda b, n, **kw: vlm.init_cache(cfg, b, n, **kw),
             decode_step=lambda p, c, t, **kw: vlm.decode_step(
                 p, c, t, cfg, **kw),
+            init_paged_cache=lambda b, **kw: vlm.init_paged_cache(
+                cfg, b, **kw),
+            paged_decode_step=lambda p, c, t, **kw: vlm.paged_decode_step(
+                p, c, t, cfg, **kw),
         )
     # dense / moe
     return ModelAPI(
@@ -96,6 +108,10 @@ def build_model(cfg: ArchConfig) -> ModelAPI:
         forward=lambda p, t, **kw: transformer.forward(p, t, cfg, **kw),
         init_cache=lambda b, n, **kw: transformer.init_cache(cfg, b, n, **kw),
         decode_step=lambda p, c, t, **kw: transformer.decode_step(
+            p, c, t, cfg, **kw),
+        init_paged_cache=lambda b, **kw: transformer.init_paged_cache(
+            cfg, b, **kw),
+        paged_decode_step=lambda p, c, t, **kw: transformer.paged_decode_step(
             p, c, t, cfg, **kw),
     )
 

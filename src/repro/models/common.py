@@ -15,6 +15,34 @@ import jax.numpy as jnp
 PyTree = Any
 
 
+def abstract_mesh():
+    """``jax.sharding.get_abstract_mesh()`` on jax >= 0.5; None on older
+    jax (no explicit-sharding mesh API — in-model sharding constraints
+    degrade to no-ops, which is correct on a single device)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    return get() if get is not None else None
+
+
+@jax.custom_vjp
+def optimization_barrier(x: jax.Array) -> jax.Array:
+    """``jax.lax.optimization_barrier`` that differentiates on every jax
+    version (jax < 0.5 has no differentiation rule for the primitive; the
+    custom identity VJP sidesteps it — the barrier is semantically the
+    identity, only a scheduling fence)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return optimization_barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (g,)
+
+
+optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
 @dataclasses.dataclass(frozen=True)
 class Policy:
     param_dtype: jnp.dtype = jnp.float32
@@ -136,7 +164,7 @@ def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
     assignment is divisibility-checked; without an active mesh (CPU tests)
     this is a no-op, so model code can call it unconditionally.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)

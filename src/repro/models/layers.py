@@ -24,7 +24,7 @@ NEG_INF = -1e30
 
 
 def _model_axis_size() -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = common.abstract_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return 1
     return dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
@@ -101,7 +101,7 @@ def project_out(p: Dict, attn_out: jax.Array, cfg: ArchConfig) -> jax.Array:
     y = jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"].astype(attn_out.dtype))
     # barrier keeps the row-parallel psum this contraction induces in bf16
     # (XLA otherwise hoists the next norm's f32 convert above it: 2x bytes)
-    y = jax.lax.optimization_barrier(y)
+    y = common.optimization_barrier(y)
     if cfg.use_bias:
         y = y + p["bo"].astype(y.dtype)
     return y

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MoEConfig
-from repro.models import layers
+from repro.models import common, layers
 from repro.models.common import constrain, dense_init, split_keys
 
 
@@ -237,7 +237,7 @@ def _expert_parallel_combine(ye, idx, slot_c, w):
     ye (E,G,C,d) sharded (model, batch); idx/slot_c/w (G,S,k) batch-sharded.
     Returns y (G,S,d) or None when the shard_map path doesn't apply.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = common.abstract_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return None
     from jax.sharding import PartitionSpec as P
@@ -276,7 +276,7 @@ def _expert_parallel_combine(ye, idx, slot_c, w):
                                 local_c, slot_blk, wv)
         # barrier keeps the psum on the wire in bf16 (XLA otherwise hoists
         # the downstream norm's f32 convert above the all-reduce: 2x bytes)
-        return jax.lax.optimization_barrier(jax.lax.psum(ypart, "model"))
+        return common.optimization_barrier(jax.lax.psum(ypart, "model"))
 
     gspec = P(bspec, None, None)
     return jax.shard_map(

@@ -100,6 +100,44 @@ def _apply_block(bp: Dict, x: jax.Array, positions: jax.Array,
     return x + mlp_out, aux
 
 
+def _apply_block_decode_paged(bp: Dict, x: jax.Array, cache_l: Dict,
+                              block_tables: jax.Array, pos: jax.Array,
+                              cfg: ArchConfig, *, window: int
+                              ) -> Tuple[jax.Array, Dict]:
+    """Decode one token through one block against the paged KV pool.
+
+    cache_l: {"k","v"} (num_blocks, block_size, Hkv, D); block_tables
+    (B, max_blocks) maps lane-logical blocks to pool slots; pos (B,) is the
+    write position (idle lanes point at the reserved null block 0, so the
+    scatter below always has a legal, never-read target).
+    """
+    from repro.kernels import ops as kernel_ops
+    B = x.shape[0]
+    bs = cache_l["k"].shape[1]
+    xn = apply_norm(cfg.norm_type, bp["attn_norm"], x)
+    q, k, v = layers.project_qkv(bp["attn"], xn, pos[:, None], cfg)
+    bidx = jnp.arange(B)
+    blk = block_tables[bidx, pos // bs]
+    off = pos % bs
+    new_k = cache_l["k"].at[blk, off].set(k[:, 0].astype(cache_l["k"].dtype))
+    new_v = cache_l["v"].at[blk, off].set(v[:, 0].astype(cache_l["v"].dtype))
+    attn = kernel_ops.paged_attention(q, new_k, new_v, block_tables, pos + 1,
+                                      window=window)
+    attn = layers.project_out(bp["attn"], attn, cfg)
+
+    if cfg.parallel_block:
+        mlp_out = layers.apply_mlp(bp["mlp"], xn, cfg)
+        return x + attn + mlp_out, {"k": new_k, "v": new_v}
+
+    x = x + attn
+    xm = apply_norm(cfg.norm_type, bp["mlp_norm"], x)
+    if "moe" in bp:
+        mlp_out, _ = moe_lib.apply_moe(bp["moe"], xm, cfg)
+    else:
+        mlp_out = layers.apply_mlp(bp["mlp"], xm, cfg)
+    return x + mlp_out, {"k": new_k, "v": new_v}
+
+
 def _apply_block_decode(bp: Dict, x: jax.Array, cache_l: Dict,
                         slot_positions: jax.Array, pos: jax.Array,
                         cfg: ArchConfig, *, window: int
@@ -248,6 +286,85 @@ def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
     if n_dense_head:
         cache["head"] = kv(n_dense_head)
     return cache
+
+
+def init_paged_cache(cfg: ArchConfig, n_lanes: int, *, num_blocks: int,
+                     block_size: int, max_blocks_per_lane: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    """Paged KV cache: per-layer physical pools shared by all lanes.
+
+    Unlike :func:`init_cache` there is no per-lane dense slab — memory is
+    the pool (num_blocks x block_size tokens per layer) and lanes borrow
+    blocks through their ``block_tables`` row.  Block 0 is the engine's
+    reserved null block.
+    """
+    Hkv, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    n_dense_head = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense_head
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, num_blocks, block_size, Hkv, D), dtype),
+            "v": jnp.zeros((n, num_blocks, block_size, Hkv, D), dtype),
+        }
+
+    cache = {
+        "scan": kv(n_scan),
+        "block_tables": jnp.zeros((n_lanes, max_blocks_per_lane), jnp.int32),
+        "pos": jnp.zeros((n_lanes,), jnp.int32),
+    }
+    if n_dense_head:
+        cache["head"] = kv(n_dense_head)
+    return cache
+
+
+def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                      cfg: ArchConfig, *, window: int = 0,
+                      compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """tokens (B,1) -> (logits (B,1,V), new cache), paged-KV variant.
+
+    ``cache["pos"]`` is the per-lane write position (== tokens already in
+    that lane's KV) and doubles as the RoPE position; the serving engine
+    overwrites ``pos``/``block_tables`` before every step as lanes turn
+    over, so the ``pos + 1`` carried out below only services the
+    single-sequence debug path.
+    """
+    pos = cache["pos"]
+    tables = cache["block_tables"]
+    x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
+    if getattr(cfg, "scale_embeddings", False):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+
+    new_head = []
+    for i, bp in enumerate(params.get("head_blocks", [])):
+        cl = {"k": cache["head"]["k"][i], "v": cache["head"]["v"][i]}
+        x, ncl = _apply_block_decode_paged(bp, x, cl, tables, pos, cfg,
+                                           window=window)
+        new_head.append(ncl)
+
+    def layer_step(x, inp):
+        bp, cl = inp
+        x, ncl = _apply_block_decode_paged(bp, x, cl, tables, pos, cfg,
+                                           window=window)
+        return x, ncl
+
+    x, new_scan = jax.lax.scan(layer_step, x,
+                               (params["blocks"], cache["scan"]))
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params.get("head"), params["embed"], x,
+                              cfg.tie_embeddings)
+
+    new_cache = {
+        "scan": new_scan,
+        "block_tables": tables,
+        "pos": pos + 1,
+    }
+    if new_head:
+        new_cache["head"] = {
+            "k": jnp.stack([c["k"] for c in new_head]),
+            "v": jnp.stack([c["v"] for c in new_head]),
+        }
+    return logits, new_cache
 
 
 def decode_step(params: Dict, cache: Dict, tokens: jax.Array,

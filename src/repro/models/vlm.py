@@ -79,3 +79,15 @@ def decode_step(params: Dict, cache: Dict, tokens: jax.Array,
     return transformer.decode_step(params["lm"], cache, tokens, cfg,
                                    window=window,
                                    compute_dtype=compute_dtype)
+
+
+def init_paged_cache(cfg: ArchConfig, n_lanes: int, **kw) -> Dict:
+    return transformer.init_paged_cache(cfg, n_lanes, **kw)
+
+
+def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                      cfg: ArchConfig, *, window: int = 0,
+                      compute_dtype=jnp.bfloat16):
+    return transformer.paged_decode_step(params["lm"], cache, tokens, cfg,
+                                         window=window,
+                                         compute_dtype=compute_dtype)

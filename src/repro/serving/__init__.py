@@ -1,1 +1,8 @@
-from repro.serving.engine import BatchEngine, DecodeEngine, Request  # noqa: F401
+from repro.serving.batch import BatchEngine, BatchStats  # noqa: F401
+from repro.serving.blocks import (BlockAllocator, KVCacheManager,  # noqa: F401
+                                  NULL_BLOCK)
+from repro.serving.engine import (DecodeEngine, PagedDecodeEngine,  # noqa: F401
+                                  SlotDecodeEngine)
+from repro.serving.scheduler import (Request, RequestState,  # noqa: F401
+                                     Scheduler, SchedulerConfig,
+                                     StepDecision)

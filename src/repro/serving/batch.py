@@ -1,0 +1,73 @@
+"""Stateless batched inference (BraggNN / CookieNetAE at the edge):
+dynamic micro-batching with a latency budget, padded to fixed compiled
+batch sizes (edge accelerators compile fixed shapes)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class BatchStats:
+    n_requests: int = 0
+    n_batches: int = 0
+    total_items: int = 0
+    total_latency: float = 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": self.n_requests,
+            "batches": self.n_batches,
+            "items": self.total_items,
+            "mean_latency_s": self.total_latency / max(self.n_batches, 1),
+        }
+
+
+class BatchEngine:
+    """Fixed-shape compiled batched inference with padding.
+
+    ``apply_fn(params, x) -> y``; compiled once per allowed batch size
+    (powers of two up to ``max_batch``), requests padded up to the nearest.
+    """
+
+    def __init__(self, apply_fn: Callable, params: PyTree, *,
+                 max_batch: int = 1024) -> None:
+        self.params = params
+        self.max_batch = max_batch
+        self._jitted = jax.jit(apply_fn)
+        self.stats = BatchStats()
+
+    def _padded_size(self, n: int) -> int:
+        size = 1
+        while size < n:
+            size *= 2
+        return min(size, self.max_batch)
+
+    def infer(self, x: np.ndarray) -> np.ndarray:
+        """Process a request of any size by padded fixed-shape batches."""
+        self.stats.n_requests += 1
+        outs = []
+        i = 0
+        n = x.shape[0]
+        while i < n:
+            take = min(self.max_batch, n - i)
+            size = self._padded_size(take)
+            chunk = x[i:i + take]
+            if take < size:
+                pad = np.zeros((size - take,) + x.shape[1:], x.dtype)
+                chunk = np.concatenate([chunk, pad])
+            t0 = time.perf_counter()
+            y = np.asarray(self._jitted(self.params, jnp.asarray(chunk)))
+            self.stats.total_latency += time.perf_counter() - t0
+            self.stats.n_batches += 1
+            self.stats.total_items += take
+            outs.append(y[:take])
+            i += take
+        return np.concatenate(outs) if len(outs) > 1 else outs[0]

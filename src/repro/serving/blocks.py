@@ -1,0 +1,191 @@
+"""Block-based (paged) KV cache bookkeeping — the vLLM idea in host code.
+
+A request's logical KV sequence is mapped onto fixed-size *physical* blocks
+drawn from a shared pool, so memory is committed one block at a time as the
+sequence grows instead of one dense ``cache_len`` slab per slot.  Two layers:
+
+  * :class:`BlockAllocator` — the physical pool: a free-list plus per-block
+    reference counts (refcount > 1 means the block is shared between
+    sequences, e.g. a forked prefix).
+  * :class:`KVCacheManager` — per-sequence logical->physical block tables
+    with ``allocate`` / ``append_token`` / ``free`` / ``fork`` APIs, and the
+    padded numpy block-table matrix the jitted decode step consumes.
+
+Physical block 0 is reserved as the *null block*: idle engine lanes point
+their table at it so the jitted scatter always has a legal target, and no
+live sequence is ever given block 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator with reference counting over a fixed pool.
+
+    Block ids run ``1..num_blocks-1`` (0 is the reserved null block).
+    """
+
+    def __init__(self, num_blocks: int) -> None:
+        if num_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is the null block)")
+        self.num_blocks = num_blocks
+        self._free: deque[int] = deque(range(1, num_blocks))
+        self._refs: Dict[int, int] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._refs)
+
+    def allocate(self) -> int:
+        if not self._free:
+            raise RuntimeError("out of KV cache blocks")
+        blk = self._free.popleft()
+        self._refs[blk] = 1
+        return blk
+
+    def refcount(self, block_id: int) -> int:
+        return self._refs.get(block_id, 0)
+
+    def incref(self, block_id: int) -> None:
+        if block_id not in self._refs:
+            raise KeyError(f"block {block_id} is not allocated")
+        self._refs[block_id] += 1
+
+    def decref(self, block_id: int) -> None:
+        """Drop one reference; the block returns to the free list at zero."""
+        if block_id not in self._refs:
+            raise KeyError(f"block {block_id} is not allocated")
+        self._refs[block_id] -= 1
+        if self._refs[block_id] == 0:
+            del self._refs[block_id]
+            self._free.append(block_id)
+
+
+@dataclasses.dataclass
+class SeqBlocks:
+    """One sequence's logical view: table[i] holds tokens [i*bs, (i+1)*bs)."""
+    table: List[int] = dataclasses.field(default_factory=list)
+    n_tokens: int = 0
+
+
+class KVCacheManager:
+    """Maps logical KV sequences onto the physical block pool.
+
+    ``block_size`` tokens per block; ``max_blocks_per_seq`` bounds a single
+    sequence (the engine's ``cache_len`` ceiling).  All model layers share
+    one block table per sequence — a physical block id indexes every layer's
+    pool at once.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 max_blocks_per_seq: int) -> None:
+        self.allocator = BlockAllocator(num_blocks)
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self._seqs: Dict[int, SeqBlocks] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def num_free_blocks(self) -> int:
+        return self.allocator.num_free
+
+    def n_tokens(self, seq_id: int) -> int:
+        return self._seqs[seq_id].n_tokens
+
+    def has_seq(self, seq_id: int) -> bool:
+        return seq_id in self._seqs
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)          # ceil
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        need = self.blocks_needed(n_tokens)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens needs {need} blocks, over the "
+                f"per-seq ceiling {self.max_blocks_per_seq}")
+        return need <= self.allocator.num_free
+
+    # ------------------------------------------------------------------
+    def allocate(self, seq_id: int, n_tokens: int = 0) -> None:
+        """Register a sequence and pre-allocate blocks for n_tokens."""
+        if seq_id in self._seqs:
+            raise KeyError(f"seq {seq_id} already allocated")
+        need = self.blocks_needed(n_tokens)
+        if need > self.allocator.num_free:
+            raise RuntimeError(
+                f"seq {seq_id} needs {need} blocks, "
+                f"{self.allocator.num_free} free")
+        seq = SeqBlocks()
+        for _ in range(need):
+            seq.table.append(self.allocator.allocate())
+        seq.n_tokens = n_tokens
+        self._seqs[seq_id] = seq
+
+    def append_token(self, seq_id: int) -> Optional[int]:
+        """Grow the sequence by one token; returns the newly allocated
+        physical block id when the token crosses a block boundary, else
+        None.  Raises RuntimeError when the pool is exhausted (the
+        scheduler turns that into a preemption)."""
+        seq = self._seqs[seq_id]
+        if seq.n_tokens % self.block_size == 0:
+            if len(seq.table) >= self.max_blocks_per_seq:
+                raise ValueError(
+                    f"seq {seq_id} exceeds max_blocks_per_seq "
+                    f"({self.max_blocks_per_seq})")
+            new = self.allocator.allocate()
+            seq.table.append(new)
+            seq.n_tokens += 1
+            return new
+        seq.n_tokens += 1
+        return None
+
+    def free(self, seq_id: int) -> None:
+        seq = self._seqs.pop(seq_id)
+        for blk in seq.table:
+            self.allocator.decref(blk)
+
+    def fork(self, src_seq_id: int, dst_seq_id: int) -> None:
+        """Share the source's blocks with a new sequence (refcounted).
+
+        The fork is read-only sharing for the already-written prefix; the
+        first ``append_token`` past a shared *partial* tail block would need
+        copy-on-write, so forks are only allowed at block-aligned lengths.
+        """
+        src = self._seqs[src_seq_id]
+        if src.n_tokens % self.block_size != 0:
+            raise ValueError("fork requires a block-aligned source length")
+        if dst_seq_id in self._seqs:
+            raise KeyError(f"seq {dst_seq_id} already allocated")
+        dst = SeqBlocks(table=list(src.table), n_tokens=src.n_tokens)
+        for blk in dst.table:
+            self.allocator.incref(blk)
+        self._seqs[dst_seq_id] = dst
+
+    # ------------------------------------------------------------------
+    def block_table(self, seq_id: int) -> List[int]:
+        return list(self._seqs[seq_id].table)
+
+    def padded_table(self, seq_id: int) -> np.ndarray:
+        """(max_blocks_per_seq,) int32 row for the jitted step; unallocated
+        logical blocks point at the null block."""
+        row = np.full((self.max_blocks_per_seq,), NULL_BLOCK, np.int32)
+        table = self._seqs[seq_id].table
+        row[:len(table)] = table
+        return row
+
+    def utilization(self) -> float:
+        """Fraction of non-null pool blocks currently allocated."""
+        total = self.allocator.num_blocks - 1
+        return (total - self.allocator.num_free) / max(total, 1)

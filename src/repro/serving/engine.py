@@ -1,118 +1,215 @@
-"""Edge/DC inference engine — the paper's "E"(stimate) operation.
+"""Autoregressive LM serving engines — the paper's "E"(stimate) hot loop.
 
-Two request kinds, matching the paper's two model classes:
-  * ``BatchEngine``  — stateless batched inference (BraggNN / CookieNetAE at
-    the edge): dynamic micro-batching with a latency budget, padded to fixed
-    compiled batch sizes (edge accelerators compile fixed shapes).
-  * ``DecodeEngine`` — autoregressive LM serving with a KV/recurrent-state
-    cache and continuous slot management (admit new requests into free cache
-    slots between steps), built on each model family's ``decode_step``.
+Two interchangeable decode engines behind one facade:
+
+  * :class:`PagedDecodeEngine` — continuous batching over a **paged KV
+    cache**: requests borrow fixed-size blocks from a shared pool
+    (serving/blocks.py) under a token-budget scheduler with
+    preemption-by-recompute (serving/scheduler.py).  Memory is committed
+    per block actually used, so at equal memory budget it admits far more
+    concurrent requests than dense per-slot slabs.
+  * :class:`SlotDecodeEngine` — the dense reference: one ``cache_len`` slab
+    per lane, kept for model families whose decode state is O(1) recurrent
+    (ssm/hybrid/audio) and as the equivalence oracle for the paged path.
+
+``DecodeEngine(api, params, ...)`` picks the paged engine whenever the
+model family supports it (transformer-backed: dense / moe / vlm) and the
+dense-slot engine otherwise — the public surface (``submit`` /
+``step`` / ``run_until_drained``) is identical.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.blocks import KVCacheManager
+from repro.serving.scheduler import (Request, Scheduler, SchedulerConfig,
+                                     StepDecision)
+
 PyTree = Any
 
 
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class BatchStats:
-    n_requests: int = 0
-    n_batches: int = 0
-    total_items: int = 0
-    total_latency: float = 0.0
+def DecodeEngine(model_api, params: PyTree, *, paged: Optional[bool] = None,
+                 **kw):
+    """Facade: the paged engine when the model family supports it, the
+    dense-slot engine otherwise.  ``paged=True/False`` forces the choice."""
+    if paged is None:
+        paged = getattr(model_api, "supports_paged", False)
+    cls = PagedDecodeEngine if paged else SlotDecodeEngine
+    return cls(model_api, params, **kw)
 
-    def summary(self) -> Dict[str, float]:
+
+# ---------------------------------------------------------------------------
+class PagedDecodeEngine:
+    """Continuous-batching decode over a block-paged KV pool.
+
+    ``n_slots`` is the number of concurrent lanes the jitted step batches
+    over; ``cache_len`` caps one request's logical KV length.  The physical
+    pool defaults to the dense-equivalent size (``n_slots`` full sequences,
+    plus the null block) — pass a smaller ``num_blocks`` to oversubscribe
+    memory and exercise preemption, or a larger one to admit more lanes
+    than dense slabs could.
+    """
+
+    def __init__(self, model_api, params: PyTree, *, n_slots: int,
+                 cache_len: int, eos_token: int = -1, window: int = 0,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 token_budget: int = 0, cache_dtype=None,
+                 compute_dtype=None) -> None:
+        if not getattr(model_api, "supports_paged", False):
+            raise ValueError(
+                f"{model_api.cfg.family} models have no paged-KV decode "
+                "path; use DecodeEngine (it falls back to dense slots)")
+        self.api = model_api
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.eos = eos_token
+        self.window = window
+        self.block_size = block_size
+        self.max_blocks = -(-cache_len // block_size)
+        if num_blocks is None:
+            num_blocks = n_slots * self.max_blocks + 1   # +1: null block
+        self.num_blocks = num_blocks
+        self.kv = KVCacheManager(num_blocks, block_size,
+                                 max_blocks_per_seq=self.max_blocks)
+        self.scheduler = Scheduler(
+            SchedulerConfig(n_lanes=n_slots, token_budget=token_budget),
+            self.kv)
+        kw = {"num_blocks": num_blocks, "block_size": block_size,
+              "max_blocks_per_lane": self.max_blocks}
+        if cache_dtype is not None:
+            kw["dtype"] = cache_dtype
+        self.cache = model_api.init_paged_cache(n_slots, **kw)
+        step_kw = {"window": window}
+        if compute_dtype is not None:
+            step_kw["compute_dtype"] = compute_dtype
+        # donate the cache: the KV pool is updated in place rather than
+        # double-buffered (decisive for pool size = device memory on TPU)
+        self._step = jax.jit(
+            lambda p, c, t: model_api.paged_decode_step(p, c, t, **step_kw),
+            donate_argnums=(1,))
+        self._finished: List[Request] = []
+        self._next_id = 0
+        self.tokens_decoded = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        total = len(prompt) + max_new_tokens
+        usable = min(self.max_blocks, self.num_blocks - 1)
+        if self.kv.blocks_needed(total) > usable:
+            raise ValueError(
+                f"request of {total} tokens needs "
+                f"{self.kv.blocks_needed(total)} blocks; engine can serve "
+                f"at most {usable} per request")
+        rid = self._next_id
+        self._next_id += 1
+        self.scheduler.add(Request(rid, prompt, max_new_tokens))
+        return rid
+
+    # ------------------------------------------------------------------
+    def step(self) -> StepDecision:
+        """One engine iteration: one token per scheduled lane."""
+        decision = self.scheduler.schedule()
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
+        # paused (budget-deferred) lanes are filled in too: their write
+        # lands on a slot the real step will overwrite with the same value,
+        # or on the null block — harmless either way
+        for r in self.scheduler.running:
+            tokens[r.lane, 0] = r.feed[r.cursor]
+            pos[r.lane] = r.cursor
+            tables[r.lane] = self.kv.padded_table(r.request_id)
+        self.cache["block_tables"] = jnp.asarray(tables)
+        self.cache["pos"] = jnp.asarray(pos)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens))
+        next_tokens = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.steps += 1
+
+        for r in list(decision.scheduled):
+            emitting = r.cursor >= len(r.feed) - 1
+            r.cursor += 1
+            if emitting:
+                tok = int(next_tokens[r.lane])
+                r.generated.append(tok)
+                r.feed.append(tok)
+                self.tokens_decoded += 1
+                if len(r.generated) >= r.max_new_tokens or tok == self.eos:
+                    self.scheduler.finish(r)
+                    self._finished.append(r)
+        return decision
+
+    def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
+        """Step until no work remains; returns (and hands off) the requests
+        finished since the last call."""
+        for _ in range(max_steps):
+            if not self.scheduler.has_work():
+                break
+            decision = self.step()
+            if not decision.scheduled and self.scheduler.waiting:
+                raise RuntimeError(
+                    "serving stalled: waiting requests cannot be admitted "
+                    f"({self.kv.num_free_blocks} free blocks)")
+        out, self._finished = self._finished, []
+        return out
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
         return {
-            "requests": self.n_requests,
-            "batches": self.n_batches,
-            "items": self.total_items,
-            "mean_latency_s": self.total_latency / max(self.n_batches, 1),
+            "steps": self.steps,
+            "tokens_decoded": self.tokens_decoded,
+            "active": len(self.scheduler.running),
+            "waiting": len(self.scheduler.waiting),
+            "preemptions": self.scheduler.total_preemptions,
+            "block_utilization": self.kv.utilization(),
         }
 
 
-class BatchEngine:
-    """Fixed-shape compiled batched inference with padding.
-
-    ``apply_fn(params, x) -> y``; compiled once per allowed batch size
-    (powers of two up to ``max_batch``), requests padded up to the nearest.
-    """
-
-    def __init__(self, apply_fn: Callable, params: PyTree, *,
-                 max_batch: int = 1024) -> None:
-        self.params = params
-        self.max_batch = max_batch
-        self._jitted = jax.jit(apply_fn)
-        self.stats = BatchStats()
-
-    def _padded_size(self, n: int) -> int:
-        size = 1
-        while size < n:
-            size *= 2
-        return min(size, self.max_batch)
-
-    def infer(self, x: np.ndarray) -> np.ndarray:
-        """Process a request of any size by padded fixed-shape batches."""
-        self.stats.n_requests += 1
-        outs = []
-        i = 0
-        n = x.shape[0]
-        while i < n:
-            take = min(self.max_batch, n - i)
-            size = self._padded_size(take)
-            chunk = x[i:i + take]
-            if take < size:
-                pad = np.zeros((size - take,) + x.shape[1:], x.dtype)
-                chunk = np.concatenate([chunk, pad])
-            t0 = time.perf_counter()
-            y = np.asarray(self._jitted(self.params, jnp.asarray(chunk)))
-            self.stats.total_latency += time.perf_counter() - t0
-            self.stats.n_batches += 1
-            self.stats.total_items += take
-            outs.append(y[:take])
-            i += take
-        return np.concatenate(outs) if len(outs) > 1 else outs[0]
-
-
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class Request:
-    request_id: int
-    prompt: np.ndarray               # (prompt_len,) int32
-    max_new_tokens: int
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class SlotDecodeEngine:
+    """Continuous-batching LM decode over a fixed dense slot grid.
 
-
-class DecodeEngine:
-    """Continuous-batching LM decode over a fixed slot grid.
-
-    The cache has ``n_slots`` request slots; each engine step decodes one
-    token for every active slot.  Finished slots are freed and refilled from
-    the admission queue; prompts are fed token-by-token (prefill-as-decode,
-    correct for every family incl. recurrent/SSM models).
+    The cache has ``n_slots`` request slots of ``cache_len`` tokens each;
+    every engine step decodes one token for every active slot.  Finished
+    slots are freed and refilled from the admission queue; prompts are fed
+    token-by-token (prefill-as-decode, correct for every family incl.
+    recurrent/SSM models).  For transformer-family KV caches, a slot's
+    positions/write-cursor are reset on reuse so a new occupant starts at
+    RoPE position 0 and never attends to its predecessor's stale KV.
     """
 
     def __init__(self, model_api, params: PyTree, *, n_slots: int,
                  cache_len: int, eos_token: int = -1,
-                 window: int = 0) -> None:
+                 window: int = 0, cache_dtype=None, compute_dtype=None,
+                 **_paged_opts) -> None:
         self.api = model_api
         self.params = params
         self.n_slots = n_slots
+        self.cache_len = cache_len
         self.eos = eos_token
         self.window = window
-        self.cache = model_api.init_cache(n_slots, cache_len, window=window)
+        kw = {"window": window}
+        if cache_dtype is not None:
+            kw["dtype"] = cache_dtype
+        self.cache = model_api.init_cache(n_slots, cache_len, **kw)
+        step_kw = {"window": window}
+        if compute_dtype is not None:
+            step_kw["compute_dtype"] = compute_dtype
         self._step = jax.jit(
-            lambda p, c, t: model_api.decode_step(p, c, t, window=window))
+            lambda p, c, t: model_api.decode_step(p, c, t, **step_kw),
+            donate_argnums=(1,))
         self.active: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
+        self._finished: List[Request] = []
+        # rolling KV buffers hold min(window, cache_len) slots per lane
+        self._slots_per_lane = min(window, cache_len) if window else cache_len
         self._next_id = 0
         self.tokens_decoded = 0
         self.steps = 0
@@ -128,8 +225,19 @@ class DecodeEngine:
     def _admit(self) -> None:
         for slot in range(self.n_slots):
             if self.active[slot] is None and self.queue:
-                self.active[slot] = self.queue.pop(0)
-                self.active[slot]._cursor = 0     # type: ignore[attr-defined]
+                req = self.queue.pop(0)
+                req.begin_run(slot)
+                self.active[slot] = req
+                if "slot_positions" in self.cache and "scan" in self.cache:
+                    # transformer-family rolling KV (pure cache, no recurrent
+                    # state): invalidate the previous occupant's entries and
+                    # restart the write cursor, so the new request starts at
+                    # position 0 and never sees stale KV.  Families with
+                    # recurrent state (zamba/xlstm/encdec) keep the seed
+                    # behaviour — their lane state cannot be row-reset.
+                    self.cache["slot_positions"] = \
+                        self.cache["slot_positions"].at[slot].set(-1)
+                    self.cache["pos"] = self.cache["pos"].at[slot].set(0)
 
     # ------------------------------------------------------------------
     def step(self) -> None:
@@ -137,13 +245,8 @@ class DecodeEngine:
         self._admit()
         tokens = np.zeros((self.n_slots, 1), np.int32)
         for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            cur = req._cursor                      # type: ignore[attr-defined]
-            if cur < len(req.prompt):
-                tokens[slot, 0] = req.prompt[cur]
-            elif req.generated:
-                tokens[slot, 0] = req.generated[-1]
+            if req is not None:
+                tokens[slot, 0] = req.feed[req.cursor]
         logits, self.cache = self._step(self.params, self.cache,
                                         jnp.asarray(tokens))
         next_tokens = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
@@ -152,29 +255,39 @@ class DecodeEngine:
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            cur = req._cursor                      # type: ignore[attr-defined]
-            req._cursor = cur + 1                  # type: ignore[attr-defined]
-            if cur >= len(req.prompt) - 1:         # now generating
+            emitting = req.cursor >= len(req.feed) - 1
+            req.cursor += 1
+            if emitting:
                 tok = int(next_tokens[slot])
                 req.generated.append(tok)
+                req.feed.append(tok)
                 self.tokens_decoded += 1
                 if (len(req.generated) >= req.max_new_tokens
                         or tok == self.eos):
                     req.done = True
                     self.active[slot] = None
+                    self._finished.append(req)
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
-        finished: List[Request] = []
-        seen: Dict[int, Request] = {}
-        pending = list(self.queue)
-        for r in pending:
-            seen[r.request_id] = r
+        """Step until no work remains; returns (and hands off) the requests
+        finished since the last call."""
         for _ in range(max_steps):
             if not self.queue and all(a is None for a in self.active):
                 break
-            for a in self.active:
-                if a is not None:
-                    seen[a.request_id] = a
             self.step()
-        finished = [r for r in seen.values() if r.done]
-        return finished
+        out, self._finished = self._finished, []
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        n_active = sum(1 for a in self.active if a is not None)
+        used = sum(min(r.cursor, self._slots_per_lane)
+                   for r in self.active if r is not None)
+        return {
+            "steps": self.steps,
+            "tokens_decoded": self.tokens_decoded,
+            "active": n_active,
+            "waiting": len(self.queue),
+            "preemptions": 0,
+            "block_utilization": used / max(
+                self.n_slots * self._slots_per_lane, 1),
+        }

@@ -1,0 +1,179 @@
+"""Continuous-batching scheduler over the paged KV pool.
+
+Each engine step decodes one token per *scheduled* lane.  The scheduler
+decides, every step, which requests those are:
+
+  * running requests are split by phase — **decode** lanes (next step emits
+    a new token) are served first, **prefill** lanes (still consuming their
+    prompt / replaying after preemption) fill the remaining token budget;
+  * **admission**: waiting requests are admitted into free lanes while the
+    token budget holds and the KV manager can cover their whole feed —
+    a flood of long prompts therefore cannot starve running decodes;
+  * **preemption by recompute**: when the pool runs out of blocks mid-step,
+    the latest-admitted request is evicted — its blocks are freed and it
+    re-enters the waiting queue with its generated tokens intact, to be
+    replayed (prefill-as-recompute) once memory frees up.  Greedy decode is
+    deterministic, so the replay reproduces the identical continuation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.serving.blocks import KVCacheManager
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass(eq=False)          # identity semantics for in/remove
+class Request:
+    request_id: int
+    prompt: np.ndarray               # (prompt_len,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # --- engine-internal state ---
+    state: RequestState = RequestState.WAITING
+    feed: List[int] = dataclasses.field(default_factory=list)
+    cursor: int = 0                  # next feed index == tokens already in KV
+    lane: Optional[int] = None
+    n_preemptions: int = 0
+
+    def begin_run(self, lane: int) -> None:
+        """(Re)admission: the feed is prompt + generated-so-far; after a
+        preemption the generated suffix is recomputed deterministically."""
+        self.feed = [int(t) for t in self.prompt] + list(self.generated)
+        self.cursor = 0
+        self.lane = lane
+        self.state = RequestState.RUNNING
+
+    @property
+    def is_decode(self) -> bool:
+        """True when the next step emits a new token (vs prompt prefill)."""
+        return self.cursor >= len(self.feed) - 1
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    n_lanes: int
+    token_budget: int = 0            # 0 = unlimited (bounded by n_lanes)
+
+
+@dataclasses.dataclass
+class StepDecision:
+    scheduled: List[Request]
+    n_prefill: int = 0
+    n_decode: int = 0
+    n_admitted: int = 0
+    n_preempted: int = 0
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, kv: KVCacheManager) -> None:
+        self.cfg = cfg
+        self.kv = kv
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []          # admission (priority) order
+        self.lanes: List[Optional[Request]] = [None] * cfg.n_lanes
+        self.total_preemptions = 0
+        self.total_admitted = 0
+
+    # ------------------------------------------------------------------
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def _budget(self) -> int:
+        return self.cfg.token_budget or self.cfg.n_lanes
+
+    # ------------------------------------------------------------------
+    def _admit(self, budget_left: int, decision: StepDecision,
+               scheduled: List[Request]) -> int:
+        while (self.waiting and budget_left > 0
+               and None in self.lanes
+               and self.kv.can_allocate(len(self.waiting[0].prompt)
+                                        + len(self.waiting[0].generated))):
+            req = self.waiting.popleft()
+            lane = self.lanes.index(None)
+            req.begin_run(lane)
+            self.lanes[lane] = req
+            self.running.append(req)
+            self.kv.allocate(req.request_id, 0)
+            scheduled.append(req)
+            decision.n_admitted += 1
+            self.total_admitted += 1
+            budget_left -= 1
+        return budget_left
+
+    def _preempt(self, victim: Request, decision: StepDecision,
+                 scheduled: List[Request]) -> None:
+        self.kv.free(victim.request_id)
+        self.lanes[victim.lane] = None
+        victim.lane = None
+        victim.state = RequestState.WAITING
+        victim.n_preemptions += 1
+        self.running.remove(victim)
+        if victim in scheduled:
+            scheduled.remove(victim)
+        self.waiting.appendleft(victim)        # resume as soon as possible
+        decision.n_preempted += 1
+        self.total_preemptions += 1
+
+    def schedule(self) -> StepDecision:
+        """Pick this step's lanes, admit, and guarantee their KV blocks."""
+        decision = StepDecision(scheduled=[])
+        budget = self._budget()
+
+        decode = [r for r in self.running if r.is_decode]
+        prefill = [r for r in self.running if not r.is_decode]
+        scheduled = decode[:budget]
+        budget_left = budget - len(scheduled)
+        take = prefill[:budget_left]
+        scheduled += take
+        budget_left -= len(take)
+
+        budget_left = self._admit(budget_left, decision, scheduled)
+
+        # guarantee a KV slot for every scheduled token, in priority order;
+        # evict from the back (latest admitted) when the pool runs dry
+        for req in [r for r in self.running if r in scheduled]:
+            if req not in scheduled:           # evicted by an earlier lane
+                continue
+            needs_block = self.kv.n_tokens(req.request_id) \
+                % self.kv.block_size == 0
+            while needs_block and self.kv.num_free_blocks == 0:
+                victim = self.running[-1]
+                if victim is req and len(self.running) == 1:
+                    raise RuntimeError(
+                        "KV pool too small for a single sequence: "
+                        f"request {req.request_id} needs a block and no "
+                        "victim remains")
+                self._preempt(victim, decision, scheduled)
+                if victim is req:
+                    break
+            if req in scheduled:
+                self.kv.append_token(req.request_id)
+
+        decision.scheduled = scheduled
+        decision.n_decode = sum(1 for r in scheduled if r.is_decode)
+        decision.n_prefill = len(scheduled) - decision.n_decode
+        return decision
+
+    # ------------------------------------------------------------------
+    def finish(self, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        req.done = True
+        self.kv.free(req.request_id)
+        self.lanes[req.lane] = None
+        req.lane = None
+        self.running.remove(req)

@@ -1,6 +1,5 @@
 """Config registry: exact assigned dims, smoke-variant invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import ASSIGNED_ARCHS, available_archs, get_config
 from repro.configs.shapes import SHAPES, get_shape
@@ -71,6 +70,24 @@ def test_smoke_variant_preserves_family_and_ratio(arch):
     if c.n_kv_heads < c.n_heads:
         assert s.n_kv_heads < s.n_heads      # GQA ratio preserved in kind
     s.validate()
+
+
+def test_smoke_variant_property_sweep():
+    """Hypothesis property sweep; skips when the dev extra isn't installed
+    (the baked container image has no hypothesis — CI installs it)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(arch=st.sampled_from(ASSIGNED_ARCHS))
+    def check(arch):
+        c = get_config(arch)
+        s = c.smoke_variant()
+        s.validate()
+        assert s.n_layers <= c.n_layers
+        assert s.d_model <= c.d_model
+
+    check()
 
 
 def test_long_context_policy():

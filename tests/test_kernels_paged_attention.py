@@ -1,0 +1,84 @@
+"""Paged-attention Pallas kernel (interpret mode) vs the pure-jnp oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import paged_attention_reference
+from repro.kernels import ops
+
+
+def _setup(key, B, Hkv, G, D, num_blocks, bs, max_blocks, ctx, dtype):
+    ks = jax.random.split(key, 3)
+    H = Hkv * G
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k_pool = jax.random.normal(ks[1], (num_blocks, bs, Hkv, D), dtype)
+    v_pool = jax.random.normal(ks[2], (num_blocks, bs, Hkv, D), dtype)
+    tables = np.zeros((B, max_blocks), np.int32)
+    free = list(range(1, num_blocks))
+    for b in range(B):
+        for j in range(-(-int(ctx[b]) // bs)):
+            tables[b, j] = free.pop(0)
+    return q, k_pool, v_pool, jnp.asarray(tables), jnp.asarray(ctx)
+
+
+@pytest.mark.parametrize("G", [1, 4])
+@pytest.mark.parametrize("window", [0, 5])
+def test_kernel_matches_reference(key, G, window):
+    B, Hkv, D, bs, max_blocks = 3, 2, 64, 8, 4
+    num_blocks = B * max_blocks + 1
+    ctx = np.array([1, 9, 26], np.int32)     # partial / mid / near-full
+    q, kp, vp, tables, ctxj = _setup(key, B, Hkv, G, D, num_blocks, bs,
+                                     max_blocks, ctx, jnp.float32)
+    ref = paged_attention_reference(q, kp, vp, tables, ctxj, window=window)
+    qg = q.reshape(B, Hkv, G, D)
+    out = paged_attention(qg, kp, vp, tables, ctxj, window=window,
+                          interpret=True).reshape(B, H := Hkv * G, D)
+    assert out.shape == (B, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_ignores_null_block_contents(key):
+    """Garbage in the reserved null block must not leak into any lane."""
+    B, Hkv, G, D, bs, max_blocks = 2, 1, 2, 32, 4, 3
+    num_blocks = 8
+    ctx = np.array([4, 6], np.int32)
+    q, kp, vp, tables, ctxj = _setup(key, B, Hkv, G, D, num_blocks, bs,
+                                     max_blocks, ctx, jnp.float32)
+    out1 = paged_attention(q.reshape(B, Hkv, G, D), kp, vp, tables, ctxj,
+                           interpret=True)
+    kp2 = kp.at[0].set(1e4)
+    vp2 = vp.at[0].set(-1e4)
+    out2 = paged_attention(q.reshape(B, Hkv, G, D), kp2, vp2, tables, ctxj,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_ops_wrapper_dispatches_to_reference_on_cpu(key):
+    """On the CPU backend the wrapper must use the XLA reference path and
+    accept the model-native (B, 1, H, D) query layout."""
+    B, Hkv, G, D, bs, max_blocks = 2, 2, 2, 16, 4, 2
+    ctx = np.array([3, 7], np.int32)
+    q, kp, vp, tables, ctxj = _setup(key, B, Hkv, G, D, 8, bs,
+                                     max_blocks, ctx, jnp.float32)
+    out = ops.paged_attention(q[:, None], kp, vp, tables, ctxj)
+    assert out.shape == (B, 1, Hkv * G, D)
+    ref = paged_attention_reference(q, kp, vp, tables, ctxj)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=1e-6)
+
+
+def test_reference_masks_positions_beyond_ctx(key):
+    """Rewriting KV entries at/after ctx_len must not change the output."""
+    B, Hkv, G, D, bs, max_blocks = 1, 1, 1, 16, 4, 2
+    ctx = np.array([5], np.int32)
+    q, kp, vp, tables, ctxj = _setup(key, B, Hkv, G, D, 8, bs,
+                                     max_blocks, ctx, jnp.float32)
+    out1 = paged_attention_reference(q, kp, vp, tables, ctxj)
+    blk = int(np.asarray(tables)[0, 1])      # holds positions 4..7
+    kp2 = kp.at[blk, 2:].set(99.0)           # positions 6,7 >= ctx
+    vp2 = vp.at[blk, 2:].set(-99.0)
+    out2 = paged_attention_reference(q, kp2, vp2, tables, ctxj)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))

@@ -49,6 +49,8 @@ def test_gather_grads_match_gshard(key, arch):
 def test_gather_under_mesh_uses_shard_map_combine(key):
     """With an active mesh the expert-parallel combine path runs and must
     agree with the no-mesh fallback."""
+    if not hasattr(jax, "set_mesh") or not hasattr(jax.sharding, "AxisType"):
+        pytest.skip("explicit-sharding mesh API requires jax >= 0.5")
     cfg, p, x = _setup("deepseek-moe-16b", "gather", key)
     y_ref, _ = moe_lib.apply_moe(p, x, cfg)
 

@@ -36,7 +36,10 @@ def test_analytic_flops_match_compiled_loop_free(arch, tol):
     opt_sds = jax.eval_shape(opt.init, params_sds)
     batch_sds = specs_lib.batch_abstract(cfg, shape)
     compiled = jax.jit(step).lower(params_sds, opt_sds, batch_sds).compile()
-    flops_hlo = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # jax < 0.5: one dict per device
+        ca = ca[0]
+    flops_hlo = ca["flops"]
 
     n_tot = sum(int(l.size) for l in jax.tree.leaves(params_sds))
     n_act = moe_active_params(cfg, params_sds)

@@ -1,0 +1,99 @@
+"""Block allocator + KV cache manager invariants (alloc/free/refcount)."""
+import pytest
+
+from repro.serving import BlockAllocator, KVCacheManager, NULL_BLOCK
+
+
+def test_allocator_free_list_roundtrip():
+    a = BlockAllocator(8)                    # 7 usable (block 0 reserved)
+    assert a.num_free == 7
+    blocks = [a.allocate() for _ in range(7)]
+    assert sorted(blocks) == list(range(1, 8))
+    assert NULL_BLOCK not in blocks
+    assert a.num_free == 0
+    with pytest.raises(RuntimeError):
+        a.allocate()
+    for b in blocks:
+        a.decref(b)
+    assert a.num_free == 7
+    assert a.num_allocated == 0
+
+
+def test_allocator_refcounts():
+    a = BlockAllocator(4)
+    b = a.allocate()
+    a.incref(b)
+    assert a.refcount(b) == 2
+    a.decref(b)
+    assert a.refcount(b) == 1
+    assert a.num_free == 2                   # not yet returned
+    a.decref(b)
+    assert a.refcount(b) == 0
+    assert a.num_free == 3
+    with pytest.raises(KeyError):
+        a.decref(b)                          # double free
+    with pytest.raises(KeyError):
+        a.incref(b)                          # incref of unallocated
+
+
+def test_manager_append_allocates_on_block_boundary():
+    m = KVCacheManager(num_blocks=16, block_size=4, max_blocks_per_seq=4)
+    m.allocate(0, 0)
+    new_blocks = [m.append_token(0) for _ in range(10)]
+    # a new physical block exactly every block_size tokens
+    got = [b is not None for b in new_blocks]
+    assert got == [True, False, False, False] * 2 + [True, False]
+    assert m.n_tokens(0) == 10
+    assert len(m.block_table(0)) == 3
+    m.free(0)
+    assert m.num_free_blocks == 15
+    assert not m.has_seq(0)
+
+
+def test_manager_padded_table_null_fills():
+    m = KVCacheManager(num_blocks=8, block_size=2, max_blocks_per_seq=4)
+    m.allocate(7, 3)                         # 2 blocks for 3 tokens
+    row = m.padded_table(7)
+    assert row.shape == (4,)
+    assert (row[:2] > 0).all()
+    assert (row[2:] == NULL_BLOCK).all()
+
+
+def test_manager_fork_shares_blocks_refcounted():
+    m = KVCacheManager(num_blocks=8, block_size=2, max_blocks_per_seq=4)
+    m.allocate(0, 4)                         # block-aligned: 2 blocks
+    free_before = m.num_free_blocks
+    m.fork(0, 1)
+    assert m.num_free_blocks == free_before  # no new physical blocks
+    assert m.block_table(1) == m.block_table(0)
+    m.free(0)
+    assert m.num_free_blocks == free_before  # still referenced by seq 1
+    m.free(1)
+    assert m.num_free_blocks == free_before + 2
+
+
+def test_manager_fork_requires_block_alignment():
+    m = KVCacheManager(num_blocks=8, block_size=4, max_blocks_per_seq=4)
+    m.allocate(0, 3)
+    with pytest.raises(ValueError):
+        m.fork(0, 1)
+
+
+def test_manager_per_seq_ceiling():
+    m = KVCacheManager(num_blocks=64, block_size=2, max_blocks_per_seq=2)
+    m.allocate(0, 4)
+    with pytest.raises(ValueError):
+        m.append_token(0)                    # 5th token needs a 3rd block
+    with pytest.raises(ValueError):
+        m.can_allocate(5)
+
+
+def test_manager_exhaustion_raises():
+    m = KVCacheManager(num_blocks=3, block_size=2, max_blocks_per_seq=2)
+    m.allocate(0, 2)
+    m.allocate(1, 2)
+    assert m.num_free_blocks == 0
+    with pytest.raises(RuntimeError):
+        m.allocate(2, 1)
+    assert not m.can_allocate(1)
+    assert m.utilization() == 1.0

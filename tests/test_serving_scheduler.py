@@ -1,0 +1,144 @@
+"""Scheduler admission / token-budget / preemption under tight block pools.
+
+Pure host-side tests: the scheduler and KV manager are exercised without a
+model — ``schedule()`` + manual cursor advancement stand in for the jitted
+decode step.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import KVCacheManager, Request, Scheduler, SchedulerConfig
+from repro.serving.scheduler import RequestState
+
+
+def make(n_lanes=2, num_blocks=9, block_size=2, max_blocks=4,
+         token_budget=0):
+    kv = KVCacheManager(num_blocks, block_size, max_blocks_per_seq=max_blocks)
+    sched = Scheduler(SchedulerConfig(n_lanes=n_lanes,
+                                      token_budget=token_budget), kv)
+    return sched, kv
+
+
+def req(rid, plen=3, max_new=4):
+    return Request(rid, np.arange(plen, dtype=np.int32), max_new)
+
+
+def advance(sched, decision):
+    """Consume one token per scheduled request (the engine's role)."""
+    for r in decision.scheduled:
+        if r.cursor >= len(r.feed) - 1:
+            r.generated.append(0)
+            r.feed.append(0)
+        r.cursor += 1
+
+
+def test_admission_fills_lanes_fcfs():
+    sched, kv = make(n_lanes=2)
+    for i in range(4):
+        sched.add(req(i))
+    d = sched.schedule()
+    assert d.n_admitted == 2
+    assert [r.request_id for r in d.scheduled] == [0, 1]
+    assert sched.lanes[0].request_id == 0
+    assert sched.lanes[1].request_id == 1
+    assert len(sched.waiting) == 2
+    # every scheduled token got a KV slot
+    assert kv.n_tokens(0) == 1 and kv.n_tokens(1) == 1
+
+
+def test_token_budget_caps_admissions_and_prefers_decode():
+    sched, kv = make(n_lanes=4, num_blocks=33, token_budget=2)
+    sched.add(req(0, plen=1))            # 1-token prompt: decodes immediately
+    d = sched.schedule()
+    assert d.n_admitted == 1
+    advance(sched, d)
+    sched.add(req(1, plen=4))
+    sched.add(req(2, plen=4))
+    sched.add(req(3, plen=4))
+    d = sched.schedule()
+    # budget 2: the decode lane (req 0) runs, one prefill admission rides
+    assert d.n_decode >= 1
+    assert len(d.scheduled) == 2
+    ids = {r.request_id for r in d.scheduled}
+    assert 0 in ids and 1 in ids and 3 not in ids
+
+
+def test_preemption_by_recompute_lifo():
+    # pool: 4 usable blocks of 2 tokens; two lanes needing 3 blocks each
+    sched, kv = make(n_lanes=2, num_blocks=5, block_size=2, max_blocks=3)
+    sched.add(req(0, plen=4, max_new=2))
+    sched.add(req(1, plen=4, max_new=2))
+    preempted_seen = False
+    for _ in range(40):
+        if not sched.has_work():
+            break
+        d = sched.schedule()
+        if d.n_preempted:
+            preempted_seen = True
+            # LIFO: the later-admitted request is the victim
+            assert sched.waiting[0].request_id == 1
+            assert sched.waiting[0].n_preemptions >= 1
+            # victim's blocks came back to the pool or went to the survivor
+            assert not kv.has_seq(1)
+        advance(sched, d)
+        for r in list(sched.running):
+            if len(r.generated) >= r.max_new_tokens:
+                sched.finish(r)
+    assert preempted_seen
+    assert all(r.done for r in [sched.lanes[0]] if r is not None) or \
+        not sched.has_work()
+
+
+def test_preempted_request_resumes_with_generated_kept():
+    sched, kv = make(n_lanes=1, num_blocks=4, block_size=2, max_blocks=3)
+    r = req(0, plen=2, max_new=3)
+    sched.add(r)
+    d = sched.schedule()
+    advance(sched, d)
+    d = sched.schedule()
+    advance(sched, d)                     # emitted one token
+    assert r.generated == [0]
+    sched._preempt(r, d, [])
+    assert r.state == RequestState.WAITING
+    assert r.generated == [0]             # kept for recompute
+    d = sched.schedule()
+    assert d.n_admitted == 1
+    assert r.feed == [0, 1, 0]            # prompt + generated replayed
+    assert r.cursor == 0
+
+
+def test_single_request_outgrowing_pool_raises():
+    # prompt fits (2 blocks) so the request is admitted, but decode growth
+    # needs a 3rd block and there is no victim to evict but itself
+    sched, kv = make(n_lanes=1, num_blocks=3, block_size=2, max_blocks=4)
+    sched.add(req(0, plen=3, max_new=4))
+    with pytest.raises(RuntimeError):
+        for _ in range(10):
+            d = sched.schedule()
+            advance(sched, d)
+
+
+def test_oversized_prompt_never_admitted():
+    sched, kv = make(n_lanes=1, num_blocks=3, block_size=2, max_blocks=4)
+    sched.add(req(0, plen=6, max_new=2))  # needs 3 blocks, pool has 2
+    d = sched.schedule()
+    assert d.n_admitted == 0 and not d.scheduled
+    assert sched.has_work()               # engine surfaces this as a stall
+
+
+def test_admission_blocked_until_blocks_free():
+    sched, kv = make(n_lanes=2, num_blocks=3, block_size=2, max_blocks=2)
+    sched.add(req(0, plen=3, max_new=1))  # will occupy both usable blocks
+    d = sched.schedule()
+    advance(sched, d)
+    d = sched.schedule()
+    advance(sched, d)
+    d = sched.schedule()                  # 3rd token -> 2nd block
+    advance(sched, d)
+    sched.add(req(1, plen=3, max_new=1))
+    d = sched.schedule()
+    assert d.n_admitted == 0              # no blocks for req 1 yet
+    advance(sched, d)                     # req 0 emits its token
+    sched.finish(sched.lanes[0])
+    d = sched.schedule()
+    assert d.n_admitted == 1              # blocks freed, req 1 admitted

@@ -1,7 +1,7 @@
 """Transfer service: the paper's linear model + Fig-3 concurrency curve."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import build_system
 from repro.core.facility import paper_topology
