@@ -1,18 +1,29 @@
-"""Serving benchmark: dense-slot vs paged-KV decode at equal memory budget.
+"""Serving benchmark: dense-slot vs paged-KV vs unified chunked+prefix step.
 
-Both engines get the same physical KV budget (``DENSE_LANES * CACHE_LEN``
-cached tokens per layer).  The dense engine must carve it into
-``DENSE_LANES`` fixed slabs; the paged engine shares it as a block pool
-across ``PAGED_LANES`` lanes, committing blocks only as sequences grow.
-At several request-arrival rates we measure decode throughput (tokens/s,
-compile excluded), peak admitted concurrency, and cache utilization.
+Three scenario families, all at **equal physical KV budget**:
 
-Run: PYTHONPATH=src python benchmarks/bench_serving.py
+  * ``mixed``        — the PR 1 sweep: dense slabs vs paged blocks at
+                       several request-arrival rates (tokens/s, peak
+                       concurrency, utilization);
+  * ``long_prompt``  — long prompts, short outputs: chunked prefill
+                       (``chunk_tokens`` > 1) vs the PR 1 one-token-per-step
+                       engine; headline metric is mean time-to-first-token;
+  * ``prefix_heavy`` — many requests sharing one long preamble (the
+                       federated-analysis shape of arXiv:2304.04297):
+                       prefix-cache sharing vs re-prefilling every request;
+                       headline metric is aggregate decode throughput.
+
+``python benchmarks/bench_serving.py [--json BENCH_serving.json] [--quick]``
+emits the CSV rows plus a machine-readable JSON (tokens/s, TTFT,
+concurrency, speedups) so the perf trajectory is tracked across PRs; CI
+uploads it as a workflow artifact.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -25,6 +36,13 @@ N_REQUESTS = 24
 PROMPT_LO, PROMPT_HI = 4, 10
 MAX_NEW = 8
 ARRIVAL_RATES = (1, 2, 4)        # requests submitted per engine step
+
+# unified-step scenario knobs
+CHUNK_TOKENS = 16
+LONG_PROMPT = 48
+LONG_REQUESTS = 8
+PREFIX_LEN = 40
+PREFIX_REQUESTS = 16
 
 
 def _requests(vocab: int):
@@ -67,7 +85,116 @@ def _has_work(engine) -> bool:
     return bool(engine.queue or any(a is not None for a in engine.active))
 
 
-def run() -> List[str]:
+def _warm(engine, prompt_len: int, vocab: int) -> None:
+    """Warm THIS instance's jit (each engine jits its own step lambda)
+    across every pow2 chunk width the timed run can hit, then zero the
+    counters (including the prefix-cache stats the warm-up polluted)."""
+    rng = np.random.default_rng(99)
+    widths = {1}
+    w = 1
+    while w < getattr(engine, "chunk_tokens", 1):
+        w *= 2
+        widths.add(w)
+    for w in sorted(widths | {min(prompt_len, max(widths))}):
+        engine.submit(rng.integers(0, vocab, w).astype(np.int32), 2)
+        engine.run_until_drained()
+    if getattr(engine, "kv", None) is not None \
+            and engine.kv.enable_prefix_cache:
+        # warm the copy-on-write path too (a full-match admission forks the
+        # shared tail block, compiling the engine's _cow copy jit)
+        same = rng.integers(0, vocab, 2 * engine.block_size).astype(np.int32)
+        for _ in range(2):
+            engine.submit(same, 2)
+            engine.run_until_drained()
+    engine.tokens_decoded = 0
+    if hasattr(engine, "tokens_prefilled"):
+        engine.tokens_prefilled = 0
+    engine.steps = 0
+    if hasattr(engine, "kv"):
+        engine.kv.prefix_hits = 0
+        engine.kv.prefix_tokens_reused = 0
+        engine.kv.cow_copies = 0
+        engine.kv.evictions = 0
+
+
+def _drain_timed(engine, reqs) -> Dict[str, float]:
+    """Submit everything, drain, report throughput + TTFT + concurrency."""
+    ids = [engine.submit(p, m) for p, m in reqs]
+    peak_active = 0
+    done = []
+    t0 = time.perf_counter()
+    guard = 0
+    while _has_work(engine):
+        engine.step()
+        peak_active = max(peak_active, int(engine.stats()["active"]))
+        guard += 1
+        assert guard < 20_000, "serving benchmark did not drain"
+    dt = time.perf_counter() - t0
+    done = engine.run_until_drained()
+    assert len(done) == len(ids)
+    ttft = [r.t_first_token - r.t_submit for r in done]
+    s = engine.stats()
+    return {
+        "tok_s": engine.tokens_decoded / dt,
+        "ttft_mean_s": float(np.mean(ttft)),
+        "ttft_p90_s": float(np.quantile(ttft, 0.9)),
+        "peak_active": peak_active,
+        "steps": engine.steps,
+        "preemptions": int(s["preemptions"]),
+        "prefix_tokens_reused": int(s.get("prefix_tokens_reused", 0)),
+        "cow_copies": int(s.get("cow_copies", 0)),
+        "wall_s": dt,
+    }
+
+
+def _engines(api, params, quick: bool):
+    """(name, ctor) pairs: the PR 1 step shape vs the unified step, at the
+    same lanes / cache_len / block pool."""
+    from repro.serving import PagedDecodeEngine
+    lanes = 4 if quick else 8
+    pool = lanes * (CACHE_LEN // BLOCK_SIZE) + 1
+
+    def make(chunk, prefix):
+        return PagedDecodeEngine(api, params, n_slots=lanes,
+                                 cache_len=CACHE_LEN,
+                                 block_size=BLOCK_SIZE, num_blocks=pool,
+                                 chunk_tokens=chunk, prefix_cache=prefix)
+
+    return [("pr1", lambda: make(1, False)),
+            ("unified", lambda: make(CHUNK_TOKENS, True))]
+
+
+def _scenario_long_prompt(api, params, vocab: int, quick: bool):
+    rng = np.random.default_rng(1)
+    n = max(4, LONG_REQUESTS // (2 if quick else 1))
+    reqs = [(rng.integers(0, vocab, LONG_PROMPT).astype(np.int32), MAX_NEW)
+            for _ in range(n)]
+    out = {}
+    for name, ctor in _engines(api, params, quick):
+        eng = ctor()
+        _warm(eng, LONG_PROMPT, vocab)
+        out[name] = _drain_timed(eng, reqs)
+    return out
+
+
+def _scenario_prefix_heavy(api, params, vocab: int, quick: bool):
+    rng = np.random.default_rng(2)
+    preamble = rng.integers(0, vocab, PREFIX_LEN).astype(np.int32)
+    n = max(6, PREFIX_REQUESTS // (2 if quick else 1))
+    reqs = []
+    for _ in range(n):
+        tail = rng.integers(0, vocab, int(rng.integers(4, 9)))
+        reqs.append((np.concatenate([preamble, tail.astype(np.int32)]),
+                     MAX_NEW))
+    out = {}
+    for name, ctor in _engines(api, params, quick):
+        eng = ctor()
+        _warm(eng, PREFIX_LEN + 6, vocab)
+        out[name] = _drain_timed(eng, reqs)
+    return out
+
+
+def run(quick: bool = False, results: Dict = None) -> List[str]:
     from repro.configs import get_config
     from repro.models import build_model
     from repro.serving import PagedDecodeEngine, SlotDecodeEngine
@@ -82,32 +209,76 @@ def run() -> List[str]:
         if kind == "slot":
             return SlotDecodeEngine(api, params, n_slots=DENSE_LANES,
                                     cache_len=CACHE_LEN)
+        # pinned to the PR 1 step shape (one-token prefill, no prefix
+        # cache) so these tracked rows stay comparable across PRs; the
+        # unified step is measured by the scenarios below
         return PagedDecodeEngine(api, params, n_slots=PAGED_LANES,
                                  cache_len=CACHE_LEN,
                                  block_size=BLOCK_SIZE,
-                                 num_blocks=pool_blocks)
+                                 num_blocks=pool_blocks,
+                                 chunk_tokens=1, prefix_cache=False)
 
     rows = []
+    mixed = {}
     for kind in ("slot", "paged"):
-        for rate in ARRIVAL_RATES:
+        for rate in ARRIVAL_RATES if not quick else ARRIVAL_RATES[:1]:
             eng = make(kind)
-            # warm THIS instance's jit outside the timed region (each engine
-            # jits its own step lambda, so a throwaway engine warms nothing),
-            # then zero the counters the timed drive reports
-            eng.submit(reqs[0][0], 2)
-            eng.run_until_drained()
-            eng.tokens_decoded = 0
-            eng.steps = 0
+            _warm(eng, PROMPT_HI, cfg.vocab_size)
             r = _drive(eng, reqs, rate)
+            mixed[f"{kind}_rate{rate}"] = r
             us = 1e6 / max(r["tok_s"], 1e-9)
             rows.append(
                 f"serving/{kind}_rate{rate},{us:.0f},"
                 f"tok_s={r['tok_s']:.1f};peak_active={r['peak_active']};"
                 f"util={r['mean_util']:.2f};steps={r['steps']};"
                 f"preempt={r['preemptions']}")
+
+    long_prompt = _scenario_long_prompt(api, params, cfg.vocab_size, quick)
+    prefix_heavy = _scenario_prefix_heavy(api, params, cfg.vocab_size, quick)
+    ttft_speedup = (long_prompt["pr1"]["ttft_mean_s"]
+                    / max(long_prompt["unified"]["ttft_mean_s"], 1e-9))
+    tput_speedup = (prefix_heavy["unified"]["tok_s"]
+                    / max(prefix_heavy["pr1"]["tok_s"], 1e-9))
+    for scen, res in (("long_prompt", long_prompt),
+                      ("prefix_heavy", prefix_heavy)):
+        for name, r in res.items():
+            us = 1e6 / max(r["tok_s"], 1e-9)
+            rows.append(
+                f"serving/{scen}_{name},{us:.0f},"
+                f"tok_s={r['tok_s']:.1f};ttft_ms={r['ttft_mean_s']*1e3:.0f};"
+                f"steps={r['steps']};reused={r['prefix_tokens_reused']};"
+                f"cow={r['cow_copies']}")
+    rows.append(f"serving/speedups,0,ttft_long_prompt={ttft_speedup:.2f}x;"
+                f"throughput_prefix_heavy={tput_speedup:.2f}x")
+
+    if results is not None:
+        results.update({
+            "arch": cfg.name,
+            "config": {"cache_len": CACHE_LEN, "block_size": BLOCK_SIZE,
+                       "chunk_tokens": CHUNK_TOKENS, "quick": quick},
+            "scenarios": {"mixed": mixed, "long_prompt": long_prompt,
+                          "prefix_heavy": prefix_heavy},
+            "speedups": {"ttft_long_prompt": ttft_speedup,
+                         "throughput_prefix_heavy": tput_speedup},
+        })
     return rows
 
 
-if __name__ == "__main__":
-    for row in run():
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write machine-readable results (BENCH_serving.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (CI-sized)")
+    args = ap.parse_args()
+    results: Dict = {}
+    for row in run(quick=args.quick, results=results):
         print(row)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,9 +3,14 @@
 1. BraggNN via BatchEngine — the paper's edge-AI inference (stateless,
    dynamic micro-batching with padded compiled shapes).
 2. An LLM (smoke-size gemma) via DecodeEngine — continuous batching over a
-   paged KV cache (block pool + block tables + token-budget scheduler),
-   demonstrating the serving substrate the decode input shapes
+   paged KV cache (block pool + block tables + unified token-budget
+   scheduler), demonstrating the serving substrate the decode input shapes
    (decode_32k / long_500k) exercise at production scale.
+3. A shared-system-prompt fleet — every request opens with the same
+   preamble (the facility's standing analysis instructions), the shape the
+   federated real-time workflows produce.  The prefix cache forks the
+   preamble's KV blocks copy-on-write instead of re-prefilling them, and
+   the demo prints the measured hit rate and per-request prefill savings.
 
 Run: PYTHONPATH=src python examples/edge_serving.py
 """
@@ -17,7 +22,7 @@ import numpy as np
 from repro.configs import BraggNNConfig, get_config
 from repro.data.synthetic import bragg_patches
 from repro.models import braggnn, build_model
-from repro.serving import BatchEngine, DecodeEngine
+from repro.serving import BatchEngine, DecodeEngine, PagedDecodeEngine
 
 
 def serve_braggnn() -> None:
@@ -60,7 +65,51 @@ def serve_llm() -> None:
     print(f"  stats: {eng.stats()}")
 
 
+def serve_shared_prompt_fleet() -> None:
+    """Every request opens with the facility's standing system prompt; the
+    prefix cache shares its KV blocks copy-on-write across requests, so
+    only the first request pays the preamble prefill."""
+    cfg = get_config("gemma-7b").smoke_variant()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    system_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    n_requests, max_new = 8, 8
+
+    def run_fleet(prefix_cache: bool):
+        eng = PagedDecodeEngine(api, params, n_slots=2, cache_len=128,
+                                block_size=8, chunk_tokens=16,
+                                prefix_cache=prefix_cache)
+        gen = np.random.default_rng(3)
+        for _ in range(n_requests):
+            tail = gen.integers(0, cfg.vocab_size, 5).astype(np.int32)
+            eng.submit(np.concatenate([system_prompt, tail]), max_new)
+        done = eng.run_until_drained()
+        assert len(done) == n_requests
+        return eng, {r.request_id: r.generated for r in done}
+
+    eng_on, out_on = run_fleet(True)
+    eng_off, out_off = run_fleet(False)
+    assert out_on == out_off            # sharing never changes outputs
+    s = eng_on.stats()
+    prompt_tokens = n_requests * (len(system_prompt) + 5)
+    hit_rate = s["prefix_tokens_reused"] / prompt_tokens
+    saved = s["prefix_tokens_reused"] / n_requests
+    print(f"shared-prompt fleet: {n_requests} requests x "
+          f"{len(system_prompt)}-token system prompt")
+    print(f"  prefix cache ON:  {eng_on.steps} steps, "
+          f"{eng_on.tokens_prefilled} prefill tokens, "
+          f"{s['prefix_hits']} hits, {s['cow_copies']} CoW copies")
+    print(f"  prefix cache OFF: {eng_off.steps} steps, "
+          f"{eng_off.tokens_prefilled} prefill tokens")
+    print(f"  hit rate {hit_rate:.0%} of prompt tokens; "
+          f"~{saved:.0f} prefill tokens saved per request")
+    assert s["prefix_tokens_reused"] > 0
+    assert eng_on.tokens_prefilled < eng_off.tokens_prefilled
+
+
 if __name__ == "__main__":
     serve_braggnn()
     serve_llm()
+    serve_shared_prompt_fleet()
     print("edge_serving OK")

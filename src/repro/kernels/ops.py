@@ -92,6 +92,42 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out[:, None] if squeeze else out
 
 
+def paged_attention_chunk(q: jax.Array, k_pool: jax.Array,
+                          v_pool: jax.Array, block_tables: jax.Array,
+                          q_starts: jax.Array, q_lens: jax.Array, *,
+                          window: int = 0,
+                          use_kernel: Optional[bool] = None,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Chunked paged attention read: q (B, C, H, D) — C query tokens per
+    lane starting at absolute position ``q_starts[b]``, of which
+    ``q_lens[b]`` are real (padded rows compute garbage the caller
+    ignores) — against KV pools (num_blocks, bs, Hkv, D) via per-lane
+    block tables.  Causal masking inside the chunk; the unified
+    prefill+decode serving path (C = 1 is plain decode).
+
+    Backend dispatch mirrors :func:`paged_attention`: Pallas kernel on TPU,
+    pure-JAX reference (XLA gather + masked softmax) on CPU.
+    """
+    from repro.kernels import paged_attention as _pa
+    from repro.kernels import ref as _ref
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        B, C, H, D = q.shape
+        Hkv = k_pool.shape[2]
+        q5 = jnp.transpose(q.reshape(B, C, Hkv, H // Hkv, D),
+                           (0, 2, 1, 3, 4))
+        out = _pa.paged_attention_chunk(q5, k_pool, v_pool, block_tables,
+                                        q_starts, q_starts + q_lens,
+                                        window=window, interpret=interpret)
+        return jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, D)
+    return _ref.paged_attention_chunk_reference(q, k_pool, v_pool,
+                                                block_tables, q_starts,
+                                                window=window)
+
+
 # ---------------------------------------------------------------------------
 def ssd_scan_heads(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                    Cm: jax.Array, *, chunk: int = 128,

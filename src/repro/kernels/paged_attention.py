@@ -1,11 +1,12 @@
-"""Pallas TPU paged-attention (decode) kernel.
+"""Pallas TPU paged-attention kernel — variable q_len per lane.
 
-One query token per lane attends over its KV sequence scattered across
-fixed-size physical blocks of a shared pool.  The gather is expressed in
-the BlockSpec index maps: the per-lane block table is a *scalar-prefetch*
-operand (``pltpu.PrefetchScalarGridSpec``), so the j-th kv DMA of lane b
-fetches physical block ``block_tables[b, j]`` directly from the pool — no
-materialized (B, S, ...) gather ever exists in HBM.
+A chunk of C query tokens per lane (C = 1 is plain decode) attends over its
+KV sequence scattered across fixed-size physical blocks of a shared pool.
+The gather is expressed in the BlockSpec index maps: the per-lane block
+table is a *scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``), so
+the j-th kv DMA of lane b fetches physical block ``block_tables[b, j]``
+directly from the pool — no materialized (B, S, ...) gather ever exists in
+HBM.
 
 Schedule:
   * grid = (batch_lane, kv_head, logical_block); the trailing axis runs
@@ -14,9 +15,15 @@ Schedule:
   * blocks at or past the lane's context length are skipped with
     ``pl.when`` (their DMA still targets a legal pool slot — idle table
     entries point at the reserved null block 0);
-  * GQA: all G = H/Hkv query heads of a kv head ride in one (G, D) tile.
+  * GQA + chunking: all C chunk tokens of all G = H/Hkv query heads of a
+    kv head ride in one (C*G, D) tile; row r of the tile is chunk token
+    ``r // G``, so its absolute position is ``q_starts[b] + r // G`` and
+    the causal mask *inside* the chunk falls out of one iota compare;
+  * padded chunk rows (past a lane's real q_len) compute finite garbage
+    the caller ignores — their kv reads stay inside the lane's legal
+    blocks, so they can never fault.
 
-Validated in interpret mode against ``ref.paged_attention_reference``
+Validated in interpret mode against ``ref.paged_attention_*reference``
 (tests/test_kernels_paged_attention.py); the pure-JAX reference is also the
 production CPU path (kernels/ops.py dispatches on backend).
 """
@@ -32,9 +39,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_scr, l_scr, acc_scr, *, block_size: int,
-                       window: int, scale: float):
+def _paged_attn_kernel(tables_ref, ctx_ref, start_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_scr, l_scr, acc_scr, *, block_size: int,
+                       window: int, scale: float, group: int):
     b = pl.program_id(0)
     j = pl.program_id(2)          # logical block index within lane b
     nblk = pl.num_programs(2)
@@ -45,21 +52,24 @@ def _paged_attn_kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    ctx = ctx_ref[b]              # valid tokens in lane b; query at ctx - 1
+    ctx = ctx_ref[b]              # valid tokens in lane b after this chunk
+    start = start_ref[b]          # absolute position of chunk row 0
 
     @pl.when(j * block_size < ctx)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (C*G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
         v = v_ref[0, :, 0]                               # (bs, D)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)           # (G, bs)
+            preferred_element_type=jnp.float32)           # (C*G, bs)
         kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32,
                                                          s.shape, 1)
-        mask = kpos < ctx
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32,
+                                                s.shape, 0) // group
+        mask = kpos <= qpos
         if window:
-            mask &= (ctx - 1 - kpos) < window
+            mask &= (qpos - kpos) < window
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]
@@ -69,7 +79,7 @@ def _paged_attn_kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
             p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)           # (G, D)
+            preferred_element_type=jnp.float32)           # (C*G, D)
         m_scr[...] = m_new
 
     @pl.when(j == nblk - 1)
@@ -78,45 +88,80 @@ def _paged_attn_kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
-def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                    block_tables: jax.Array, ctx_lens: jax.Array, *,
-                    window: int = 0, interpret: bool = False) -> jax.Array:
-    """q: (B, Hkv, G, D); pools: (num_blocks, bs, Hkv, D);
-    block_tables: (B, max_blocks) int32 physical ids (null block = 0 for
-    unallocated logical blocks); ctx_lens: (B,) int32.
-    Returns (B, Hkv, G, D)."""
-    B, Hkv, G, D = q.shape
+def _paged_attention_rows(q_rows: jax.Array, k_pool: jax.Array,
+                          v_pool: jax.Array, block_tables: jax.Array,
+                          ctx_lens: jax.Array, q_starts: jax.Array, *,
+                          group: int, window: int,
+                          interpret: bool) -> jax.Array:
+    """Shared launcher: q_rows (B, Hkv, R, D) with R = C * group rows."""
+    B, Hkv, R, D = q_rows.shape
     num_blocks, bs, Hkv_p, _ = k_pool.shape
     assert Hkv_p == Hkv, (Hkv_p, Hkv)
     max_blocks = block_tables.shape[1]
     scale = 1.0 / (D ** 0.5)
 
     kernel = functools.partial(_paged_attn_kernel, block_size=bs,
-                               window=window, scale=scale)
+                               window=window, scale=scale, group=group)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hkv, max_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, j, tables, ctx: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, R, D),
+                         lambda b, h, j, tables, ctx, starts: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, tables, ctx: (tables[b, j], 0, h, 0)),
+                         lambda b, h, j, tables, ctx, starts:
+                         (tables[b, j], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, tables, ctx: (tables[b, j], 0, h, 0)),
+                         lambda b, h, j, tables, ctx, starts:
+                         (tables[b, j], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, j, tables, ctx: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, R, D),
+                               lambda b, h, j, tables, ctx, starts:
+                               (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),   # m
-            pltpu.VMEM((G, 1), jnp.float32),   # l
-            pltpu.VMEM((G, D), jnp.float32),   # acc
+            pltpu.VMEM((R, 1), jnp.float32),   # m
+            pltpu.VMEM((R, 1), jnp.float32),   # l
+            pltpu.VMEM((R, D), jnp.float32),   # acc
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q_rows.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
-      q, k_pool, v_pool)
+      q_starts.astype(jnp.int32), q_rows, k_pool, v_pool)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, ctx_lens: jax.Array, *,
+                    window: int = 0, interpret: bool = False) -> jax.Array:
+    """Decode (q_len = 1): q (B, Hkv, G, D) at position ``ctx_lens - 1``;
+    pools: (num_blocks, bs, Hkv, D); block_tables: (B, max_blocks) int32
+    physical ids (null block = 0 for unallocated logical blocks);
+    ctx_lens: (B,) int32.  Returns (B, Hkv, G, D)."""
+    B, Hkv, G, D = q.shape
+    out = _paged_attention_rows(q, k_pool, v_pool, block_tables, ctx_lens,
+                                ctx_lens - 1, group=G, window=window,
+                                interpret=interpret)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_chunk(q: jax.Array, k_pool: jax.Array,
+                          v_pool: jax.Array, block_tables: jax.Array,
+                          q_starts: jax.Array, ctx_lens: jax.Array, *,
+                          window: int = 0,
+                          interpret: bool = False) -> jax.Array:
+    """Chunked prefill/decode: q (B, Hkv, C, G, D) — C query tokens per
+    lane, token c at absolute position ``q_starts[b] + c``, causally masked
+    inside the chunk.  ``ctx_lens`` (B,) is each lane's total valid kv
+    length after the chunk (bounds the block sweep; padded chunk rows past
+    it yield garbage the caller ignores).  Returns (B, Hkv, C, G, D)."""
+    B, Hkv, C, G, D = q.shape
+    q_rows = q.reshape(B, Hkv, C * G, D)
+    out = _paged_attention_rows(q_rows, k_pool, v_pool, block_tables,
+                                ctx_lens, q_starts, group=G, window=window,
+                                interpret=interpret)
+    return out.reshape(B, Hkv, C, G, D)

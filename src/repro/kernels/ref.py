@@ -37,39 +37,63 @@ def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 # ---------------------------------------------------------------------------
 # paged_attention oracle — gather blocks, then plain masked softmax.
-# Also the production CPU decode path (ops.paged_attention dispatches here),
+# Also the production CPU serving path (ops.paged_attention* dispatch here),
 # so its numerics deliberately mirror models/layers.py::decode_attention
 # (scores einsum in input dtype then cast, weights back in q.dtype): a paged
 # lane and a dense slot lane produce bit-identical logits.
+#
+# The chunk form is the general one: each lane carries a chunk of C query
+# tokens, query c of lane b sits at absolute position q_starts[b] + c and
+# attends causally *inside* the chunk (kpos <= qpos).  Single-token decode
+# is the C = 1 special case with q_starts = ctx_lens - 1.
 # ---------------------------------------------------------------------------
-def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
-                              v_pool: jax.Array, block_tables: jax.Array,
-                              ctx_lens: jax.Array, *,
-                              window: int = 0) -> jax.Array:
-    """q: (B, H, D) one query token per lane; pools: (num_blocks, bs, Hkv, D);
-    block_tables: (B, max_blocks) int32; ctx_lens: (B,).  Returns (B, H, D).
+def paged_attention_chunk_reference(q: jax.Array, k_pool: jax.Array,
+                                    v_pool: jax.Array,
+                                    block_tables: jax.Array,
+                                    q_starts: jax.Array, *,
+                                    window: int = 0) -> jax.Array:
+    """q: (B, C, H, D) a chunk of C query tokens per lane; pools:
+    (num_blocks, bs, Hkv, D); block_tables: (B, max_blocks) int32;
+    q_starts: (B,) absolute position of each lane's first chunk token.
+    Returns (B, C, H, D).
 
     Logical kv position t of lane b lives in physical block
-    ``block_tables[b, t // bs]`` at offset ``t % bs``; positions at or past
-    ``ctx_lens[b]`` (and outside the sliding window) are masked out.
+    ``block_tables[b, t // bs]`` at offset ``t % bs``; query c masks kv
+    positions past ``q_starts[b] + c`` (and outside the sliding window) —
+    causal masking inside the chunk.  Padded queries (beyond a lane's real
+    chunk length) produce finite garbage the caller ignores.
     """
-    B, H, D = q.shape
+    B, C, H, D = q.shape
     _, bs, Hkv, _ = k_pool.shape
     max_blocks = block_tables.shape[1]
     G = H // Hkv
     k = k_pool[block_tables].reshape(B, max_blocks * bs, Hkv, D)
     v = v_pool[block_tables].reshape(B, max_blocks * bs, Hkv, D)
-    qg = q.reshape(B, Hkv, G, D)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+    qg = q.reshape(B, C, Hkv, G, D)
+    s = jnp.einsum("bckgd,bskd->bckgs", qg, k).astype(jnp.float32)
     s = s / (D ** 0.5)
-    kpos = jnp.arange(max_blocks * bs)[None, :]
-    valid = kpos < ctx_lens[:, None]
+    qpos = q_starts[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    kpos = jnp.arange(max_blocks * bs)[None, None, :]
+    valid = kpos <= qpos[:, :, None]
     if window:
-        valid &= (ctx_lens[:, None] - 1 - kpos) < window
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+        valid &= (qpos[:, :, None] - kpos) < window
+    s = jnp.where(valid[:, :, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
-    return out.reshape(B, H, D)
+    out = jnp.einsum("bckgs,bskd->bckgd", w, v)
+    return out.reshape(B, C, H, D)
+
+
+def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, block_tables: jax.Array,
+                              ctx_lens: jax.Array, *,
+                              window: int = 0) -> jax.Array:
+    """q: (B, H, D) one query token per lane at position ``ctx_lens - 1``;
+    the decode special case of :func:`paged_attention_chunk_reference`.
+    Returns (B, H, D)."""
+    out = paged_attention_chunk_reference(
+        q[:, None], k_pool, v_pool, block_tables, ctx_lens - 1,
+        window=window)
+    return out[:, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -31,9 +31,18 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="physical KV pool size; 0 = dense-equivalent")
     ap.add_argument("--token-budget", type=int, default=0,
-                    help="max tokens per engine step; 0 = unlimited")
+                    help="max tokens per engine step; "
+                         "0 = slots * chunk-tokens")
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="max prefill tokens per request per step "
+                         "(1 = PR 1 one-token-per-step prefill)")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="share identical prompt prefixes copy-on-write "
+                         "across requests (--no-prefix-cache disables)")
     ap.add_argument("--engine", choices=["auto", "paged", "slot"],
-                    default="auto")
+                    default="auto",
+                    help="paged block-pool engine vs dense-slot reference")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -49,7 +58,9 @@ def main() -> None:
     if paged is not False and (paged or api.supports_paged):
         kw = {"block_size": args.block_size,
               "num_blocks": args.num_blocks or None,
-              "token_budget": args.token_budget}
+              "token_budget": args.token_budget,
+              "chunk_tokens": args.chunk_tokens,
+              "prefix_cache": args.prefix_cache}
     eng = DecodeEngine(api, params, paged=paged, n_slots=args.slots,
                        cache_len=args.cache_len, window=window, **kw)
     rng = np.random.default_rng(0)

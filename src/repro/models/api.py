@@ -34,13 +34,26 @@ class ModelAPI:
     init_cache: Callable[..., PyTree]
     decode_step: Callable[..., Tuple[jax.Array, PyTree]]
     # paged-KV serving path (block pool + block tables); None for families
-    # whose decode state is O(1) recurrent rather than a growing KV sequence
+    # whose decode state is O(1) recurrent rather than a growing KV sequence.
+    # ``paged_step`` is the unified chunked step — (B, C>=1) tokens per call,
+    # prefill chunks and single-token decode share one compiled path;
+    # ``paged_decode_step`` is its q_len = 1 compatibility alias.
     init_paged_cache: Optional[Callable[..., PyTree]] = None
+    paged_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
     paged_decode_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
 
     @property
     def supports_paged(self) -> bool:
-        return self.paged_decode_step is not None
+        # a pre-unification ModelAPI carrying only the q_len=1 step still
+        # counts (resolve_paged_step wraps it for the engine)
+        return (self.paged_step is not None
+                or self.paged_decode_step is not None)
+
+    def resolve_paged_step(self):
+        """The unified chunked step, or the q_len=1 legacy step when that
+        is all the family provides (correct for width-1 calls only — the
+        engine clamps chunk_tokens to 1 in that case)."""
+        return self.paged_step or self.paged_decode_step
 
     def effective_window(self, seq_len: int) -> int:
         cfg = self.cfg
@@ -97,6 +110,8 @@ def build_model(cfg: ArchConfig) -> ModelAPI:
                 p, c, t, cfg, **kw),
             init_paged_cache=lambda b, **kw: vlm.init_paged_cache(
                 cfg, b, **kw),
+            paged_step=lambda p, c, t, **kw: vlm.paged_step(
+                p, c, t, cfg, **kw),
             paged_decode_step=lambda p, c, t, **kw: vlm.paged_decode_step(
                 p, c, t, cfg, **kw),
         )
@@ -111,6 +126,8 @@ def build_model(cfg: ArchConfig) -> ModelAPI:
             p, c, t, cfg, **kw),
         init_paged_cache=lambda b, **kw: transformer.init_paged_cache(
             cfg, b, **kw),
+        paged_step=lambda p, c, t, **kw: transformer.paged_step(
+            p, c, t, cfg, **kw),
         paged_decode_step=lambda p, c, t, **kw: transformer.paged_decode_step(
             p, c, t, cfg, **kw),
     )

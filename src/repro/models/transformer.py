@@ -100,29 +100,40 @@ def _apply_block(bp: Dict, x: jax.Array, positions: jax.Array,
     return x + mlp_out, aux
 
 
-def _apply_block_decode_paged(bp: Dict, x: jax.Array, cache_l: Dict,
-                              block_tables: jax.Array, pos: jax.Array,
-                              cfg: ArchConfig, *, window: int
-                              ) -> Tuple[jax.Array, Dict]:
-    """Decode one token through one block against the paged KV pool.
+def _apply_block_paged(bp: Dict, x: jax.Array, cache_l: Dict,
+                       block_tables: jax.Array, pos: jax.Array,
+                       q_lens: Optional[jax.Array], cfg: ArchConfig, *,
+                       window: int) -> Tuple[jax.Array, Dict]:
+    """Process a chunk of C tokens per lane through one block against the
+    paged KV pool — the unified prefill/decode path (C = 1 is plain
+    decode).
 
     cache_l: {"k","v"} (num_blocks, block_size, Hkv, D); block_tables
     (B, max_blocks) maps lane-logical blocks to pool slots; pos (B,) is the
-    write position (idle lanes point at the reserved null block 0, so the
-    scatter below always has a legal, never-read target).
+    first write position of each lane's chunk; q_lens (B,) the number of
+    real tokens in it (None = all C).  Writes past a lane's q_len land on
+    the reserved null block 0 — a legal, never-read target — so padded
+    lanes and budget-deferred lanes are harmless.
     """
     from repro.kernels import ops as kernel_ops
-    B = x.shape[0]
+    B, C = x.shape[:2]
     bs = cache_l["k"].shape[1]
+    max_blocks = block_tables.shape[1]
     xn = apply_norm(cfg.norm_type, bp["attn_norm"], x)
-    q, k, v = layers.project_qkv(bp["attn"], xn, pos[:, None], cfg)
-    bidx = jnp.arange(B)
-    blk = block_tables[bidx, pos // bs]
-    off = pos % bs
-    new_k = cache_l["k"].at[blk, off].set(k[:, 0].astype(cache_l["k"].dtype))
-    new_v = cache_l["v"].at[blk, off].set(v[:, 0].astype(cache_l["v"].dtype))
-    attn = kernel_ops.paged_attention(q, new_k, new_v, block_tables, pos + 1,
-                                      window=window)
+    offs = jnp.arange(C)
+    positions = pos[:, None] + offs[None, :]                  # (B, C)
+    q, k, v = layers.project_qkv(bp["attn"], xn, positions, cfg)
+    if q_lens is None:
+        q_lens = jnp.full((B,), C, jnp.int32)
+    valid = offs[None, :] < q_lens[:, None]                   # (B, C)
+    bidx = jnp.arange(B)[:, None]
+    lblk = jnp.minimum(positions // bs, max_blocks - 1)
+    blk = jnp.where(valid, block_tables[bidx, lblk], 0)       # 0: null block
+    off = jnp.where(valid, positions % bs, 0)
+    new_k = cache_l["k"].at[blk, off].set(k.astype(cache_l["k"].dtype))
+    new_v = cache_l["v"].at[blk, off].set(v.astype(cache_l["v"].dtype))
+    attn = kernel_ops.paged_attention_chunk(q, new_k, new_v, block_tables,
+                                            pos, q_lens, window=window)
     attn = layers.project_out(bp["attn"], attn, cfg)
 
     if cfg.parallel_block:
@@ -318,19 +329,25 @@ def init_paged_cache(cfg: ArchConfig, n_lanes: int, *, num_blocks: int,
     return cache
 
 
-def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
-                      cfg: ArchConfig, *, window: int = 0,
-                      compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
-    """tokens (B,1) -> (logits (B,1,V), new cache), paged-KV variant.
+def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
+               cfg: ArchConfig, *, window: int = 0,
+               compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """tokens (B,C) -> (logits (B,C,V), new cache) — the unified
+    prefill/decode step over the paged KV pool.  A lane's chunk can be a
+    multi-token prefill slice, a single decode token (C = 1), or padding;
+    prefill and decode therefore share one compiled path per chunk width.
 
-    ``cache["pos"]`` is the per-lane write position (== tokens already in
-    that lane's KV) and doubles as the RoPE position; the serving engine
-    overwrites ``pos``/``block_tables`` before every step as lanes turn
-    over, so the ``pos + 1`` carried out below only services the
+    ``cache["pos"]`` is the per-lane position of the chunk's first token
+    (== tokens already in that lane's KV) and anchors RoPE;
+    ``cache["q_lens"]`` (optional, (B,)) is the number of real tokens in
+    each lane's chunk — absent means all C.  The serving engine overwrites
+    ``pos``/``q_lens``/``block_tables`` before every step as lanes turn
+    over, so the advanced ``pos`` carried out below only services the
     single-sequence debug path.
     """
     pos = cache["pos"]
     tables = cache["block_tables"]
+    q_lens = cache.get("q_lens")
     x = layers.embed_tokens(params["embed"], tokens, compute_dtype)
     if getattr(cfg, "scale_embeddings", False):
         x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
@@ -338,14 +355,14 @@ def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
     new_head = []
     for i, bp in enumerate(params.get("head_blocks", [])):
         cl = {"k": cache["head"]["k"][i], "v": cache["head"]["v"][i]}
-        x, ncl = _apply_block_decode_paged(bp, x, cl, tables, pos, cfg,
-                                           window=window)
+        x, ncl = _apply_block_paged(bp, x, cl, tables, pos, q_lens, cfg,
+                                    window=window)
         new_head.append(ncl)
 
     def layer_step(x, inp):
         bp, cl = inp
-        x, ncl = _apply_block_decode_paged(bp, x, cl, tables, pos, cfg,
-                                           window=window)
+        x, ncl = _apply_block_paged(bp, x, cl, tables, pos, q_lens, cfg,
+                                    window=window)
         return x, ncl
 
     x, new_scan = jax.lax.scan(layer_step, x,
@@ -357,14 +374,26 @@ def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
     new_cache = {
         "scan": new_scan,
         "block_tables": tables,
-        "pos": pos + 1,
+        "pos": pos + (tokens.shape[1] if q_lens is None else q_lens),
     }
+    if q_lens is not None:
+        new_cache["q_lens"] = q_lens
     if new_head:
         new_cache["head"] = {
             "k": jnp.stack([c["k"] for c in new_head]),
             "v": jnp.stack([c["v"] for c in new_head]),
         }
     return logits, new_cache
+
+
+def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                      cfg: ArchConfig, *, window: int = 0,
+                      compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """tokens (B,1) -> (logits (B,1,V), new cache) — kept as the q_len = 1
+    special case of :func:`paged_step` for the single-sequence debug path
+    and API compatibility."""
+    return paged_step(params, cache, tokens, cfg, window=window,
+                      compute_dtype=compute_dtype)
 
 
 def decode_step(params: Dict, cache: Dict, tokens: jax.Array,

@@ -85,6 +85,16 @@ def init_paged_cache(cfg: ArchConfig, n_lanes: int, **kw) -> Dict:
     return transformer.init_paged_cache(cfg, n_lanes, **kw)
 
 
+def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
+               cfg: ArchConfig, *, window: int = 0,
+               compute_dtype=jnp.bfloat16):
+    # image patches enter during prefill; the unified chunked step serves
+    # the text backbone (prefill chunks and decode share one compiled path)
+    return transformer.paged_step(params["lm"], cache, tokens, cfg,
+                                  window=window,
+                                  compute_dtype=compute_dtype)
+
+
 def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
                       cfg: ArchConfig, *, window: int = 0,
                       compute_dtype=jnp.bfloat16):

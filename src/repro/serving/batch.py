@@ -14,6 +14,17 @@ import numpy as np
 PyTree = Any
 
 
+def padded_pow2(n: int, cap: int = 0) -> int:
+    """Smallest power of two >= n (optionally capped).  Both engines pad
+    variable work to a few fixed compiled shapes with this: BatchEngine its
+    micro-batches, PagedDecodeEngine its per-step chunk width — bounding
+    recompiles to O(log cap) instead of one per observed size."""
+    size = 1
+    while size < n:
+        size *= 2
+    return min(size, cap) if cap else size
+
+
 @dataclasses.dataclass
 class BatchStats:
     n_requests: int = 0
@@ -45,10 +56,7 @@ class BatchEngine:
         self.stats = BatchStats()
 
     def _padded_size(self, n: int) -> int:
-        size = 1
-        while size < n:
-            size *= 2
-        return min(size, self.max_batch)
+        return padded_pow2(n, self.max_batch)
 
     def infer(self, x: np.ndarray) -> np.ndarray:
         """Process a request of any size by padded fixed-shape batches."""

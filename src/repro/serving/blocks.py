@@ -6,7 +6,7 @@ sequence grows instead of one dense ``cache_len`` slab per slot.  Two layers:
 
   * :class:`BlockAllocator` — the physical pool: a free-list plus per-block
     reference counts (refcount > 1 means the block is shared between
-    sequences, e.g. a forked prefix).
+    sequences, e.g. a forked or prefix-matched block).
   * :class:`KVCacheManager` — per-sequence logical->physical block tables
     with ``allocate`` / ``append_token`` / ``free`` / ``fork`` APIs, and the
     padded numpy block-table matrix the jitted decode step consumes.
@@ -14,12 +14,28 @@ sequence grows instead of one dense ``cache_len`` slab per slot.  Two layers:
 Physical block 0 is reserved as the *null block*: idle engine lanes point
 their table at it so the jitted scatter always has a legal target, and no
 live sequence is ever given block 0.
+
+Prefix sharing (``enable_prefix_cache=True``): every *full* block is
+content-hashed over its token ids chained to its prefix
+(``digest = H(parent_digest, block_tokens)``), and the manager keeps one
+reference of its own on each registered block.  A newly admitted sequence
+(:meth:`begin_seq`) walks its feed block-by-block through the hash table and
+*attaches* the longest chain of matching full blocks instead of recomputing
+them; partially-filled blocks are never returned by the lookup.  Blocks whose
+only remaining reference is the cache's own hold are *evictable*: they are
+reclaimed LRU-first when the free list runs dry, so cached prefixes never
+block admissions.  Writing into a block that is still shared (refcount > 1 —
+e.g. the tail block of a fully-matched prompt whose last token must be
+re-processed to produce logits) triggers **copy-on-write**: a fresh block is
+allocated, a ``(src, dst)`` device-copy op is queued for the engine to apply
+to the KV pools before its next step, and the sequence's table is repointed.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Dict, List, Optional
+import hashlib
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,9 +90,24 @@ class BlockAllocator:
 
 @dataclasses.dataclass
 class SeqBlocks:
-    """One sequence's logical view: table[i] holds tokens [i*bs, (i+1)*bs)."""
+    """One sequence's logical view: table[i] holds tokens [i*bs, (i+1)*bs).
+
+    ``digests`` is the hash chain of this sequence's *completed* full blocks
+    and ``pending`` the token ids of the current partial block — both only
+    maintained when the prefix cache is on and token contents are known
+    (``pending is None`` marks the sequence unhashable).
+    """
     table: List[int] = dataclasses.field(default_factory=list)
     n_tokens: int = 0
+    digests: List[str] = dataclasses.field(default_factory=list)
+    pending: Optional[List[int]] = None
+
+
+def _digest(parent: str, tokens: Sequence[int]) -> str:
+    h = hashlib.sha256()
+    h.update(parent.encode())
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.hexdigest()
 
 
 class KVCacheManager:
@@ -89,16 +120,36 @@ class KVCacheManager:
     """
 
     def __init__(self, num_blocks: int, block_size: int, *,
-                 max_blocks_per_seq: int) -> None:
+                 max_blocks_per_seq: int,
+                 enable_prefix_cache: bool = False) -> None:
         self.allocator = BlockAllocator(num_blocks)
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
+        self.enable_prefix_cache = enable_prefix_cache
         self._seqs: Dict[int, SeqBlocks] = {}
+        # prefix cache state: digest -> block, block -> digest, LRU of
+        # blocks whose only reference is the cache's own hold
+        self._cached: Dict[str, int] = {}
+        self._block_digest: Dict[int, str] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._copy_ops: List[Tuple[int, int]] = []
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
+        self.cow_copies = 0
+        self.evictions = 0
+        # bumped whenever the set of cached digests changes — lets the
+        # scheduler skip re-hashing a blocked prompt when nothing moved
+        self.cache_version = 0
+        # can_admit -> begin_seq handoff: the admission plan for one feed,
+        # so back-to-back check+admit hashes the prompt once, not twice
+        self._plan_cache = None
 
     # ------------------------------------------------------------------
     @property
     def num_free_blocks(self) -> int:
-        return self.allocator.num_free
+        """Blocks available for new allocations: the free list plus cached
+        blocks no live sequence references (evicted on demand)."""
+        return self.allocator.num_free + len(self._lru)
 
     def n_tokens(self, seq_id: int) -> int:
         return self._seqs[seq_id].n_tokens
@@ -115,7 +166,159 @@ class KVCacheManager:
             raise ValueError(
                 f"sequence of {n_tokens} tokens needs {need} blocks, over the "
                 f"per-seq ceiling {self.max_blocks_per_seq}")
-        return need <= self.allocator.num_free
+        return need <= self.num_free_blocks
+
+    # ------------------------------------------------------------------
+    # internal pool plumbing (eviction-aware)
+    # ------------------------------------------------------------------
+    def _evict_one(self) -> None:
+        """Reclaim the least-recently-registered cache-only block."""
+        blk, _ = self._lru.popitem(last=False)
+        digest = self._block_digest.pop(blk)
+        del self._cached[digest]
+        self.allocator.decref(blk)          # drop the cache's hold -> free
+        self.evictions += 1
+        self.cache_version += 1
+
+    def _alloc_block(self) -> int:
+        if self.allocator.num_free == 0 and self._lru:
+            self._evict_one()
+        return self.allocator.allocate()
+
+    def _attach(self, blk: int) -> None:
+        """Take a sequence reference on an existing (cached) block."""
+        self.allocator.incref(blk)
+        self._lru.pop(blk, None)            # in use again: not evictable
+
+    def _release(self, blk: int) -> None:
+        """Drop a sequence reference; cache-held blocks become evictable."""
+        self.allocator.decref(blk)
+        if blk in self._block_digest and self.allocator.refcount(blk) == 1:
+            self._lru[blk] = None
+            self._lru.move_to_end(blk)
+
+    def _register_full_block(self, seq: SeqBlocks) -> None:
+        """The sequence just completed a full block: chain-hash it and (if
+        this content is new) register the block for prefix sharing."""
+        parent = seq.digests[-1] if seq.digests else ""
+        digest = _digest(parent, seq.pending)
+        seq.digests.append(digest)
+        seq.pending = []
+        if digest in self._cached:
+            return                          # identical content already cached
+        blk = seq.table[(seq.n_tokens - 1) // self.block_size]
+        self._cached[digest] = blk
+        self._block_digest[blk] = digest
+        self.allocator.incref(blk)          # the cache's own hold
+        self.cache_version += 1
+
+    def _match_prefix(self, feed: Sequence[int]
+                      ) -> Tuple[List[str], List[int]]:
+        """Longest chain of cached *full* blocks covering a prefix of feed."""
+        digests: List[str] = []
+        blocks: List[int] = []
+        parent = ""
+        bs = self.block_size
+        for i in range(0, len(feed) - len(feed) % bs, bs):
+            d = _digest(parent, feed[i:i + bs])
+            blk = self._cached.get(d)
+            if blk is None:
+                break
+            digests.append(d)
+            blocks.append(blk)
+            parent = d
+        return digests, blocks
+
+    # ------------------------------------------------------------------
+    def lookup_prefix(self, feed: Sequence[int]) -> int:
+        """Number of feed tokens covered by cached full blocks (always a
+        multiple of ``block_size`` — partially-filled blocks never match)."""
+        if not self.enable_prefix_cache:
+            return 0
+        _, blocks = self._match_prefix([int(t) for t in feed])
+        return len(blocks) * self.block_size
+
+    def _plan_admission(self, feed: Sequence[int]
+                        ) -> Tuple[List[str], List[int], int]:
+        """Choose the cached prefix blocks a new sequence would attach.
+        Returns (digests, blocks, num_computed).  A full-feed match forces
+        the capped last token's write into the shared tail block (a
+        copy-on-write fork needing one extra block); when the pool cannot
+        afford that fork the last matched block is dropped from the plan,
+        so the tail recomputes into a fresh/evicted block instead."""
+        digests, blocks = self._match_prefix(feed)
+        matched = len(blocks) * self.block_size
+        num_computed = min(matched, len(feed) - 1)
+        if num_computed < matched:       # full match -> CoW on first write
+            shared = set(blocks)
+            avail = self.allocator.num_free + sum(
+                1 for b in self._lru if b not in shared)
+            if avail < 1:
+                digests, blocks = digests[:-1], blocks[:-1]
+                num_computed = len(blocks) * self.block_size
+        return digests, blocks, num_computed
+
+    def can_admit(self, feed: Sequence[int]) -> bool:
+        """Prefix-aware admission check: can the pool cover ``feed`` given
+        the full blocks a prefix match would share (plus the copy-on-write
+        fork a fully-matched prompt needs)?"""
+        need = self.blocks_needed(len(feed))
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"sequence of {len(feed)} tokens needs {need} blocks, over "
+                f"the per-seq ceiling {self.max_blocks_per_seq}")
+        if not self.enable_prefix_cache or need <= self.allocator.num_free:
+            # fast path also skips re-hashing a blocked prompt every step
+            return need <= self.num_free_blocks
+        feed = [int(t) for t in feed]
+        digests, blocks, num_computed = self._plan_admission(feed)
+        self._plan_cache = (feed, self.cache_version,
+                            digests, blocks, num_computed)
+        extra = 1 if num_computed < len(blocks) * self.block_size else 0
+        shared = set(blocks)
+        evictable = sum(1 for b in self._lru if b not in shared)
+        return need - len(blocks) + extra \
+            <= self.allocator.num_free + evictable
+
+    def begin_seq(self, seq_id: int, feed: Sequence[int]) -> int:
+        """Register a sequence, sharing the longest cached prefix of its
+        feed.  Returns the number of already-computed tokens (the caller's
+        cursor start) — capped at ``len(feed) - 1`` so at least one token is
+        processed to produce logits.  When that cap lands mid-block the
+        shared tail block is attached anyway; the first write into it
+        triggers copy-on-write."""
+        if seq_id in self._seqs:
+            raise KeyError(f"seq {seq_id} already allocated")
+        if not self.enable_prefix_cache or not len(feed):
+            self.allocate(seq_id, 0)
+            return 0
+        feed = [int(t) for t in feed]
+        cached = self._plan_cache
+        self._plan_cache = None
+        if cached and cached[0] == feed and cached[1] == self.cache_version:
+            digests, blocks, num_computed = cached[2:]
+        else:
+            digests, blocks, num_computed = self._plan_admission(feed)
+        n_attach = self.blocks_needed(num_computed)
+        table = blocks[:n_attach]
+        for blk in table:
+            self._attach(blk)
+        n_full = num_computed // self.block_size
+        seq = SeqBlocks(table=list(table), n_tokens=num_computed,
+                        digests=digests[:n_full],
+                        pending=feed[n_full * self.block_size:num_computed])
+        self._seqs[seq_id] = seq
+        if num_computed:
+            self.prefix_hits += 1
+            self.prefix_tokens_reused += num_computed
+        return num_computed
+
+    def take_copy_ops(self) -> List[Tuple[int, int]]:
+        """Drain queued copy-on-write ``(src, dst)`` block copies.  The
+        engine must apply them to the device KV pools before its next step
+        writes into the ``dst`` blocks."""
+        ops, self._copy_ops = self._copy_ops, []
+        return ops
 
     # ------------------------------------------------------------------
     def allocate(self, seq_id: int, n_tokens: int = 0) -> None:
@@ -123,54 +326,89 @@ class KVCacheManager:
         if seq_id in self._seqs:
             raise KeyError(f"seq {seq_id} already allocated")
         need = self.blocks_needed(n_tokens)
-        if need > self.allocator.num_free:
+        if need > self.num_free_blocks:
             raise RuntimeError(
                 f"seq {seq_id} needs {need} blocks, "
-                f"{self.allocator.num_free} free")
-        seq = SeqBlocks()
+                f"{self.num_free_blocks} free")
+        # pre-allocated contents are unknown: such sequences are unhashable
+        seq = SeqBlocks(pending=[] if (self.enable_prefix_cache
+                                       and n_tokens == 0) else None)
         for _ in range(need):
-            seq.table.append(self.allocator.allocate())
+            seq.table.append(self._alloc_block())
         seq.n_tokens = n_tokens
         self._seqs[seq_id] = seq
 
-    def append_token(self, seq_id: int) -> Optional[int]:
-        """Grow the sequence by one token; returns the newly allocated
-        physical block id when the token crosses a block boundary, else
-        None.  Raises RuntimeError when the pool is exhausted (the
-        scheduler turns that into a preemption)."""
+    def append_needs_block(self, seq_id: int) -> bool:
+        """True when the next ``append_token`` must draw a block from the
+        pool — either crossing into a new logical block, or a copy-on-write
+        of a shared tail block."""
         seq = self._seqs[seq_id]
-        if seq.n_tokens % self.block_size == 0:
+        bi = seq.n_tokens // self.block_size
+        if bi >= len(seq.table):
+            return True
+        return self.allocator.refcount(seq.table[bi]) > 1
+
+    def append_token(self, seq_id: int,
+                     token: Optional[int] = None) -> Optional[int]:
+        """Grow the sequence by one token; returns the newly allocated
+        physical block id when the token crosses a block boundary (or a
+        copy-on-write replaced the shared tail block), else None.  Raises
+        RuntimeError when the pool is exhausted (the scheduler turns that
+        into a preemption).  ``token`` is the id being appended — needed for
+        prefix-cache hashing; hashing is disabled for the sequence when
+        omitted."""
+        seq = self._seqs[seq_id]
+        bi = seq.n_tokens // self.block_size
+        new_block: Optional[int] = None
+        if bi >= len(seq.table):
             if len(seq.table) >= self.max_blocks_per_seq:
                 raise ValueError(
                     f"seq {seq_id} exceeds max_blocks_per_seq "
                     f"({self.max_blocks_per_seq})")
-            new = self.allocator.allocate()
-            seq.table.append(new)
-            seq.n_tokens += 1
-            return new
+            new_block = self._alloc_block()
+            seq.table.append(new_block)
+        else:
+            blk = seq.table[bi]
+            if self.allocator.refcount(blk) > 1:
+                # copy-on-write: the tail block is shared (other sequences
+                # and/or the cache hold it) — never write into it
+                new_block = self._alloc_block()
+                self._copy_ops.append((blk, new_block))
+                self._release(blk)
+                seq.table[bi] = new_block
+                self.cow_copies += 1
         seq.n_tokens += 1
-        return None
+        if seq.pending is not None:
+            if token is None:
+                seq.pending = None          # content unknown: stop hashing
+            else:
+                seq.pending.append(int(token))
+                if len(seq.pending) == self.block_size:
+                    self._register_full_block(seq)
+        return new_block
 
     def free(self, seq_id: int) -> None:
         seq = self._seqs.pop(seq_id)
         for blk in seq.table:
-            self.allocator.decref(blk)
+            self._release(blk)
 
     def fork(self, src_seq_id: int, dst_seq_id: int) -> None:
         """Share the source's blocks with a new sequence (refcounted).
 
-        The fork is read-only sharing for the already-written prefix; the
-        first ``append_token`` past a shared *partial* tail block would need
-        copy-on-write, so forks are only allowed at block-aligned lengths.
+        Forks are only allowed at block-aligned lengths; a later write into
+        any still-shared block copy-on-writes it (see ``append_token``).
         """
         src = self._seqs[src_seq_id]
         if src.n_tokens % self.block_size != 0:
             raise ValueError("fork requires a block-aligned source length")
         if dst_seq_id in self._seqs:
             raise KeyError(f"seq {dst_seq_id} already allocated")
-        dst = SeqBlocks(table=list(src.table), n_tokens=src.n_tokens)
+        dst = SeqBlocks(table=list(src.table), n_tokens=src.n_tokens,
+                        digests=list(src.digests),
+                        pending=None if src.pending is None
+                        else list(src.pending))
         for blk in dst.table:
-            self.allocator.incref(blk)
+            self._attach(blk)
         self._seqs[dst_seq_id] = dst
 
     # ------------------------------------------------------------------
@@ -186,6 +424,7 @@ class KVCacheManager:
         return row
 
     def utilization(self) -> float:
-        """Fraction of non-null pool blocks currently allocated."""
+        """Fraction of non-null pool blocks currently allocated (cached
+        prefix blocks count: they hold live KV)."""
         total = self.allocator.num_blocks - 1
         return (total - self.allocator.num_free) / max(total, 1)

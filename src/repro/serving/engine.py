@@ -4,10 +4,14 @@ Two interchangeable decode engines behind one facade:
 
   * :class:`PagedDecodeEngine` — continuous batching over a **paged KV
     cache**: requests borrow fixed-size blocks from a shared pool
-    (serving/blocks.py) under a token-budget scheduler with
-    preemption-by-recompute (serving/scheduler.py).  Memory is committed
-    per block actually used, so at equal memory budget it admits far more
-    concurrent requests than dense per-slot slabs.
+    (serving/blocks.py) under a unified token-budget scheduler
+    (serving/scheduler.py).  Every engine step is one token-budgeted batch
+    mixing multi-token prefill chunks and single-token decodes through one
+    compiled ``paged_step`` path; identical prompt prefixes are shared
+    copy-on-write through the manager's prefix cache instead of being
+    re-prefilled.  Memory is committed per block actually used, so at equal
+    memory budget it admits far more concurrent requests than dense
+    per-slot slabs.
   * :class:`SlotDecodeEngine` — the dense reference: one ``cache_len`` slab
     per lane, kept for model families whose decode state is O(1) recurrent
     (ssm/hybrid/audio) and as the equivalence oracle for the paged path.
@@ -19,12 +23,14 @@ dense-slot engine otherwise — the public surface (``submit`` /
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.batch import padded_pow2
 from repro.serving.blocks import KVCacheManager
 from repro.serving.scheduler import (Request, Scheduler, SchedulerConfig,
                                      StepDecision)
@@ -57,7 +63,8 @@ class PagedDecodeEngine:
     def __init__(self, model_api, params: PyTree, *, n_slots: int,
                  cache_len: int, eos_token: int = -1, window: int = 0,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 token_budget: int = 0, cache_dtype=None,
+                 token_budget: int = 0, chunk_tokens: int = 16,
+                 prefix_cache: bool = True, cache_dtype=None,
                  compute_dtype=None) -> None:
         if not getattr(model_api, "supports_paged", False):
             raise ValueError(
@@ -70,14 +77,24 @@ class PagedDecodeEngine:
         self.eos = eos_token
         self.window = window
         self.block_size = block_size
+        if chunk_tokens < 1:
+            # unlike the raw SchedulerConfig, the engine compiles one step
+            # per pow2 chunk width, so an "unlimited" chunk is not meaningful
+            raise ValueError("chunk_tokens must be >= 1 "
+                             "(1 = one-token-per-step prefill)")
+        if getattr(model_api, "paged_step", None) is None:
+            chunk_tokens = 1          # legacy q_len=1 step: no chunking
+        self.chunk_tokens = chunk_tokens
         self.max_blocks = -(-cache_len // block_size)
         if num_blocks is None:
             num_blocks = n_slots * self.max_blocks + 1   # +1: null block
         self.num_blocks = num_blocks
         self.kv = KVCacheManager(num_blocks, block_size,
-                                 max_blocks_per_seq=self.max_blocks)
+                                 max_blocks_per_seq=self.max_blocks,
+                                 enable_prefix_cache=prefix_cache)
         self.scheduler = Scheduler(
-            SchedulerConfig(n_lanes=n_slots, token_budget=token_budget),
+            SchedulerConfig(n_lanes=n_slots, token_budget=token_budget,
+                            chunk_tokens=self.chunk_tokens),
             self.kv)
         kw = {"num_blocks": num_blocks, "block_size": block_size,
               "max_blocks_per_lane": self.max_blocks}
@@ -88,13 +105,23 @@ class PagedDecodeEngine:
         if compute_dtype is not None:
             step_kw["compute_dtype"] = compute_dtype
         # donate the cache: the KV pool is updated in place rather than
-        # double-buffered (decisive for pool size = device memory on TPU)
+        # double-buffered (decisive for pool size = device memory on TPU).
+        # One jitted step serves every chunk width; widths are padded to
+        # powers of two so it retraces O(log chunk_tokens) times, and a
+        # decode-only step stays at width 1 (no padded-width prefill tax).
+        step_fn = model_api.resolve_paged_step() \
+            if hasattr(model_api, "resolve_paged_step") \
+            else (getattr(model_api, "paged_step", None)
+                  or model_api.paged_decode_step)
         self._step = jax.jit(
-            lambda p, c, t: model_api.paged_decode_step(p, c, t, **step_kw),
+            lambda p, c, t: step_fn(p, c, t, **step_kw),
             donate_argnums=(1,))
+        self._cow = jax.jit(self._apply_copies, donate_argnums=(0,))
         self._finished: List[Request] = []
         self._next_id = 0
         self.tokens_decoded = 0
+        self.tokens_prefilled = 0
+        self.cow_block_copies = 0
         self.steps = 0
 
     # ------------------------------------------------------------------
@@ -109,38 +136,83 @@ class PagedDecodeEngine:
                 f"at most {usable} per request")
         rid = self._next_id
         self._next_id += 1
-        self.scheduler.add(Request(rid, prompt, max_new_tokens))
+        req = Request(rid, prompt, max_new_tokens)
+        req.t_submit = time.perf_counter()
+        self.scheduler.add(req)
         return rid
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _apply_copies(cache: Dict, src: jax.Array, dst: jax.Array) -> Dict:
+        """Copy-on-write block copies: pool[dst] = pool[src] for every
+        layer's K and V pool (padding pairs are (0, 0) — a null-block
+        self-copy no-op)."""
+        out = dict(cache)
+        for part in ("scan", "head"):
+            if part in cache:
+                k, v = cache[part]["k"], cache[part]["v"]
+                out[part] = {"k": k.at[:, dst].set(k[:, src]),
+                             "v": v.at[:, dst].set(v[:, src])}
+        return out
+
     def step(self) -> StepDecision:
-        """One engine iteration: one token per scheduled lane."""
+        """One engine iteration: one token-budgeted batch mixing prefill
+        chunks and decodes."""
         decision = self.scheduler.schedule()
-        tokens = np.zeros((self.n_slots, 1), np.int32)
+        # apply queued copy-on-write copies BEFORE this step's KV writes
+        # land in the forked blocks
+        copies = self.kv.take_copy_ops()
+        if copies:
+            n = padded_pow2(len(copies))
+            src = np.zeros((n,), np.int32)
+            dst = np.zeros((n,), np.int32)
+            for i, (s, d) in enumerate(copies):
+                src[i], dst[i] = s, d
+            self.cache = self._cow(self.cache, jnp.asarray(src),
+                                   jnp.asarray(dst))
+            self.cow_block_copies += len(copies)
+
+        sched_ids = {r.request_id for r in decision.scheduled}
+        width = padded_pow2(max(
+            [decision.num_scheduled[r.request_id]
+             for r in decision.scheduled] or [1]))
+        tokens = np.zeros((self.n_slots, width), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
+        q_lens = np.zeros((self.n_slots,), np.int32)
         tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
-        # paused (budget-deferred) lanes are filled in too: their write
-        # lands on a slot the real step will overwrite with the same value,
-        # or on the null block — harmless either way
+        # paused (budget-deferred) lanes keep q_lens = 0: their writes are
+        # routed to the null block and their logits ignored — harmless
         for r in self.scheduler.running:
-            tokens[r.lane, 0] = r.feed[r.cursor]
             pos[r.lane] = r.cursor
             tables[r.lane] = self.kv.padded_table(r.request_id)
+            if r.request_id in sched_ids:
+                n = decision.num_scheduled[r.request_id]
+                q_lens[r.lane] = n
+                tokens[r.lane, :n] = r.feed[r.cursor:r.cursor + n]
         self.cache["block_tables"] = jnp.asarray(tables)
         self.cache["pos"] = jnp.asarray(pos)
+        self.cache["q_lens"] = jnp.asarray(q_lens)
         logits, self.cache = self._step(self.params, self.cache,
                                         jnp.asarray(tokens))
-        next_tokens = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        # only each lane's last real chunk row can emit — gather those
+        # (n_slots, V) rows before the argmax instead of reducing all C
+        last = jnp.asarray(np.maximum(q_lens - 1, 0))
+        next_tokens = np.asarray(jnp.argmax(
+            logits[jnp.arange(self.n_slots), last], axis=-1))   # (slots,)
         self.steps += 1
 
         for r in list(decision.scheduled):
-            emitting = r.cursor >= len(r.feed) - 1
-            r.cursor += 1
+            n = decision.num_scheduled[r.request_id]
+            emitting = r.cursor + n == len(r.feed)
+            r.cursor += n
+            self.tokens_prefilled += n - 1 if emitting else n
             if emitting:
                 tok = int(next_tokens[r.lane])
                 r.generated.append(tok)
                 r.feed.append(tok)
                 self.tokens_decoded += 1
+                if r.t_first_token == 0.0:
+                    r.t_first_token = time.perf_counter()
                 if len(r.generated) >= r.max_new_tokens or tok == self.eos:
                     self.scheduler.finish(r)
                     self._finished.append(r)
@@ -165,10 +237,15 @@ class PagedDecodeEngine:
         return {
             "steps": self.steps,
             "tokens_decoded": self.tokens_decoded,
+            "tokens_prefilled": self.tokens_prefilled,
             "active": len(self.scheduler.running),
             "waiting": len(self.scheduler.waiting),
             "preemptions": self.scheduler.total_preemptions,
             "block_utilization": self.kv.utilization(),
+            "prefix_hits": self.kv.prefix_hits,
+            "prefix_tokens_reused": self.kv.prefix_tokens_reused,
+            "cow_copies": self.kv.cow_copies,
+            "cache_evictions": self.kv.evictions,
         }
 
 
@@ -218,8 +295,9 @@ class SlotDecodeEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens)
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
         return rid
 
     def _admit(self) -> None:
@@ -262,6 +340,8 @@ class SlotDecodeEngine:
                 req.generated.append(tok)
                 req.feed.append(tok)
                 self.tokens_decoded += 1
+                if req.t_first_token == 0.0:
+                    req.t_first_token = time.perf_counter()
                 if (len(req.generated) >= req.max_new_tokens
                         or tok == self.eos):
                     req.done = True

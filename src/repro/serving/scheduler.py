@@ -1,26 +1,37 @@
 """Continuous-batching scheduler over the paged KV pool.
 
-Each engine step decodes one token per *scheduled* lane.  The scheduler
-decides, every step, which requests those are:
+Every engine step is one **token-budgeted batch** that freely mixes
+multi-token prefill chunks and single-token decodes — there is no
+prefill/decode phase split.  Each step the scheduler assigns every request
+a ``num_scheduled_tokens`` count under one shared budget:
 
-  * running requests are split by phase — **decode** lanes (next step emits
-    a new token) are served first, **prefill** lanes (still consuming their
-    prompt / replaying after preemption) fill the remaining token budget;
+  * **decode** lanes (next step emits a new token) are served first at one
+    token each — cheap, so a flood of long prompts can never starve them;
+  * **prefill** lanes (still consuming their prompt / replaying after
+    preemption) take chunks of up to ``chunk_tokens`` from the remaining
+    budget — a long prompt is consumed in a few chunked steps instead of
+    one step per token;
   * **admission**: waiting requests are admitted into free lanes while the
-    token budget holds and the KV manager can cover their whole feed —
-    a flood of long prompts therefore cannot starve running decodes;
+    budget holds and the KV manager can cover their feed; with the prefix
+    cache on, admission shares the longest chain of cached full blocks
+    (``KVCacheManager.begin_seq``) so identical preambles are never
+    re-prefilled;
   * **preemption by recompute**: when the pool runs out of blocks mid-step,
     the latest-admitted request is evicted — its blocks are freed and it
     re-enters the waiting queue with its generated tokens intact, to be
-    replayed (prefill-as-recompute) once memory frees up.  Greedy decode is
-    deterministic, so the replay reproduces the identical continuation.
+    replayed (prefill-as-recompute) once memory frees up.  If the victim
+    would be the request currently being guaranteed and it already secured
+    part of its chunk, the chunk is truncated instead (mid-chunk
+    preemption): partial progress is kept and the step proceeds.  Greedy
+    decode is deterministic, so replays reproduce the identical
+    continuation.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -46,10 +57,14 @@ class Request:
     cursor: int = 0                  # next feed index == tokens already in KV
     lane: Optional[int] = None
     n_preemptions: int = 0
+    # --- latency accounting (engine-stamped, wall clock) ---
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
 
     def begin_run(self, lane: int) -> None:
         """(Re)admission: the feed is prompt + generated-so-far; after a
-        preemption the generated suffix is recomputed deterministically."""
+        preemption the generated suffix is recomputed deterministically.
+        The cursor may then be advanced past a cached shared prefix."""
         self.feed = [int(t) for t in self.prompt] + list(self.generated)
         self.cursor = 0
         self.lane = lane
@@ -60,20 +75,31 @@ class Request:
         """True when the next step emits a new token (vs prompt prefill)."""
         return self.cursor >= len(self.feed) - 1
 
+    @property
+    def remaining_feed(self) -> int:
+        return len(self.feed) - self.cursor
+
 
 @dataclasses.dataclass
 class SchedulerConfig:
     n_lanes: int
-    token_budget: int = 0            # 0 = unlimited (bounded by n_lanes)
+    token_budget: int = 0    # 0 = n_lanes * chunk_tokens
+    chunk_tokens: int = 1    # per-request tokens per step cap; 0 = unlimited
 
 
 @dataclasses.dataclass
 class StepDecision:
     scheduled: List[Request]
+    # request_id -> tokens scheduled this step (>= 1 for every scheduled
+    # request; decode lanes get exactly 1)
+    num_scheduled: Dict[int, int] = dataclasses.field(default_factory=dict)
     n_prefill: int = 0
     n_decode: int = 0
+    n_prefill_tokens: int = 0
+    n_decode_tokens: int = 0
     n_admitted: int = 0
     n_preempted: int = 0
+    prefix_cached_tokens: int = 0    # feed tokens skipped via prefix sharing
 
 
 class Scheduler:
@@ -85,6 +111,10 @@ class Scheduler:
         self.lanes: List[Optional[Request]] = [None] * cfg.n_lanes
         self.total_preemptions = 0
         self.total_admitted = 0
+        # last admission refusal: (request, feed_len, free_blocks, version)
+        # — while none of those change, re-asking (and re-hashing a long
+        # prompt against the prefix cache) every step is pointless
+        self._blocked_state = None
 
     # ------------------------------------------------------------------
     def add(self, req: Request) -> None:
@@ -93,26 +123,42 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
+    def _chunk(self) -> int:
+        return self.cfg.chunk_tokens or 1_000_000_000
+
     def _budget(self) -> int:
-        return self.cfg.token_budget or self.cfg.n_lanes
+        return self.cfg.token_budget or \
+            self.cfg.n_lanes * max(1, self.cfg.chunk_tokens)
 
     # ------------------------------------------------------------------
     def _admit(self, budget_left: int, decision: StepDecision,
                scheduled: List[Request]) -> int:
-        while (self.waiting and budget_left > 0
-               and None in self.lanes
-               and self.kv.can_allocate(len(self.waiting[0].prompt)
-                                        + len(self.waiting[0].generated))):
-            req = self.waiting.popleft()
+        while self.waiting and budget_left > 0 and None in self.lanes:
+            req = self.waiting[0]
+            state = (req, len(req.prompt) + len(req.generated),
+                     self.kv.num_free_blocks,
+                     getattr(self.kv, "cache_version", 0))
+            if state == self._blocked_state:
+                break
+            feed = [int(t) for t in req.prompt] + list(req.generated)
+            if not self.kv.can_admit(feed):
+                self._blocked_state = state
+                break
+            self._blocked_state = None
+            self.waiting.popleft()
             lane = self.lanes.index(None)
             req.begin_run(lane)
             self.lanes[lane] = req
             self.running.append(req)
-            self.kv.allocate(req.request_id, 0)
+            # share the longest cached prefix; cursor skips past it
+            req.cursor = self.kv.begin_seq(req.request_id, req.feed)
+            decision.prefix_cached_tokens += req.cursor
             scheduled.append(req)
+            n = min(req.remaining_feed, self._chunk(), budget_left)
+            decision.num_scheduled[req.request_id] = n
+            budget_left -= n
             decision.n_admitted += 1
             self.total_admitted += 1
-            budget_left -= 1
         return budget_left
 
     def _preempt(self, victim: Request, decision: StepDecision,
@@ -125,48 +171,82 @@ class Scheduler:
         self.running.remove(victim)
         if victim in scheduled:
             scheduled.remove(victim)
+        decision.num_scheduled.pop(victim.request_id, None)
         self.waiting.appendleft(victim)        # resume as soon as possible
         decision.n_preempted += 1
         self.total_preemptions += 1
 
     def schedule(self) -> StepDecision:
-        """Pick this step's lanes, admit, and guarantee their KV blocks."""
+        """Assign this step's per-request token counts under one budget,
+        admit, and guarantee a KV slot for every scheduled token."""
         decision = StepDecision(scheduled=[])
-        budget = self._budget()
+        budget_left = self._budget()
+        chunk = self._chunk()
+        scheduled: List[Request] = []
 
-        decode = [r for r in self.running if r.is_decode]
-        prefill = [r for r in self.running if not r.is_decode]
-        scheduled = decode[:budget]
-        budget_left = budget - len(scheduled)
-        take = prefill[:budget_left]
-        scheduled += take
-        budget_left -= len(take)
+        # decodes first (1 token each): never starved by prefill chunks
+        for r in self.running:
+            if budget_left <= 0:
+                break
+            if r.is_decode:
+                scheduled.append(r)
+                decision.num_scheduled[r.request_id] = 1
+                budget_left -= 1
+        # prefill chunks from the remaining budget
+        for r in self.running:
+            if budget_left <= 0:
+                break
+            if not r.is_decode:
+                n = min(r.remaining_feed, chunk, budget_left)
+                scheduled.append(r)
+                decision.num_scheduled[r.request_id] = n
+                budget_left -= n
 
         budget_left = self._admit(budget_left, decision, scheduled)
 
         # guarantee a KV slot for every scheduled token, in priority order;
-        # evict from the back (latest admitted) when the pool runs dry
+        # evict from the back (latest admitted) when the pool runs dry —
+        # truncating the current chunk instead when the victim would be the
+        # request itself and it already made progress
         for req in [r for r in self.running if r in scheduled]:
             if req not in scheduled:           # evicted by an earlier lane
                 continue
-            needs_block = self.kv.n_tokens(req.request_id) \
-                % self.kv.block_size == 0
-            while needs_block and self.kv.num_free_blocks == 0:
-                victim = self.running[-1]
-                if victim is req and len(self.running) == 1:
-                    raise RuntimeError(
-                        "KV pool too small for a single sequence: "
-                        f"request {req.request_id} needs a block and no "
-                        "victim remains")
-                self._preempt(victim, decision, scheduled)
-                if victim is req:
+            n = decision.num_scheduled[req.request_id]
+            k = 0
+            while k < n:
+                self_blocked = False
+                while (self.kv.append_needs_block(req.request_id)
+                       and self.kv.num_free_blocks == 0):
+                    victim = self.running[-1]
+                    if victim is req:
+                        self_blocked = True
+                        break
+                    self._preempt(victim, decision, scheduled)
+                if self_blocked:
+                    if k > 0:                  # mid-chunk: keep progress
+                        break
+                    if len(self.running) == 1:
+                        raise RuntimeError(
+                            "KV pool too small for a single sequence: "
+                            f"request {req.request_id} needs a block and no "
+                            "victim remains")
+                    self._preempt(req, decision, scheduled)
                     break
+                self.kv.append_token(req.request_id,
+                                     req.feed[req.cursor + k])
+                k += 1
             if req in scheduled:
-                self.kv.append_token(req.request_id)
+                decision.num_scheduled[req.request_id] = k
 
         decision.scheduled = scheduled
-        decision.n_decode = sum(1 for r in scheduled if r.is_decode)
-        decision.n_prefill = len(scheduled) - decision.n_decode
+        for r in scheduled:
+            n = decision.num_scheduled[r.request_id]
+            if r.is_decode:
+                decision.n_decode += 1
+                decision.n_decode_tokens += n
+            else:
+                decision.n_prefill += 1
+                decision.n_prefill_tokens += n
         return decision
 
     # ------------------------------------------------------------------

@@ -4,8 +4,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.paged_attention import paged_attention
-from repro.kernels.ref import paged_attention_reference
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_chunk)
+from repro.kernels.ref import (paged_attention_chunk_reference,
+                               paged_attention_reference)
 from repro.kernels import ops
 
 
@@ -82,3 +84,97 @@ def test_reference_masks_positions_beyond_ctx(key):
     vp2 = vp.at[blk, 2:].set(-99.0)
     out2 = paged_attention_reference(q, kp2, vp2, tables, ctxj)
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# variable q_len (chunked prefill) generalization
+# ---------------------------------------------------------------------------
+def _chunk_setup(key, B, Hkv, G, D, bs, max_blocks, C, starts, lens, dtype):
+    ks = jax.random.split(key, 3)
+    H = Hkv * G
+    num_blocks = B * max_blocks + 1
+    q = jax.random.normal(ks[0], (B, C, H, D), dtype)
+    k_pool = jax.random.normal(ks[1], (num_blocks, bs, Hkv, D), dtype)
+    v_pool = jax.random.normal(ks[2], (num_blocks, bs, Hkv, D), dtype)
+    tables = np.zeros((B, max_blocks), np.int32)
+    free = list(range(1, num_blocks))
+    ends = starts + lens
+    for b in range(B):
+        for j in range(-(-int(ends[b]) // bs)):
+            tables[b, j] = free.pop(0)
+    return q, k_pool, v_pool, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("G", [1, 2])
+@pytest.mark.parametrize("window", [0, 5])
+def test_chunk_kernel_matches_chunk_reference(key, G, window):
+    """Variable q_len per lane with causal masking inside the chunk: the
+    Pallas kernel (interpret mode) must match the pure-jnp chunk oracle on
+    every real (non-padded) query row."""
+    B, Hkv, D, bs, max_blocks, C = 3, 2, 32, 4, 6, 5
+    starts = np.array([0, 3, 9], np.int32)   # fresh / mid-block / deep lane
+    lens = np.array([5, 4, 2], np.int32)     # full chunk / padded / padded
+    q, kp, vp, tables = _chunk_setup(key, B, Hkv, G, D, bs, max_blocks, C,
+                                     starts, lens, jnp.float32)
+    ref = paged_attention_chunk_reference(q, kp, vp, tables,
+                                          jnp.asarray(starts), window=window)
+    H = Hkv * G
+    q5 = jnp.transpose(q.reshape(B, C, Hkv, G, D), (0, 2, 1, 3, 4))
+    out = paged_attention_chunk(q5, kp, vp, tables, jnp.asarray(starts),
+                                jnp.asarray(starts + lens), window=window,
+                                interpret=True)
+    out = jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, D)
+    for b in range(B):
+        np.testing.assert_allclose(np.asarray(out[b, :lens[b]]),
+                                   np.asarray(ref[b, :lens[b]]),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_chunk_kernel_single_token_equals_decode_kernel(key):
+    """C = 1 chunks must reproduce the decode kernel exactly (same online
+    softmax sweep, q_starts = ctx - 1)."""
+    B, Hkv, G, D, bs, max_blocks = 3, 2, 2, 32, 8, 4
+    num_blocks = B * max_blocks + 1
+    ctx = np.array([1, 9, 26], np.int32)
+    q, kp, vp, tables, ctxj = _setup(key, B, Hkv, G, D, num_blocks, bs,
+                                     max_blocks, ctx, jnp.float32)
+    qg = q.reshape(B, Hkv, G, D)
+    dec = paged_attention(qg, kp, vp, tables, ctxj, interpret=True)
+    chk = paged_attention_chunk(qg[:, :, None], kp, vp, tables, ctxj - 1,
+                                ctxj, interpret=True)[:, :, 0]
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(chk))
+
+
+def test_chunk_reference_is_causal_inside_chunk(key):
+    """Query c must not see kv positions written for later chunk tokens:
+    corrupting position start+c+1 changes row c+1 but never row c."""
+    B, Hkv, G, D, bs, max_blocks, C = 1, 1, 1, 16, 4, 3, 4
+    starts = np.array([2], np.int32)
+    lens = np.array([4], np.int32)
+    q, kp, vp, tables = _chunk_setup(key, B, Hkv, G, D, bs, max_blocks, C,
+                                     starts, lens, jnp.float32)
+    out1 = paged_attention_chunk_reference(q, kp, vp, tables,
+                                           jnp.asarray(starts))
+    p = int(starts[0]) + 2                   # the chunk's 3rd position
+    blk = int(np.asarray(tables)[0, p // bs])
+    kp2 = kp.at[blk, p % bs].set(37.0)
+    vp2 = vp.at[blk, p % bs].set(-37.0)
+    out2 = paged_attention_chunk_reference(q, kp2, vp2, tables,
+                                           jnp.asarray(starts))
+    np.testing.assert_array_equal(np.asarray(out1[0, :2]),
+                                  np.asarray(out2[0, :2]))
+    assert not np.allclose(np.asarray(out1[0, 2]), np.asarray(out2[0, 2]))
+
+
+def test_ops_chunk_wrapper_dispatches_to_reference_on_cpu(key):
+    B, Hkv, G, D, bs, max_blocks, C = 2, 2, 2, 16, 4, 4, 3
+    starts = np.array([0, 5], np.int32)
+    lens = np.array([3, 2], np.int32)
+    q, kp, vp, tables = _chunk_setup(key, B, Hkv, G, D, bs, max_blocks, C,
+                                     starts, lens, jnp.float32)
+    out = ops.paged_attention_chunk(q, kp, vp, tables, jnp.asarray(starts),
+                                    jnp.asarray(lens))
+    ref = paged_attention_chunk_reference(q, kp, vp, tables,
+                                          jnp.asarray(starts))
+    assert out.shape == (B, C, Hkv * G, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)

@@ -97,3 +97,39 @@ def test_manager_exhaustion_raises():
         m.allocate(2, 1)
     assert not m.can_allocate(1)
     assert m.utilization() == 1.0
+
+
+def test_full_prefix_match_accounts_for_cow_block():
+    """Regression: a prompt fully covered by cached blocks still needs one
+    block to re-process its last token (CoW fork of the shared tail).
+    can_admit must count it — and when even that block cannot be found,
+    the admission plan degrades to recomputing the tail so a pool that
+    could serve the prompt cache-off still serves it cache-on."""
+    # roomy pool: full match + CoW fork both fit
+    m = KVCacheManager(8, 4, max_blocks_per_seq=4, enable_prefix_cache=True)
+    feed = list(range(4))
+    m.begin_seq(0, feed)
+    for t in feed[m.n_tokens(0):]:
+        m.append_token(0, t)
+    m.free(0)                                # block now cached (evictable)
+    assert m.can_admit(feed)
+    assert m.begin_seq(1, feed) == 3         # capped at len(feed) - 1
+    m.append_token(1, feed[3])               # CoW fork of the shared tail
+    assert m.cow_copies == 1
+    assert len(m.take_copy_ops()) == 1
+    m.free(1)
+
+    # pathological pool: ONE usable block, fully cached by the match —
+    # no CoW block exists, so the plan must drop the match and recompute
+    t = KVCacheManager(2, 4, max_blocks_per_seq=1, enable_prefix_cache=True)
+    t.begin_seq(0, feed)
+    for tok in feed[t.n_tokens(0):]:
+        t.append_token(0, tok)
+    t.free(0)
+    assert t.can_admit(feed)                 # serviceable by evicting
+    assert t.begin_seq(1, feed) == 0         # degraded: prefill from scratch
+    for tok in feed:
+        t.append_token(1, tok)               # evicts the cached block
+    assert t.n_tokens(1) == 4
+    assert t.evictions == 1
+    t.free(1)

@@ -156,3 +156,130 @@ def test_slot_engine_lane_reuse_no_stale_kv(key):
         solo.submit(p, 6)
         (done,) = solo.run_until_drained()
         assert shared[rid] == done.generated, rid
+
+
+# ---------------------------------------------------------------------------
+# unified chunked step: prefill chunks + prefix sharing + copy-on-write
+# ---------------------------------------------------------------------------
+def test_chunked_paged_step_matches_forward(key):
+    """Feeding the prompt through paged_step in multi-token chunks (the
+    unified prefill/decode path) reproduces the teacher-forced forward
+    logits at every position."""
+    cfg, api, params = _api_params(key)
+    B, S, bs, C = 2, 16, 4, 4
+    max_blocks = S // bs
+    num_blocks = B * max_blocks + 1
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                                cfg.vocab_size)
+    fwd_logits, _ = api.forward(params, tokens, compute_dtype=jnp.float32,
+                                remat=False)
+
+    cache = api.init_paged_cache(B, num_blocks=num_blocks, block_size=bs,
+                                 max_blocks_per_lane=max_blocks,
+                                 dtype=jnp.float32)
+    tables = np.zeros((B, max_blocks), np.int32)
+    for b in range(B):
+        tables[b] = 1 + b * max_blocks + np.arange(max_blocks)
+    cache["block_tables"] = jnp.asarray(tables)
+
+    dec = []
+    for t in range(0, S, C):
+        logits, cache = api.paged_step(params, cache, tokens[:, t:t + C],
+                                       compute_dtype=jnp.float32)
+        dec.append(logits)
+    dec = jnp.concatenate(dec, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(fwd_logits),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("chunk,prefix", [(1, False), (5, True), (16, True)])
+def test_chunked_engine_token_identical_to_slot_engine(key, chunk, prefix):
+    """Chunked prefill at several chunk widths (1 = the PR 1 step shape),
+    with and without prefix sharing, stays token-identical to the dense
+    reference."""
+    cfg, api, params = _api_params(key)
+    prompts = _prompts(cfg, 6, lo=3, hi=14, seed=3)
+    common = dict(n_slots=3, cache_len=64, cache_dtype=jnp.float32,
+                  compute_dtype=jnp.float32)
+    pe = PagedDecodeEngine(api, params, chunk_tokens=chunk,
+                           prefix_cache=prefix, block_size=4, **common)
+    se = SlotDecodeEngine(api, params, **common)
+    for p in prompts:
+        pe.submit(p, 8)
+        se.submit(p, 8)
+    done_p = {r.request_id: r.generated for r in pe.run_until_drained()}
+    done_s = {r.request_id: r.generated for r in se.run_until_drained()}
+    assert done_p == done_s and len(done_p) == len(prompts)
+    if chunk > 1:
+        # chunked prefill must actually shrink the step count: every prompt
+        # token no longer costs one engine step
+        assert pe.steps < se.steps
+
+
+def test_prefix_sharing_cow_divergence_token_identical(key):
+    """Two requests with an identical block-aligned prompt: the second
+    admission forks the cached prefix blocks and its first divergent write
+    (re-processing the last prompt token for logits) copy-on-writes the
+    shared tail block.  Outputs must match the dense reference exactly."""
+    cfg, api, params = _api_params(key)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)  # 2 blocks
+    common = dict(n_slots=1, cache_len=64, cache_dtype=jnp.float32,
+                  compute_dtype=jnp.float32)
+    pe = PagedDecodeEngine(api, params, block_size=4, chunk_tokens=8,
+                           prefix_cache=True, **common)
+    se = SlotDecodeEngine(api, params, **common)
+    for _ in range(2):                      # serial: n_slots=1
+        pe.submit(prompt, 6)
+        se.submit(prompt, 6)
+    done_p = {r.request_id: r.generated for r in pe.run_until_drained()}
+    done_s = {r.request_id: r.generated for r in se.run_until_drained()}
+    assert done_p == done_s
+    assert done_p[0] == done_p[1]           # greedy: identical continuations
+    st = pe.stats()
+    assert st["prefix_hits"] >= 1
+    assert st["prefix_tokens_reused"] >= 7  # all but the re-processed token
+    assert st["cow_copies"] >= 1            # shared tail block was forked
+    assert pe.cow_block_copies >= 1         # and the device copy was applied
+
+
+def test_prefix_sharing_skips_prefill_steps(key):
+    """A shared system prompt must make later requests' prefill nearly
+    free: with the cache on, request 2..N admit at cursor ~= prompt end."""
+    cfg, api, params = _api_params(key)
+    rng = np.random.default_rng(5)
+    system = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(0, cfg.vocab_size, 3)
+                               .astype(np.int32)]) for _ in range(4)]
+    common = dict(n_slots=1, cache_len=64, block_size=4, chunk_tokens=8,
+                  cache_dtype=jnp.float32, compute_dtype=jnp.float32)
+    on = PagedDecodeEngine(api, params, prefix_cache=True, **common)
+    off = PagedDecodeEngine(api, params, prefix_cache=False, **common)
+    for p in prompts:
+        on.submit(p, 4)
+        off.submit(p, 4)
+    done_on = {r.request_id: r.generated for r in on.run_until_drained()}
+    done_off = {r.request_id: r.generated for r in off.run_until_drained()}
+    assert done_on == done_off
+    assert on.stats()["prefix_tokens_reused"] >= 3 * 24
+    assert on.steps < off.steps
+    assert on.tokens_prefilled < off.tokens_prefilled
+
+
+def test_preemption_with_chunked_prefill_token_identical(key):
+    """Preemption pressure with multi-token chunks in flight (mid-chunk
+    truncation + replay) must not change any output."""
+    cfg, api, params = _api_params(key)
+    prompts = _prompts(cfg, 6, lo=6, hi=14, seed=9)
+    common = dict(n_slots=3, cache_len=64, block_size=4, chunk_tokens=6,
+                  cache_dtype=jnp.float32, compute_dtype=jnp.float32)
+    free_run = PagedDecodeEngine(api, params, **common)
+    tight = PagedDecodeEngine(api, params, num_blocks=10, **common)
+    for p in prompts:
+        free_run.submit(p, 8)
+        tight.submit(p, 8)
+    ref = {r.request_id: r.generated for r in free_run.run_until_drained()}
+    got = {r.request_id: r.generated for r in tight.run_until_drained()}
+    assert tight.scheduler.total_preemptions > 0
+    assert got == ref

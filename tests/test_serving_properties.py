@@ -1,0 +1,137 @@
+"""Property tests for BlockAllocator / KVCacheManager invariants.
+
+Random interleavings of begin_seq / append / fork / free must preserve:
+refcounts never negative, every block accounted for (free + allocated =
+pool), fork+free round-trips to an empty pool, and prefix-hash lookups
+never return partially-filled blocks (matches are always whole-block
+multiples).  Runs under the optional-hypothesis shim (tests/_hyp.py):
+plain skips without hypothesis, the full sweep in CI.
+"""
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.serving import KVCacheManager
+
+BS = 4          # block size
+POOL = 17       # 16 usable blocks
+CEIL = 8        # max blocks per seq
+
+
+def _check_invariants(m: KVCacheManager) -> None:
+    alloc = m.allocator
+    for blk, refs in alloc._refs.items():
+        assert refs > 0, f"block {blk} has refcount {refs}"
+    assert 0 not in alloc._refs and 0 not in alloc._free
+    assert alloc.num_free + alloc.num_allocated == alloc.num_blocks - 1
+    # evictable blocks are a subset of cache-registered blocks with
+    # exactly the cache's own hold left
+    for blk in m._lru:
+        assert blk in m._block_digest
+        assert alloc.refcount(blk) == 1
+    # per-seq tables only reference live blocks, sized to n_tokens
+    for sid, seq in m._seqs.items():
+        assert len(seq.table) >= m.blocks_needed(seq.n_tokens), sid
+        for blk in seq.table:
+            assert alloc.refcount(blk) >= 1, (sid, blk)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                          st.integers(1, 12)), max_size=40))
+def test_random_op_interleavings_preserve_invariants(ops):
+    """A random machine over begin_seq/append/free/fork keeps the pool
+    consistent; whenever it runs out of blocks that surfaces as the
+    documented RuntimeError, never a corrupted state."""
+    m = KVCacheManager(POOL, BS, max_blocks_per_seq=CEIL,
+                       enable_prefix_cache=True)
+    live = set()
+    next_id = [0]
+    for kind, which, arg in ops:
+        try:
+            if kind == 0:                       # admit a new sequence
+                sid = next_id[0]
+                next_id[0] += 1
+                feed = [(t * 7 + which) % 13 for t in range(arg + 1)]
+                n = m.begin_seq(sid, feed)
+                assert n % BS == 0 or n == len(feed) - 1
+                assert n <= len(feed) - 1
+                live.add(sid)
+            elif kind == 1 and live:            # append tokens
+                sid = sorted(live)[which % len(live)]
+                for t in range(arg):
+                    if m._seqs[sid].n_tokens >= CEIL * BS:
+                        break
+                    m.append_token(sid, (t * 3 + which) % 13)
+            elif kind == 2 and live:            # free
+                sid = sorted(live)[which % len(live)]
+                m.free(sid)
+                live.discard(sid)
+            elif kind == 3 and live:            # fork at aligned length only
+                sid = sorted(live)[which % len(live)]
+                if m.n_tokens(sid) % BS == 0:
+                    dst = next_id[0]
+                    next_id[0] += 1
+                    m.fork(sid, dst)
+                    live.add(dst)
+        except RuntimeError:
+            pass                                # pool exhausted: legal
+        _check_invariants(m)
+    for sid in list(live):
+        m.free(sid)
+    _check_invariants(m)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, CEIL), st.integers(1, 4))
+def test_fork_free_roundtrips_to_empty_pool(n_blocks, n_forks):
+    """Forking a sequence any number of times and freeing everything
+    returns every block to the free list (no prefix cache: no cache
+    holds)."""
+    m = KVCacheManager(64, BS, max_blocks_per_seq=CEIL)
+    free0 = m.num_free_blocks
+    m.allocate(0, n_blocks * BS)
+    for i in range(n_forks):
+        m.fork(0, 1 + i)
+    for sid in range(n_forks + 1):
+        m.free(sid)
+    assert m.num_free_blocks == free0
+    assert m.allocator.num_allocated == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 3 * BS), st.integers(0, 3 * BS))
+def test_prefix_lookup_never_matches_partial_blocks(prompt_len, extra):
+    """Only blocks completely filled by a finished sequence are ever
+    returned by the prefix lookup — a partially-written tail can never
+    leak into a new sequence."""
+    m = KVCacheManager(POOL, BS, max_blocks_per_seq=CEIL,
+                       enable_prefix_cache=True)
+    feed = list(range(prompt_len + extra))
+    m.begin_seq(0, feed)
+    for t in feed[m.n_tokens(0):]:
+        m.append_token(0, t)
+    m.free(0)
+    matched = m.lookup_prefix(feed)
+    assert matched % BS == 0
+    assert matched == (len(feed) // BS) * BS
+    # a shorter probe must never match beyond its own full blocks
+    probe = feed[:prompt_len]
+    got = m.lookup_prefix(probe)
+    assert got % BS == 0 and got <= (len(probe) // BS) * BS
+
+
+def test_refcounts_never_negative_on_double_free():
+    m = KVCacheManager(8, BS, max_blocks_per_seq=4)
+    m.allocate(0, BS)
+    m.free(0)
+    with pytest.raises(KeyError):
+        m.free(0)
+    assert all(r > 0 for r in m.allocator._refs.values())
+
+
+def test_property_suite_runs_in_ci():
+    """CI installs hypothesis; this canary fails there if the property
+    sweep silently degraded to skips (see ci.yml gate)."""
+    import os
+    if os.environ.get("CI") and not HAVE_HYPOTHESIS:
+        pytest.fail("CI must run the hypothesis property sweep")

@@ -142,3 +142,79 @@ def test_admission_blocked_until_blocks_free():
     sched.finish(sched.lanes[0])
     d = sched.schedule()
     assert d.n_admitted == 1              # blocks freed, req 1 admitted
+
+
+# ---------------------------------------------------------------------------
+# unified token-budget chunking
+# ---------------------------------------------------------------------------
+def test_chunked_prefill_schedules_multiple_tokens():
+    sched, kv = make(n_lanes=2, num_blocks=17, block_size=2, max_blocks=8)
+    sched.cfg.chunk_tokens = 4
+    sched.add(req(0, plen=10))
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 4                 # one chunk, not one token
+    assert kv.n_tokens(0) == 4                     # every chunk token has KV
+    for r in d.scheduled:
+        r.cursor += d.num_scheduled[r.request_id]
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 4
+    assert d.n_prefill_tokens == 4 and d.n_decode_tokens == 0
+
+
+def test_budget_shared_between_decodes_and_chunks():
+    """One budget covers both phases: decodes are served first, the
+    remaining budget goes to prefill chunks."""
+    sched, kv = make(n_lanes=3, num_blocks=33, block_size=2, max_blocks=8,
+                     token_budget=5)
+    sched.cfg.chunk_tokens = 8
+    sched.add(req(0, plen=1))                      # decodes immediately
+    d = sched.schedule()
+    for r in d.scheduled:
+        if r.cursor >= len(r.feed) - 1:
+            r.generated.append(0)
+            r.feed.append(0)
+        r.cursor += d.num_scheduled[r.request_id]
+    sched.add(req(1, plen=12))
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 1                 # the decode lane
+    assert d.num_scheduled[1] == 4                 # budget 5 - 1 decode
+    assert d.n_decode_tokens == 1 and d.n_prefill_tokens == 4
+
+
+def test_mid_chunk_truncation_keeps_progress():
+    """When the pool dries up mid-chunk and the victim would be the
+    chunking request itself, the chunk is truncated instead of preempted:
+    partial progress is kept and nobody is evicted."""
+    sched, kv = make(n_lanes=2, num_blocks=6, block_size=2, max_blocks=8)
+    sched.cfg.chunk_tokens = 8
+    sched.add(req(0, plen=3))
+    sched.add(req(1, plen=8))
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 3                 # fits: 2 blocks
+    assert 1 <= d.num_scheduled[1] < 8             # truncated mid-chunk
+    assert d.num_scheduled[1] == kv.n_tokens(1)
+    assert d.n_preempted == 0
+    assert {r.request_id for r in sched.running} == {0, 1}
+
+
+def test_admission_shares_cached_prefix():
+    """With the prefix cache on, a re-admitted identical prompt skips its
+    cached full blocks: the cursor starts past them."""
+    kv = KVCacheManager(17, 2, max_blocks_per_seq=8,
+                        enable_prefix_cache=True)
+    sched = Scheduler(SchedulerConfig(n_lanes=1, chunk_tokens=8), kv)
+    r0 = req(0, plen=6, max_new=1)
+    sched.add(r0)
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 6                 # whole prompt, one chunk
+    r0.cursor += 6                                 # chunk end emits a token
+    r0.generated.append(9)
+    r0.feed.append(9)
+    sched.finish(r0)
+    r1 = req(1, plen=6, max_new=1)                 # same prompt tokens
+    sched.add(r1)
+    d = sched.schedule()
+    assert d.n_admitted == 1
+    assert d.prefix_cached_tokens == 5             # 6 aligned, capped at 5
+    assert r1.cursor == 5
+    assert d.num_scheduled[1] == 1                 # only the last token
