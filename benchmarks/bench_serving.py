@@ -1,10 +1,13 @@
-"""Serving benchmark: dense-slot vs paged-KV vs unified chunked+prefix step.
+"""Serving benchmark: dense-slot vs paged-KV vs unified vs ragged step.
 
 Three scenario families, all at **equal physical KV budget**:
 
-  * ``mixed``        — the PR 1 sweep: dense slabs vs paged blocks at
-                       several request-arrival rates (tokens/s, peak
-                       concurrency, utilization);
+  * ``mixed``        — the PR 1 sweep (dense slabs vs paged blocks at
+                       several request-arrival rates), plus the padding-tax
+                       duel: the rectangular ``(lanes, chunk_width)`` step
+                       vs the ragged flat-token step under the same chunked
+                       mixed load — headline metric is
+                       ``padding_efficiency`` (real tokens / padded slots);
   * ``long_prompt``  — long prompts, short outputs: chunked prefill
                        (``chunk_tokens`` > 1) vs the PR 1 one-token-per-step
                        engine; headline metric is mean time-to-first-token;
@@ -44,6 +47,13 @@ LONG_REQUESTS = 8
 PREFIX_LEN = 40
 PREFIX_REQUESTS = 16
 
+# rect-vs-ragged padding-tax duel: prompts long enough that prefill chunks
+# coexist with decodes in most steps (the tax the flat layout removes),
+# at a dense-equivalent pool so preemption churn doesn't muddy the
+# layout comparison
+DUEL_PROMPT_LO, DUEL_PROMPT_HI = 24, 40
+DUEL_LANES = 8
+
 
 def _requests(vocab: int):
     rng = np.random.default_rng(0)
@@ -70,12 +80,14 @@ def _drive(engine, reqs, rate: int):
         guard += 1
         assert guard < 10_000, "serving benchmark did not drain"
     dt = time.perf_counter() - t0
+    s = engine.stats()
     return {
         "tok_s": engine.tokens_decoded / dt,
         "peak_active": peak_active,
         "mean_util": util_sum / max(util_n, 1),
         "steps": engine.steps,
-        "preemptions": engine.stats()["preemptions"],
+        "preemptions": s["preemptions"],
+        "padding_efficiency": float(s.get("padding_efficiency", 1.0)),
     }
 
 
@@ -98,6 +110,23 @@ def _warm(engine, prompt_len: int, vocab: int) -> None:
     for w in sorted(widths | {min(prompt_len, max(widths))}):
         engine.submit(rng.integers(0, vocab, w).astype(np.int32), 2)
         engine.run_until_drained()
+    if getattr(engine, "ragged", False):
+        # the ragged step compiles per pow2 *total-token* bucket: trace
+        # every bucket up to the budget by submitting simultaneous prompts
+        # whose admission chunks sum to exactly the bucket
+        budget = engine.scheduler._budget()
+        b = 2
+        while b <= budget:
+            k = max(1, -(-b // engine.chunk_tokens))
+            if k <= engine.n_slots:
+                size = b // k
+                for i in range(k):
+                    engine.submit(rng.integers(0, vocab,
+                                               size + (b - size * k if
+                                                       i == 0 else 0))
+                                  .astype(np.int32), 2)
+                engine.run_until_drained()
+            b *= 2
     if getattr(engine, "kv", None) is not None \
             and engine.kv.enable_prefix_cache:
         # warm the copy-on-write path too (a full-match admission forks the
@@ -110,6 +139,8 @@ def _warm(engine, prompt_len: int, vocab: int) -> None:
     if hasattr(engine, "tokens_prefilled"):
         engine.tokens_prefilled = 0
     engine.steps = 0
+    engine.scheduled_tokens = 0
+    engine.padded_tokens = 0
     if hasattr(engine, "kv"):
         engine.kv.prefix_hits = 0
         engine.kv.prefix_tokens_reused = 0
@@ -143,25 +174,29 @@ def _drain_timed(engine, reqs) -> Dict[str, float]:
         "preemptions": int(s["preemptions"]),
         "prefix_tokens_reused": int(s.get("prefix_tokens_reused", 0)),
         "cow_copies": int(s.get("cow_copies", 0)),
+        "padding_efficiency": float(s.get("padding_efficiency", 1.0)),
         "wall_s": dt,
     }
 
 
 def _engines(api, params, quick: bool):
-    """(name, ctor) pairs: the PR 1 step shape vs the unified step, at the
-    same lanes / cache_len / block pool."""
+    """(name, ctor) triples: the PR 1 step shape, the PR 2 rectangular
+    unified step, and the ragged flat-token step, at the same lanes /
+    cache_len / block pool."""
     from repro.serving import PagedDecodeEngine
     lanes = 4 if quick else 8
     pool = lanes * (CACHE_LEN // BLOCK_SIZE) + 1
 
-    def make(chunk, prefix):
+    def make(chunk, prefix, ragged):
         return PagedDecodeEngine(api, params, n_slots=lanes,
                                  cache_len=CACHE_LEN,
                                  block_size=BLOCK_SIZE, num_blocks=pool,
-                                 chunk_tokens=chunk, prefix_cache=prefix)
+                                 chunk_tokens=chunk, prefix_cache=prefix,
+                                 ragged=ragged)
 
-    return [("pr1", lambda: make(1, False)),
-            ("unified", lambda: make(CHUNK_TOKENS, True))]
+    return [("pr1", lambda: make(1, False, False)),
+            ("unified", lambda: make(CHUNK_TOKENS, True, False)),
+            ("ragged", lambda: make(CHUNK_TOKENS, True, True))]
 
 
 def _scenario_long_prompt(api, params, vocab: int, quick: bool):
@@ -209,29 +244,51 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
         if kind == "slot":
             return SlotDecodeEngine(api, params, n_slots=DENSE_LANES,
                                     cache_len=CACHE_LEN)
-        # pinned to the PR 1 step shape (one-token prefill, no prefix
-        # cache) so these tracked rows stay comparable across PRs; the
-        # unified step is measured by the scenarios below
-        return PagedDecodeEngine(api, params, n_slots=PAGED_LANES,
+        if kind == "paged":
+            # pinned to the PR 1 step shape (one-token prefill, no prefix
+            # cache) so these tracked rows stay comparable across PRs; the
+            # unified step is measured by the scenarios below
+            return PagedDecodeEngine(api, params, n_slots=PAGED_LANES,
+                                     cache_len=CACHE_LEN,
+                                     block_size=BLOCK_SIZE,
+                                     num_blocks=pool_blocks,
+                                     chunk_tokens=1, prefix_cache=False,
+                                     ragged=False)
+        # the padding-tax duel: chunked prefill mixing with decodes, the
+        # rectangular (lanes, width) layout vs the ragged flat stream at
+        # identical scheduler knobs
+        return PagedDecodeEngine(api, params, n_slots=DUEL_LANES,
                                  cache_len=CACHE_LEN,
                                  block_size=BLOCK_SIZE,
-                                 num_blocks=pool_blocks,
-                                 chunk_tokens=1, prefix_cache=False)
+                                 chunk_tokens=CHUNK_TOKENS,
+                                 prefix_cache=False,
+                                 ragged=(kind == "ragged"))
+
+    rng = np.random.default_rng(7)
+    duel_reqs = [(rng.integers(0, cfg.vocab_size,
+                               int(rng.integers(DUEL_PROMPT_LO,
+                                                DUEL_PROMPT_HI)))
+                  .astype(np.int32), MAX_NEW) for _ in range(N_REQUESTS)]
 
     rows = []
     mixed = {}
-    for kind in ("slot", "paged"):
+    pad_tokens = {"rect": [0, 0], "ragged": [0, 0]}   # [real, padded]
+    for kind in ("slot", "paged", "rect", "ragged"):
         for rate in ARRIVAL_RATES if not quick else ARRIVAL_RATES[:1]:
             eng = make(kind)
             _warm(eng, PROMPT_HI, cfg.vocab_size)
-            r = _drive(eng, reqs, rate)
+            r = _drive(eng, duel_reqs if kind in pad_tokens else reqs, rate)
             mixed[f"{kind}_rate{rate}"] = r
+            if kind in pad_tokens:
+                pad_tokens[kind][0] += eng.scheduled_tokens
+                pad_tokens[kind][1] += eng.padded_tokens
             us = 1e6 / max(r["tok_s"], 1e-9)
             rows.append(
                 f"serving/{kind}_rate{rate},{us:.0f},"
                 f"tok_s={r['tok_s']:.1f};peak_active={r['peak_active']};"
                 f"util={r['mean_util']:.2f};steps={r['steps']};"
-                f"preempt={r['preemptions']}")
+                f"preempt={r['preemptions']};"
+                f"pad_eff={r['padding_efficiency']:.2f}")
 
     long_prompt = _scenario_long_prompt(api, params, cfg.vocab_size, quick)
     prefix_heavy = _scenario_prefix_heavy(api, params, cfg.vocab_size, quick)
@@ -247,9 +304,16 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
                 f"serving/{scen}_{name},{us:.0f},"
                 f"tok_s={r['tok_s']:.1f};ttft_ms={r['ttft_mean_s']*1e3:.0f};"
                 f"steps={r['steps']};reused={r['prefix_tokens_reused']};"
-                f"cow={r['cow_copies']}")
+                f"cow={r['cow_copies']};"
+                f"pad_eff={r['padding_efficiency']:.2f}")
+    # scenario-aggregate padding efficiency (total real / total padded
+    # across every arrival rate)
+    pad_eff_ragged = pad_tokens["ragged"][0] / max(pad_tokens["ragged"][1], 1)
+    pad_eff_rect = pad_tokens["rect"][0] / max(pad_tokens["rect"][1], 1)
     rows.append(f"serving/speedups,0,ttft_long_prompt={ttft_speedup:.2f}x;"
-                f"throughput_prefix_heavy={tput_speedup:.2f}x")
+                f"throughput_prefix_heavy={tput_speedup:.2f}x;"
+                f"padding_eff_mixed_ragged={pad_eff_ragged:.2f};"
+                f"padding_eff_mixed_rect={pad_eff_rect:.2f}")
 
     if results is not None:
         results.update({
@@ -260,6 +324,8 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
                           "prefix_heavy": prefix_heavy},
             "speedups": {"ttft_long_prompt": ttft_speedup,
                          "throughput_prefix_heavy": tput_speedup},
+            "padding_efficiency": {"mixed_ragged": pad_eff_ragged,
+                                   "mixed_rect": pad_eff_rect},
         })
     return rows
 

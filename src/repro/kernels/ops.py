@@ -128,6 +128,41 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array,
                                                 window=window)
 
 
+def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, token_tables: jax.Array,
+                           token_pos: jax.Array, *, window: int = 0,
+                           use_kernel: Optional[bool] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Flat-token-stream paged attention read: q (T, H, D) — one 1-D batch
+    of T tokens freely mixing prefill chunks and decodes from many lanes —
+    against KV pools (num_blocks, bs, Hkv, D).  ``token_tables`` (T,
+    max_blocks) carries each token's lane's block-table row and
+    ``token_pos`` (T,) its absolute position (the causal bound).  No
+    rectangular (lanes, chunk_width) padding exists anywhere: work is
+    proportional to T = sum of real scheduled tokens.
+
+    Backend dispatch mirrors :func:`paged_attention`: Pallas kernel on TPU,
+    pure-JAX reference (XLA gather + masked softmax) on CPU.
+    """
+    from repro.kernels import paged_attention as _pa
+    from repro.kernels import ref as _ref
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        T, H, D = q.shape
+        Hkv = k_pool.shape[2]
+        qg = q.reshape(T, Hkv, H // Hkv, D)
+        out = _pa.paged_attention_ragged(qg, k_pool, v_pool, token_tables,
+                                         token_pos, window=window,
+                                         interpret=interpret)
+        return out.reshape(T, H, D)
+    return _ref.paged_attention_ragged_reference(q, k_pool, v_pool,
+                                                 token_tables, token_pos,
+                                                 window=window)
+
+
 # ---------------------------------------------------------------------------
 def ssd_scan_heads(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                    Cm: jax.Array, *, chunk: int = 128,

@@ -1,7 +1,11 @@
-"""Pallas TPU paged-attention kernel — variable q_len per lane.
+"""Pallas TPU paged-attention kernels — rectangular (per-lane chunk) and
+ragged (flat token stream).
 
 A chunk of C query tokens per lane (C = 1 is plain decode) attends over its
-KV sequence scattered across fixed-size physical blocks of a shared pool.
+KV sequence scattered across fixed-size physical blocks of a shared pool;
+the ragged variant (:func:`paged_attention_ragged`) drops the per-lane
+rectangle entirely and serves one flat 1-D stream of mixed prefill/decode
+tokens with per-token lane metadata.
 The gather is expressed in the BlockSpec index maps: the per-lane block
 table is a *scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``), so
 the j-th kv DMA of lane b fetches physical block ``block_tables[b, j]``
@@ -146,6 +150,106 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                                 ctx_lens - 1, group=G, window=window,
                                 interpret=interpret)
     return out
+
+
+def _ragged_attn_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_scr, l_scr, acc_scr, *, block_size: int,
+                        window: int, scale: float):
+    t = pl.program_id(0)          # flat token index
+    j = pl.program_id(2)          # logical block index within the token's lane
+    nblk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    tpos = pos_ref[t]             # token t's absolute position in its lane
+
+    @pl.when(j * block_size <= tpos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
+        v = v_ref[0, :, 0]                               # (bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, bs)
+        kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 1)
+        mask = kpos <= tpos
+        if window:
+            mask &= (tpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, D)
+        m_scr[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, token_tables: jax.Array,
+                           token_pos: jax.Array, *, window: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """Flat-token-stream paged attention: q (T, Hkv, G, D) — one mixed
+    batch of T tokens from many lanes with NO per-lane rectangle.  Token t
+    attends causally over its own lane's blocks (``token_tables[t]``, the
+    lane's block-table row scalar-prefetched per token) up to its absolute
+    position ``token_pos[t]``.  The grid is (token, kv_head, block): the
+    kernel does work proportional to the real scheduled tokens, and each
+    token's block sweep stops at its *own* position (``j*bs <= pos``) —
+    strictly less kv traffic than the rectangular kernel, which sweeps
+    every row to the lane's full context.  Padding tokens (null tables,
+    position 0) stay inside the reserved null block and yield garbage the
+    caller ignores.  Returns (T, Hkv, G, D)."""
+    T, Hkv, G, D = q.shape
+    num_blocks, bs, Hkv_p, _ = k_pool.shape
+    assert Hkv_p == Hkv, (Hkv_p, Hkv)
+    max_blocks = token_tables.shape[1]
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(_ragged_attn_kernel, block_size=bs,
+                               window=window, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T, Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda t, h, j, tables, pos: (t, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda t, h, j, tables, pos:
+                         (tables[t, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda t, h, j, tables, pos:
+                         (tables[t, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda t, h, j, tables, pos: (t, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # m
+            pltpu.VMEM((G, 1), jnp.float32),   # l
+            pltpu.VMEM((G, D), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(token_tables.astype(jnp.int32), token_pos.astype(jnp.int32),
+      q, k_pool, v_pool)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))

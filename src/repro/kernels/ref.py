@@ -83,6 +83,45 @@ def paged_attention_chunk_reference(q: jax.Array, k_pool: jax.Array,
     return out.reshape(B, C, H, D)
 
 
+def paged_attention_ragged_reference(q: jax.Array, k_pool: jax.Array,
+                                     v_pool: jax.Array,
+                                     token_tables: jax.Array,
+                                     token_pos: jax.Array, *,
+                                     window: int = 0) -> jax.Array:
+    """q: (T, H, D) — one flattened stream of query tokens drawn from many
+    lanes (mixed prefill chunks and decodes, no per-lane rectangle);
+    pools: (num_blocks, bs, Hkv, D); token_tables: (T, max_blocks) int32 —
+    row t is the block-table row of the lane that owns token t;
+    token_pos: (T,) int32 — token t's absolute position in its own
+    sequence.  Returns (T, H, D).
+
+    Token t attends to kv positions ``<= token_pos[t]`` of its own lane's
+    blocks (and inside the sliding window).  In-chunk causality falls out
+    of the per-token positions: two tokens of the same lane in the same
+    flat batch see each other iff the earlier one's position is lower.
+    Work is proportional to T — the number of *real* scheduled tokens —
+    instead of ``lanes * max(q_len)``.  Padding tokens (null tables,
+    position 0) produce finite garbage the caller ignores.
+    """
+    T, H, D = q.shape
+    _, bs, Hkv, _ = k_pool.shape
+    max_blocks = token_tables.shape[1]
+    G = H // Hkv
+    k = k_pool[token_tables].reshape(T, max_blocks * bs, Hkv, D)
+    v = v_pool[token_tables].reshape(T, max_blocks * bs, Hkv, D)
+    qg = q.reshape(T, Hkv, G, D)
+    s = jnp.einsum("tkgd,tskd->tkgs", qg, k).astype(jnp.float32)
+    s = s / (D ** 0.5)
+    kpos = jnp.arange(max_blocks * bs)[None, :]                # (1, S)
+    valid = kpos <= token_pos[:, None]
+    if window:
+        valid &= (token_pos[:, None] - kpos) < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("tkgs,tskd->tkgd", w, v)
+    return out.reshape(T, H, D)
+
+
 def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
                               v_pool: jax.Array, block_tables: jax.Array,
                               ctx_lens: jax.Array, *,

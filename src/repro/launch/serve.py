@@ -40,6 +40,11 @@ def main() -> None:
                     action=argparse.BooleanOptionalAction,
                     help="share identical prompt prefixes copy-on-write "
                          "across requests (--no-prefix-cache disables)")
+    ap.add_argument("--ragged", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="flat-token serving batch (one 1-D stream of all "
+                         "scheduled tokens per step); --no-ragged pins the "
+                         "rectangular (lanes, chunk_width) layout")
     ap.add_argument("--engine", choices=["auto", "paged", "slot"],
                     default="auto",
                     help="paged block-pool engine vs dense-slot reference")
@@ -60,7 +65,8 @@ def main() -> None:
               "num_blocks": args.num_blocks or None,
               "token_budget": args.token_budget,
               "chunk_tokens": args.chunk_tokens,
-              "prefix_cache": args.prefix_cache}
+              "prefix_cache": args.prefix_cache,
+              "ragged": args.ragged and api.supports_ragged}
     eng = DecodeEngine(api, params, paged=paged, n_slots=args.slots,
                        cache_len=args.cache_len, window=window, **kw)
     rng = np.random.default_rng(0)

@@ -41,6 +41,10 @@ class ModelAPI:
     init_paged_cache: Optional[Callable[..., PyTree]] = None
     paged_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
     paged_decode_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
+    # ``ragged_step`` consumes one flat (T,) stream of all scheduled tokens
+    # (mixed prefill chunks + decodes, per-token lane/pos/slot metadata in
+    # the cache) — the serving layout that kills the rectangular padding tax
+    ragged_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
 
     @property
     def supports_paged(self) -> bool:
@@ -48,6 +52,10 @@ class ModelAPI:
         # counts (resolve_paged_step wraps it for the engine)
         return (self.paged_step is not None
                 or self.paged_decode_step is not None)
+
+    @property
+    def supports_ragged(self) -> bool:
+        return self.ragged_step is not None
 
     def resolve_paged_step(self):
         """The unified chunked step, or the q_len=1 legacy step when that
@@ -114,6 +122,8 @@ def build_model(cfg: ArchConfig) -> ModelAPI:
                 p, c, t, cfg, **kw),
             paged_decode_step=lambda p, c, t, **kw: vlm.paged_decode_step(
                 p, c, t, cfg, **kw),
+            ragged_step=lambda p, c, t, **kw: vlm.ragged_step(
+                p, c, t, cfg, **kw),
         )
     # dense / moe
     return ModelAPI(
@@ -129,6 +139,8 @@ def build_model(cfg: ArchConfig) -> ModelAPI:
         paged_step=lambda p, c, t, **kw: transformer.paged_step(
             p, c, t, cfg, **kw),
         paged_decode_step=lambda p, c, t, **kw: transformer.paged_decode_step(
+            p, c, t, cfg, **kw),
+        ragged_step=lambda p, c, t, **kw: transformer.ragged_step(
             p, c, t, cfg, **kw),
     )
 

@@ -149,6 +149,47 @@ def _apply_block_paged(bp: Dict, x: jax.Array, cache_l: Dict,
     return x + mlp_out, {"k": new_k, "v": new_v}
 
 
+def _apply_block_ragged(bp: Dict, x: jax.Array, cache_l: Dict,
+                        token_tables: jax.Array, token_pos: jax.Array,
+                        slot_mapping: jax.Array, cfg: ArchConfig, *,
+                        window: int) -> Tuple[jax.Array, Dict]:
+    """Process one flat stream of T tokens (mixed prefill chunks and
+    decodes from many lanes, no per-lane rectangle) through one block
+    against the paged KV pool.
+
+    x: (1, T, d) — the whole mixed batch as one "sequence"; RoPE is
+    anchored per token by ``token_pos`` (T,).  Each token's K/V is
+    scattered straight into its physical pool slot ``slot_mapping[t]``
+    (= block_id * block_size + offset); padding tokens carry slot 0 — the
+    reserved null block, a legal never-trusted target.  The attention read
+    gathers per token through ``token_tables`` (T, max_blocks).
+    """
+    from repro.kernels import ops as kernel_ops
+    bs = cache_l["k"].shape[1]
+    xn = apply_norm(cfg.norm_type, bp["attn_norm"], x)
+    q, k, v = layers.project_qkv(bp["attn"], xn, token_pos[None, :], cfg)
+    blk = slot_mapping // bs
+    off = slot_mapping % bs
+    new_k = cache_l["k"].at[blk, off].set(k[0].astype(cache_l["k"].dtype))
+    new_v = cache_l["v"].at[blk, off].set(v[0].astype(cache_l["v"].dtype))
+    attn = kernel_ops.paged_attention_ragged(q[0], new_k, new_v,
+                                             token_tables, token_pos,
+                                             window=window)
+    attn = layers.project_out(bp["attn"], attn[None], cfg)
+
+    if cfg.parallel_block:
+        mlp_out = layers.apply_mlp(bp["mlp"], xn, cfg)
+        return x + attn + mlp_out, {"k": new_k, "v": new_v}
+
+    x = x + attn
+    xm = apply_norm(cfg.norm_type, bp["mlp_norm"], x)
+    if "moe" in bp:
+        mlp_out, _ = moe_lib.apply_moe(bp["moe"], xm, cfg)
+    else:
+        mlp_out = layers.apply_mlp(bp["mlp"], xm, cfg)
+    return x + mlp_out, {"k": new_k, "v": new_v}
+
+
 def _apply_block_decode(bp: Dict, x: jax.Array, cache_l: Dict,
                         slot_positions: jax.Array, pos: jax.Array,
                         cfg: ArchConfig, *, window: int
@@ -384,6 +425,72 @@ def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
             "v": jnp.stack([c["v"] for c in new_head]),
         }
     return logits, new_cache
+
+
+def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
+                cfg: ArchConfig, *, window: int = 0,
+                compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """tokens (T,) -> (logits (T, V), new cache) — the ragged flat-token
+    serving step.  T is one pow2-bucketed stream of *all* scheduled tokens
+    this engine iteration (multi-token prefill chunks and single decode
+    tokens back to back, each request a contiguous segment) — no
+    ``(lanes, chunk_width)`` rectangle is ever materialized, so one lane
+    prefilling a long chunk no longer pads every decoding lane out to the
+    chunk width.
+
+    Per-token metadata rides in the cache and is overwritten by the engine
+    before every step:
+      * ``token_lane``   (T,) — owning engine lane (selects the block-table
+        row for the attention read);
+      * ``token_pos``    (T,) — the token's absolute position in its own
+        sequence (anchors RoPE and the causal bound);
+      * ``slot_mapping`` (T,) — physical KV pool slot the token writes,
+        ``block_id * block_size + offset`` (0 = reserved null block for
+        padding tokens);
+      * ``block_tables`` (n_lanes, max_blocks) — per-lane physical block
+        rows.
+    """
+    token_pos = cache["token_pos"]
+    token_lane = cache["token_lane"]
+    slot_mapping = cache["slot_mapping"]
+    tables = cache["block_tables"]
+    token_tables = tables[token_lane]                     # (T, max_blocks)
+    x = layers.embed_tokens(params["embed"], tokens[None], compute_dtype)
+    if getattr(cfg, "scale_embeddings", False):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+
+    new_head = []
+    for i, bp in enumerate(params.get("head_blocks", [])):
+        cl = {"k": cache["head"]["k"][i], "v": cache["head"]["v"][i]}
+        x, ncl = _apply_block_ragged(bp, x, cl, token_tables, token_pos,
+                                     slot_mapping, cfg, window=window)
+        new_head.append(ncl)
+
+    def layer_step(x, inp):
+        bp, cl = inp
+        x, ncl = _apply_block_ragged(bp, x, cl, token_tables, token_pos,
+                                     slot_mapping, cfg, window=window)
+        return x, ncl
+
+    x, new_scan = jax.lax.scan(layer_step, x,
+                               (params["blocks"], cache["scan"]))
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    logits = layers.lm_logits(params.get("head"), params["embed"], x,
+                              cfg.tie_embeddings)
+
+    new_cache = {
+        "scan": new_scan,
+        "block_tables": tables,
+        "token_lane": token_lane,
+        "token_pos": token_pos,
+        "slot_mapping": slot_mapping,
+    }
+    if new_head:
+        new_cache["head"] = {
+            "k": jnp.stack([c["k"] for c in new_head]),
+            "v": jnp.stack([c["v"] for c in new_head]),
+        }
+    return logits[0], new_cache
 
 
 def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,

@@ -95,6 +95,16 @@ def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
                                   compute_dtype=compute_dtype)
 
 
+def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
+                cfg: ArchConfig, *, window: int = 0,
+                compute_dtype=jnp.bfloat16):
+    # the flat-token serving step sees text tokens only (patches entered
+    # during prefill); the LM backbone consumes the ragged stream directly
+    return transformer.ragged_step(params["lm"], cache, tokens, cfg,
+                                   window=window,
+                                   compute_dtype=compute_dtype)
+
+
 def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,
                       cfg: ArchConfig, *, window: int = 0,
                       compute_dtype=jnp.bfloat16):

@@ -1,4 +1,5 @@
-from repro.serving.batch import BatchEngine, BatchStats  # noqa: F401
+from repro.serving.batch import (BatchEngine, BatchStats,  # noqa: F401
+                                 RaggedBatch)
 from repro.serving.blocks import (BlockAllocator, KVCacheManager,  # noqa: F401
                                   NULL_BLOCK)
 from repro.serving.engine import (DecodeEngine, PagedDecodeEngine,  # noqa: F401

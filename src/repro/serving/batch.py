@@ -1,6 +1,18 @@
-"""Stateless batched inference (BraggNN / CookieNetAE at the edge):
-dynamic micro-batching with a latency budget, padded to fixed compiled
-batch sizes (edge accelerators compile fixed shapes)."""
+"""Serving batch containers.
+
+Two kinds live here:
+
+  * :class:`RaggedBatch` — the flat-token serving batch: one 1-D stream of
+    *all* tokens an engine step schedules (mixed multi-token prefill chunks
+    and single-token decodes, each request a contiguous segment) plus
+    per-token metadata (owning lane, absolute position, physical KV slot).
+    Replaces the rectangular ``(n_lanes, chunk_width)`` layout in which one
+    lane prefilling a 256-token chunk forced every decoding lane to pad 1
+    real token out to 256.  Bucketing is pow2 on *total tokens*.
+  * :class:`BatchEngine` — stateless batched inference (BraggNN /
+    CookieNetAE at the edge): dynamic micro-batching with a latency budget,
+    padded to fixed compiled batch sizes.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -15,14 +27,94 @@ PyTree = Any
 
 
 def padded_pow2(n: int, cap: int = 0) -> int:
-    """Smallest power of two >= n (optionally capped).  Both engines pad
-    variable work to a few fixed compiled shapes with this: BatchEngine its
-    micro-batches, PagedDecodeEngine its per-step chunk width — bounding
+    """Smallest power of two >= n (optionally capped).  Every serving
+    engine pads variable work to a few fixed compiled shapes with this:
+    BatchEngine its micro-batches, the rectangular paged step its per-step
+    chunk width, RaggedBatch its flat total-token count — bounding
     recompiles to O(log cap) instead of one per observed size."""
     size = 1
     while size < n:
         size *= 2
     return min(size, cap) if cap else size
+
+
+@dataclasses.dataclass
+class RaggedBatch:
+    """One engine step's scheduled tokens as a flat 1-D stream.
+
+    ``tokens[q_starts[rid] : q_starts[rid] + seg_lens[rid]]`` is request
+    ``rid``'s contiguous segment (a prefill chunk or a single decode
+    token); segments are packed back to back in schedule order and the
+    tail is padded to a pow2 bucket (capped at the scheduler's token
+    budget).  Per token:
+
+      * ``token_lane``   — owning engine lane (selects the block-table row
+        the attention read gathers through);
+      * ``token_pos``    — absolute position in its own sequence (RoPE
+        anchor + causal bound; in-chunk causality falls out of it);
+      * ``slot_mapping`` — physical KV pool slot the token's K/V is
+        written to, ``block_id * block_size + offset``.
+
+    Padding tokens carry lane 0 / position 0 / slot 0 (the reserved null
+    block): legal targets whose outputs the engine never reads.
+    ``last_row[lane]`` is the flat index of that lane's final real token —
+    the only logits row that can emit a new token.
+    """
+    tokens: np.ndarray                 # (T_pad,) int32
+    token_lane: np.ndarray             # (T_pad,) int32
+    token_pos: np.ndarray              # (T_pad,) int32
+    slot_mapping: np.ndarray           # (T_pad,) int32
+    last_row: np.ndarray               # (n_lanes,) int32
+    q_starts: Dict[int, int]           # request_id -> flat segment offset
+    seg_lens: Dict[int, int]           # request_id -> segment length
+    total_tokens: int                  # real scheduled tokens
+    padded_tokens: int                 # bucketed flat length T_pad
+
+    @property
+    def padding_efficiency(self) -> float:
+        """Real tokens / padded flat slots — 1.0 means zero waste."""
+        return self.total_tokens / max(self.padded_tokens, 1)
+
+    @classmethod
+    def build(cls, decision, kv, n_lanes: int, block_size: int, *,
+              cap: int = 0) -> "RaggedBatch":
+        """Flatten a :class:`~repro.serving.scheduler.StepDecision` into
+        the per-token arrays the jitted ragged step consumes.  ``kv`` is
+        the :class:`KVCacheManager` *after* ``schedule()`` guaranteed every
+        scheduled token a slot (block tables are final, incl. any
+        copy-on-write repointing).  ``cap`` bounds the pow2 bucket (the
+        scheduler's token budget); totals above it are left exact."""
+        total = sum(decision.num_scheduled[r.request_id]
+                    for r in decision.scheduled)
+        if cap and cap < max(total, 1):
+            padded = max(total, 1)          # over-budget total: stay exact
+        else:
+            padded = padded_pow2(max(total, 1), cap)
+        tokens = np.zeros((padded,), np.int32)
+        token_lane = np.zeros((padded,), np.int32)
+        token_pos = np.zeros((padded,), np.int32)
+        slot_mapping = np.zeros((padded,), np.int32)
+        last_row = np.zeros((n_lanes,), np.int32)
+        q_starts: Dict[int, int] = {}
+        seg_lens: Dict[int, int] = {}
+        off = 0
+        for r in decision.scheduled:
+            n = decision.num_scheduled[r.request_id]
+            table = np.asarray(kv.block_table(r.request_id), np.int64)
+            ps = np.arange(r.cursor, r.cursor + n)
+            tokens[off:off + n] = r.feed[r.cursor:r.cursor + n]
+            token_lane[off:off + n] = r.lane
+            token_pos[off:off + n] = ps
+            slot_mapping[off:off + n] = (table[ps // block_size] * block_size
+                                         + ps % block_size)
+            last_row[r.lane] = off + n - 1
+            q_starts[r.request_id] = off
+            seg_lens[r.request_id] = n
+            off += n
+        return cls(tokens=tokens, token_lane=token_lane,
+                   token_pos=token_pos, slot_mapping=slot_mapping,
+                   last_row=last_row, q_starts=q_starts, seg_lens=seg_lens,
+                   total_tokens=total, padded_tokens=padded)
 
 
 @dataclasses.dataclass

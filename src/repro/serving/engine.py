@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.batch import padded_pow2
+from repro.serving.batch import RaggedBatch, padded_pow2
 from repro.serving.blocks import KVCacheManager
 from repro.serving.scheduler import (Request, Scheduler, SchedulerConfig,
                                      StepDecision)
@@ -58,14 +58,23 @@ class PagedDecodeEngine:
     plus the null block) — pass a smaller ``num_blocks`` to oversubscribe
     memory and exercise preemption, or a larger one to admit more lanes
     than dense slabs could.
+
+    Batch layout (``ragged``, default True for families providing
+    ``ragged_step``): every step's scheduled tokens are flattened into one
+    1-D stream with per-token (lane, position, KV-slot) metadata — a mixed
+    prefill+decode step costs ~``sum(q_len)`` tokens of model work.
+    ``ragged=False`` pins the legacy rectangular ``(n_slots, chunk_width)``
+    layout, where one lane prefilling a wide chunk pads every decoding
+    lane to the same width (``lanes * max(q_len)`` work) — kept as the PR 2
+    baseline and for the padding-tax comparison in bench_serving.
     """
 
     def __init__(self, model_api, params: PyTree, *, n_slots: int,
                  cache_len: int, eos_token: int = -1, window: int = 0,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  token_budget: int = 0, chunk_tokens: int = 16,
-                 prefix_cache: bool = True, cache_dtype=None,
-                 compute_dtype=None) -> None:
+                 prefix_cache: bool = True, ragged: Optional[bool] = None,
+                 cache_dtype=None, compute_dtype=None) -> None:
         if not getattr(model_api, "supports_paged", False):
             raise ValueError(
                 f"{model_api.cfg.family} models have no paged-KV decode "
@@ -84,6 +93,17 @@ class PagedDecodeEngine:
                              "(1 = one-token-per-step prefill)")
         if getattr(model_api, "paged_step", None) is None:
             chunk_tokens = 1          # legacy q_len=1 step: no chunking
+        # ragged flat-token batching is the default whenever the model
+        # family provides the flat step; ``ragged=False`` pins the legacy
+        # rectangular (n_slots, chunk_width) layout (the PR 2 baseline)
+        ragged_fn = getattr(model_api, "ragged_step", None)
+        if ragged is None:
+            ragged = ragged_fn is not None
+        if ragged and ragged_fn is None:
+            raise ValueError(
+                f"{model_api.cfg.family} models have no ragged_step; "
+                "pass ragged=False for the rectangular paged path")
+        self.ragged = ragged
         self.chunk_tokens = chunk_tokens
         self.max_blocks = -(-cache_len // block_size)
         if num_blocks is None:
@@ -94,25 +114,37 @@ class PagedDecodeEngine:
                                  enable_prefix_cache=prefix_cache)
         self.scheduler = Scheduler(
             SchedulerConfig(n_lanes=n_slots, token_budget=token_budget,
-                            chunk_tokens=self.chunk_tokens),
+                            chunk_tokens=self.chunk_tokens,
+                            fill_to_bucket=self.ragged),
             self.kv)
         kw = {"num_blocks": num_blocks, "block_size": block_size,
               "max_blocks_per_lane": self.max_blocks}
         if cache_dtype is not None:
             kw["dtype"] = cache_dtype
         self.cache = model_api.init_paged_cache(n_slots, **kw)
+        if self.ragged:
+            # ragged_step tracks per-token positions, not per-lane "pos";
+            # drop it now so the first step's cache signature matches every
+            # later one (a lingering key = one pointless retrace per bucket)
+            self.cache.pop("pos", None)
         step_kw = {"window": window}
         if compute_dtype is not None:
             step_kw["compute_dtype"] = compute_dtype
         # donate the cache: the KV pool is updated in place rather than
         # double-buffered (decisive for pool size = device memory on TPU).
-        # One jitted step serves every chunk width; widths are padded to
-        # powers of two so it retraces O(log chunk_tokens) times, and a
-        # decode-only step stays at width 1 (no padded-width prefill tax).
-        step_fn = model_api.resolve_paged_step() \
-            if hasattr(model_api, "resolve_paged_step") \
-            else (getattr(model_api, "paged_step", None)
-                  or model_api.paged_decode_step)
+        # Rectangular: one jitted step per pow2 chunk width (O(log
+        # chunk_tokens) retraces, decode-only steps stay at width 1).
+        # Ragged: one jitted step per pow2 *total token count* (O(log
+        # token_budget) retraces) — the flat stream has no per-lane width
+        # at all, so a mixed prefill+decode step does work proportional to
+        # the real scheduled tokens.
+        if self.ragged:
+            step_fn = ragged_fn
+        else:
+            step_fn = model_api.resolve_paged_step() \
+                if hasattr(model_api, "resolve_paged_step") \
+                else (getattr(model_api, "paged_step", None)
+                      or model_api.paged_decode_step)
         self._step = jax.jit(
             lambda p, c, t: step_fn(p, c, t, **step_kw),
             donate_argnums=(1,))
@@ -123,6 +155,10 @@ class PagedDecodeEngine:
         self.tokens_prefilled = 0
         self.cow_block_copies = 0
         self.steps = 0
+        # padding-tax accounting: real scheduled tokens vs flat/rect slots
+        # the compiled step actually processed
+        self.scheduled_tokens = 0
+        self.padded_tokens = 0
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
@@ -155,23 +191,10 @@ class PagedDecodeEngine:
                              "v": v.at[:, dst].set(v[:, src])}
         return out
 
-    def step(self) -> StepDecision:
-        """One engine iteration: one token-budgeted batch mixing prefill
-        chunks and decodes."""
-        decision = self.scheduler.schedule()
-        # apply queued copy-on-write copies BEFORE this step's KV writes
-        # land in the forked blocks
-        copies = self.kv.take_copy_ops()
-        if copies:
-            n = padded_pow2(len(copies))
-            src = np.zeros((n,), np.int32)
-            dst = np.zeros((n,), np.int32)
-            for i, (s, d) in enumerate(copies):
-                src[i], dst[i] = s, d
-            self.cache = self._cow(self.cache, jnp.asarray(src),
-                                   jnp.asarray(dst))
-            self.cow_block_copies += len(copies)
-
+    def _run_rect(self, decision: StepDecision) -> np.ndarray:
+        """The rectangular (n_slots, chunk_width) step: every lane is
+        padded to the widest scheduled chunk.  Returns (n_slots,) next
+        tokens (garbage for non-emitting lanes)."""
         sched_ids = {r.request_id for r in decision.scheduled}
         width = padded_pow2(max(
             [decision.num_scheduled[r.request_id]
@@ -194,11 +217,57 @@ class PagedDecodeEngine:
         self.cache["q_lens"] = jnp.asarray(q_lens)
         logits, self.cache = self._step(self.params, self.cache,
                                         jnp.asarray(tokens))
+        self.scheduled_tokens += int(q_lens.sum())
+        self.padded_tokens += self.n_slots * width
         # only each lane's last real chunk row can emit — gather those
         # (n_slots, V) rows before the argmax instead of reducing all C
         last = jnp.asarray(np.maximum(q_lens - 1, 0))
-        next_tokens = np.asarray(jnp.argmax(
+        return np.asarray(jnp.argmax(
             logits[jnp.arange(self.n_slots), last], axis=-1))   # (slots,)
+
+    def _run_ragged(self, decision: StepDecision) -> np.ndarray:
+        """The flat-token step: all scheduled tokens as one 1-D stream with
+        per-token lane/pos/slot metadata — work proportional to the real
+        token count, ~sum(q_len) instead of lanes * max(q_len).  Returns
+        (n_slots,) next tokens (garbage for non-emitting lanes)."""
+        batch = RaggedBatch.build(decision, self.kv, self.n_slots,
+                                  self.block_size,
+                                  cap=self.scheduler._budget())
+        tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
+        for r in self.scheduler.running:
+            tables[r.lane] = self.kv.padded_table(r.request_id)
+        self.cache["block_tables"] = jnp.asarray(tables)
+        self.cache["token_lane"] = jnp.asarray(batch.token_lane)
+        self.cache["token_pos"] = jnp.asarray(batch.token_pos)
+        self.cache["slot_mapping"] = jnp.asarray(batch.slot_mapping)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(batch.tokens))
+        self.scheduled_tokens += batch.total_tokens
+        self.padded_tokens += batch.padded_tokens
+        # only each lane's final segment row can emit — gather those
+        # (n_slots, V) rows before the argmax instead of reducing all T
+        return np.asarray(jnp.argmax(
+            logits[jnp.asarray(batch.last_row)], axis=-1))      # (slots,)
+
+    def step(self) -> StepDecision:
+        """One engine iteration: one token-budgeted batch mixing prefill
+        chunks and decodes."""
+        decision = self.scheduler.schedule()
+        # apply queued copy-on-write copies BEFORE this step's KV writes
+        # land in the forked blocks
+        copies = self.kv.take_copy_ops()
+        if copies:
+            n = padded_pow2(len(copies))
+            src = np.zeros((n,), np.int32)
+            dst = np.zeros((n,), np.int32)
+            for i, (s, d) in enumerate(copies):
+                src[i], dst[i] = s, d
+            self.cache = self._cow(self.cache, jnp.asarray(src),
+                                   jnp.asarray(dst))
+            self.cow_block_copies += len(copies)
+
+        next_tokens = (self._run_ragged(decision) if self.ragged
+                       else self._run_rect(decision))
         self.steps += 1
 
         for r in list(decision.scheduled):
@@ -246,6 +315,9 @@ class PagedDecodeEngine:
             "prefix_tokens_reused": self.kv.prefix_tokens_reused,
             "cow_copies": self.kv.cow_copies,
             "cache_evictions": self.kv.evictions,
+            "ragged": int(self.ragged),
+            "padding_efficiency": (self.scheduled_tokens
+                                   / max(self.padded_tokens, 1)),
         }
 
 
@@ -290,6 +362,8 @@ class SlotDecodeEngine:
         self._next_id = 0
         self.tokens_decoded = 0
         self.steps = 0
+        self.scheduled_tokens = 0
+        self.padded_tokens = 0
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
@@ -325,6 +399,8 @@ class SlotDecodeEngine:
         for slot, req in enumerate(self.active):
             if req is not None:
                 tokens[slot, 0] = req.feed[req.cursor]
+        self.scheduled_tokens += sum(1 for a in self.active if a is not None)
+        self.padded_tokens += self.n_slots
         logits, self.cache = self._step(self.params, self.cache,
                                         jnp.asarray(tokens))
         next_tokens = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
@@ -370,4 +446,6 @@ class SlotDecodeEngine:
             "preemptions": 0,
             "block_utilization": used / max(
                 self.n_slots * self._slots_per_lane, 1),
+            "padding_efficiency": (self.scheduled_tokens
+                                   / max(self.padded_tokens, 1)),
         }

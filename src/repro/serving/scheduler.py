@@ -85,6 +85,11 @@ class SchedulerConfig:
     n_lanes: int
     token_budget: int = 0    # 0 = n_lanes * chunk_tokens
     chunk_tokens: int = 1    # per-request tokens per step cap; 0 = unlimited
+    # ragged flat-token mode: after the normal pass, extend prefill chunks
+    # until the step's total token count reaches its pow2 bucket boundary
+    # (capped at the budget) — the flat slots the bucket would otherwise
+    # waste on padding carry real prefill work instead
+    fill_to_bucket: bool = False
 
 
 @dataclasses.dataclass
@@ -203,6 +208,25 @@ class Scheduler:
                 budget_left -= n
 
         budget_left = self._admit(budget_left, decision, scheduled)
+
+        # ragged bucket fill: the flat batch is padded to a pow2 total, so
+        # extend prefill chunks (beyond chunk_tokens — the per-lane width
+        # cap is meaningless without a rectangle) until the total lands on
+        # the bucket boundary: padding slots become real prefill work.
+        # Greedy decode is causal per request, so scheduling more prompt
+        # tokens per step never changes any output.
+        if self.cfg.fill_to_bucket and decision.num_scheduled:
+            from repro.serving.batch import padded_pow2
+            total = sum(decision.num_scheduled.values())
+            spare = min(self._budget(), padded_pow2(total)) - total
+            for r in scheduled:
+                if spare <= 0:
+                    break
+                n = decision.num_scheduled[r.request_id]
+                extra = min(spare, r.remaining_feed - n)
+                if extra > 0:
+                    decision.num_scheduled[r.request_id] = n + extra
+                    spare -= extra
 
         # guarantee a KV slot for every scheduled token, in priority order;
         # evict from the back (latest admitted) when the pool runs dry —

@@ -5,8 +5,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels.paged_attention import (paged_attention,
-                                           paged_attention_chunk)
+                                           paged_attention_chunk,
+                                           paged_attention_ragged)
 from repro.kernels.ref import (paged_attention_chunk_reference,
+                               paged_attention_ragged_reference,
                                paged_attention_reference)
 from repro.kernels import ops
 
@@ -177,4 +179,156 @@ def test_ops_chunk_wrapper_dispatches_to_reference_on_cpu(key):
     ref = paged_attention_chunk_reference(q, kp, vp, tables,
                                           jnp.asarray(starts))
     assert out.shape == (B, C, Hkv * G, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ragged flat-token-stream generalization
+# ---------------------------------------------------------------------------
+# Each lane contributes a contiguous segment of (start, n) query tokens to
+# one flat stream; {all-decode, one-big-prefill+decodes, multi-prefill}
+# exercises the mixes the unified serving step actually schedules, with
+# segment starts straddling block boundaries (start % bs != 0, segments
+# crossing into the next block).
+SEGMENT_MIXES = {
+    "all_decode": [(4, 1), (9, 1), (0, 1), (14, 1)],
+    "one_prefill_plus_decodes": [(3, 1), (0, 9), (7, 1)],
+    "multi_prefill": [(2, 6), (0, 5), (5, 7)],
+}
+
+
+def _ragged_setup(key, segments, Hkv, G, D, bs, max_blocks, dtype):
+    """Build pools + disjoint per-lane tables + the flat token metadata."""
+    ks = jax.random.split(key, 3)
+    H = Hkv * G
+    T = sum(n for _, n in segments)
+    n_lanes = len(segments)
+    num_blocks = n_lanes * max_blocks + 1
+    q = jax.random.normal(ks[0], (T, H, D), dtype)
+    k_pool = jax.random.normal(ks[1], (num_blocks, bs, Hkv, D), dtype)
+    v_pool = jax.random.normal(ks[2], (num_blocks, bs, Hkv, D), dtype)
+    tables = np.zeros((n_lanes, max_blocks), np.int32)
+    free = list(range(1, num_blocks))
+    token_tables = np.zeros((T, max_blocks), np.int32)
+    token_pos = np.zeros((T,), np.int32)
+    off = 0
+    for lane, (start, n) in enumerate(segments):
+        for j in range(-(-(start + n) // bs)):
+            tables[lane, j] = free.pop(0)
+        token_tables[off:off + n] = tables[lane]
+        token_pos[off:off + n] = start + np.arange(n)
+        off += n
+    return q, k_pool, v_pool, tables, token_tables, token_pos
+
+
+@pytest.mark.parametrize("mix", sorted(SEGMENT_MIXES))
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_ragged_reference_matches_per_lane_chunk_reference(key, mix, G):
+    """The flat-stream oracle must agree with the naive per-lane chunk
+    oracle on every segment: flattening is a layout change, not a math
+    change."""
+    segments = SEGMENT_MIXES[mix]
+    Hkv, D, bs, max_blocks = 2, 16, 4, 4
+    q, kp, vp, tables, ttab, tpos = _ragged_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, jnp.float32)
+    flat = paged_attention_ragged_reference(q, kp, vp, jnp.asarray(ttab),
+                                            jnp.asarray(tpos))
+    off = 0
+    for lane, (start, n) in enumerate(segments):
+        per_lane = paged_attention_chunk_reference(
+            q[None, off:off + n], kp, vp,
+            jnp.asarray(tables[lane:lane + 1]),
+            jnp.asarray([start], jnp.int32))
+        np.testing.assert_allclose(np.asarray(flat[off:off + n]),
+                                   np.asarray(per_lane[0]),
+                                   atol=2e-5, rtol=2e-5)
+        off += n
+
+
+@pytest.mark.parametrize("mix", sorted(SEGMENT_MIXES))
+@pytest.mark.parametrize("G", [1, 2])
+@pytest.mark.parametrize("window", [0, 5])
+def test_ragged_kernel_matches_ragged_reference(key, mix, G, window):
+    """Pallas flat-stream kernel (interpret mode) vs the pure-jnp oracle
+    across q_len mixes, GQA ratios, and block-straddling positions."""
+    segments = SEGMENT_MIXES[mix]
+    Hkv, D, bs, max_blocks = 2, 32, 4, 4
+    q, kp, vp, tables, ttab, tpos = _ragged_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, jnp.float32)
+    T, H, D = q.shape
+    ref = paged_attention_ragged_reference(q, kp, vp, jnp.asarray(ttab),
+                                           jnp.asarray(tpos), window=window)
+    qg = q.reshape(T, Hkv, G, D)
+    out = paged_attention_ragged(qg, kp, vp, jnp.asarray(ttab),
+                                 jnp.asarray(tpos), window=window,
+                                 interpret=True).reshape(T, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ragged_single_token_rows_equal_decode_kernel(key):
+    """A flat stream of pure decodes must reproduce the rectangular decode
+    kernel row for row (same online-softmax sweep per token)."""
+    segments = SEGMENT_MIXES["all_decode"]
+    Hkv, G, D, bs, max_blocks = 2, 2, 32, 4, 4
+    q, kp, vp, tables, ttab, tpos = _ragged_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, jnp.float32)
+    T, H, _ = q.shape
+    qg = q.reshape(T, Hkv, G, D)
+    flat = paged_attention_ragged(qg, kp, vp, jnp.asarray(ttab),
+                                  jnp.asarray(tpos), interpret=True)
+    # the same tokens as a (B = T)-lane decode batch at ctx = pos + 1
+    dec = paged_attention(qg, kp, vp, jnp.asarray(ttab),
+                          jnp.asarray(tpos) + 1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(dec))
+
+
+def test_ragged_padding_rows_are_inert(key):
+    """Null-table / position-0 padding rows (the bucket tail) must not
+    fault and must not change any real row's output."""
+    segments = SEGMENT_MIXES["multi_prefill"]
+    Hkv, G, D, bs, max_blocks = 2, 2, 16, 4, 4
+    q, kp, vp, tables, ttab, tpos = _ragged_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, jnp.float32)
+    T = q.shape[0]
+    pad = 6
+    qp = jnp.concatenate([q, jnp.zeros((pad,) + q.shape[1:], q.dtype)])
+    ttab_p = np.concatenate([ttab, np.zeros((pad, max_blocks), np.int32)])
+    tpos_p = np.concatenate([tpos, np.zeros((pad,), np.int32)])
+    ref = paged_attention_ragged_reference(q, kp, vp, jnp.asarray(ttab),
+                                           jnp.asarray(tpos))
+    out = paged_attention_ragged_reference(qp, kp, vp, jnp.asarray(ttab_p),
+                                           jnp.asarray(tpos_p))
+    np.testing.assert_array_equal(np.asarray(out[:T]), np.asarray(ref))
+    assert np.all(np.isfinite(np.asarray(out)))      # garbage, but finite
+
+
+def test_ragged_kernel_ignores_null_block_contents(key):
+    """Scribbling the reserved null block must not leak into any lane."""
+    segments = SEGMENT_MIXES["one_prefill_plus_decodes"]
+    Hkv, G, D, bs, max_blocks = 1, 2, 32, 4, 4
+    q, kp, vp, tables, ttab, tpos = _ragged_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, jnp.float32)
+    T = q.shape[0]
+    qg = q.reshape(T, Hkv, G, D)
+    out1 = paged_attention_ragged(qg, kp, vp, jnp.asarray(ttab),
+                                  jnp.asarray(tpos), interpret=True)
+    out2 = paged_attention_ragged(qg, kp.at[0].set(1e4),
+                                  vp.at[0].set(-1e4), jnp.asarray(ttab),
+                                  jnp.asarray(tpos), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_ops_ragged_wrapper_dispatches_to_reference_on_cpu(key):
+    """On the CPU backend the wrapper must use the XLA reference path and
+    accept the model-native (T, H, D) flat query layout."""
+    segments = SEGMENT_MIXES["multi_prefill"]
+    Hkv, G, D, bs, max_blocks = 2, 2, 16, 4, 4
+    q, kp, vp, tables, ttab, tpos = _ragged_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, jnp.float32)
+    out = ops.paged_attention_ragged(q, kp, vp, jnp.asarray(ttab),
+                                     jnp.asarray(tpos))
+    ref = paged_attention_ragged_reference(q, kp, vp, jnp.asarray(ttab),
+                                           jnp.asarray(tpos))
+    assert out.shape == q.shape
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)

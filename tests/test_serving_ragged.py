@@ -1,0 +1,314 @@
+"""Ragged flat-token serving batch: differential correctness harness.
+
+The ragged engine (one 1-D stream of all scheduled tokens per step, no
+``(lanes, chunk_width)`` rectangle) must be **token-identical** to both the
+dense-slot reference engine and the rectangular paged engine under every
+combination of arrival schedule, prompt lengths, token budgets, chunk
+widths, preemption pressure, and prefix sharing.  The hypothesis fuzz test
+drives randomized workloads end-to-end through both engines; the plain
+tests pin the named regressions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (DecodeEngine, PagedDecodeEngine, RaggedBatch,
+                           SlotDecodeEngine)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("gemma-7b").smoke_variant()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _prompts(cfg, n, lo=3, hi=12, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+COMMON = dict(cache_len=64, cache_dtype=jnp.float32,
+              compute_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pinned differential regressions
+# ---------------------------------------------------------------------------
+def test_ragged_is_default_paged_layout(model):
+    cfg, api, params = model
+    eng = DecodeEngine(api, params, n_slots=2, **COMMON)
+    assert isinstance(eng, PagedDecodeEngine) and eng.ragged
+    rect = PagedDecodeEngine(api, params, n_slots=2, ragged=False, **COMMON)
+    assert not rect.ragged
+
+
+def test_ragged_engine_token_identical_to_slot_engine(model):
+    """The archetype core: ragged flat-token engine vs the dense-slot
+    oracle, more requests than lanes (staggered admissions, lane reuse)."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6)
+    re = PagedDecodeEngine(api, params, n_slots=3, **COMMON)
+    se = SlotDecodeEngine(api, params, n_slots=3, **COMMON)
+    assert re.ragged
+    for p in prompts:
+        re.submit(p, 8)
+        se.submit(p, 8)
+    done_r = {r.request_id: r.generated for r in re.run_until_drained()}
+    done_s = {r.request_id: r.generated for r in se.run_until_drained()}
+    assert len(done_r) == len(prompts)
+    assert done_r == done_s
+
+
+def test_ragged_engine_token_identical_to_rect_engine(model):
+    """Direct layout differential: the flat stream vs the rectangular
+    (lanes, width) batch over the same scheduler knobs."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=4, hi=14, seed=5)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=6, **COMMON)
+    re = PagedDecodeEngine(api, params, ragged=True, **kw)
+    rc = PagedDecodeEngine(api, params, ragged=False, **kw)
+    for p in prompts:
+        re.submit(p, 8)
+        rc.submit(p, 8)
+    done_r = {r.request_id: r.generated for r in re.run_until_drained()}
+    done_c = {r.request_id: r.generated for r in rc.run_until_drained()}
+    assert done_r == done_c and len(done_r) == len(prompts)
+
+
+def test_ragged_preemption_token_identical(model):
+    """A pool too small for all lanes forces preemption-by-recompute with
+    flat batches in flight; outputs must not change."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=6, hi=14, seed=9)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=6, **COMMON)
+    free_run = PagedDecodeEngine(api, params, **kw)
+    tight = PagedDecodeEngine(api, params, num_blocks=10, **kw)
+    for p in prompts:
+        free_run.submit(p, 8)
+        tight.submit(p, 8)
+    ref = {r.request_id: r.generated for r in free_run.run_until_drained()}
+    got = {r.request_id: r.generated for r in tight.run_until_drained()}
+    assert tight.scheduler.total_preemptions > 0
+    assert got == ref
+
+
+def test_ragged_prefix_sharing_cow_token_identical(model):
+    """CoW prefix sharing under the flat layout: identical prompts fork
+    cached blocks; outputs must match the dense reference exactly."""
+    cfg, api, params = model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    re = PagedDecodeEngine(api, params, n_slots=1, block_size=4,
+                           chunk_tokens=8, prefix_cache=True, **COMMON)
+    se = SlotDecodeEngine(api, params, n_slots=1, **COMMON)
+    for _ in range(2):
+        re.submit(prompt, 6)
+        se.submit(prompt, 6)
+    done_r = {r.request_id: r.generated for r in re.run_until_drained()}
+    done_s = {r.request_id: r.generated for r in se.run_until_drained()}
+    assert done_r == done_s
+    assert re.stats()["prefix_hits"] >= 1
+    assert re.cow_block_copies >= 1
+
+
+def test_ragged_padding_efficiency_beats_rect_on_mixed_load(model):
+    """The point of the layout: on a mixed prefill+decode load the flat
+    stream wastes (far) fewer padded slots than the rectangle."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 8, lo=8, hi=16, seed=13)
+    kw = dict(n_slots=4, block_size=4, chunk_tokens=8, **COMMON)
+    re = PagedDecodeEngine(api, params, ragged=True, **kw)
+    rc = PagedDecodeEngine(api, params, ragged=False, **kw)
+    # staggered arrival: prefill chunks and decodes coexist in most steps
+    pending_r, pending_c = list(prompts), list(prompts)
+    while pending_r or re.scheduler.has_work():
+        if pending_r:
+            re.submit(pending_r.pop(0), 8)
+        re.step()
+    while pending_c or rc.scheduler.has_work():
+        if pending_c:
+            rc.submit(pending_c.pop(0), 8)
+        rc.step()
+    eff_r = re.stats()["padding_efficiency"]
+    eff_c = rc.stats()["padding_efficiency"]
+    assert eff_r > eff_c
+    assert eff_r >= 0.8
+
+
+# ---------------------------------------------------------------------------
+# the fuzz harness (hypothesis; collected as a skip without the dev extra)
+# ---------------------------------------------------------------------------
+def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
+                        token_budget, tight_pool, prefix, arrival_every):
+    """One randomized workload through ragged-paged vs dense-slot engines,
+    asserting token identity end-to-end (shared by the hypothesis fuzz and
+    the pinned no-hypothesis cases)."""
+    cfg, api, params = model
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    prompts = []
+    for _ in range(n_requests):
+        body = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(1, 12))).astype(np.int32)
+        if prefix and rng.random() < 0.5:      # exercise the prefix cache
+            body = np.concatenate([shared, body])
+        prompts.append(body)
+    max_new = [int(rng.integers(1, 7)) for _ in range(n_requests)]
+    # pool sized to force preemption when tight (but never below one
+    # request's worst-case footprint, which would be an unserveable config)
+    worst = max(len(p) + m for p, m in zip(prompts, max_new))
+    bs = 4
+    max_blocks = -(-COMMON["cache_len"] // bs)
+    need = -(-worst // bs)
+    pool = (need + 2) if tight_pool else None
+    re = PagedDecodeEngine(api, params, n_slots=n_slots, block_size=bs,
+                           chunk_tokens=chunk_tokens,
+                           token_budget=token_budget, num_blocks=pool,
+                           prefix_cache=prefix, **COMMON)
+    assert re.ragged
+    se = SlotDecodeEngine(api, params, n_slots=n_slots, **COMMON)
+    assert re.max_blocks == max_blocks
+    pending = list(zip(prompts, max_new))
+    step = 0
+    while pending or re.scheduler.has_work():
+        if pending and step % arrival_every == 0:
+            p, m = pending.pop(0)
+            re.submit(p, m)
+            se.submit(p, m)
+        re.step()
+        step += 1
+        assert step < 2000, "ragged engine did not drain"
+    done_r = {r.request_id: r.generated for r in re.run_until_drained()}
+    done_s = {r.request_id: r.generated for r in se.run_until_drained()}
+    assert len(done_r) == n_requests
+    assert done_r == done_s
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n_requests=st.integers(1, 6),
+    n_slots=st.integers(1, 3),
+    chunk_tokens=st.sampled_from([1, 3, 8]),
+    token_budget=st.sampled_from([0, 5, 16]),
+    tight_pool=st.booleans(),
+    prefix=st.booleans(),
+    arrival_every=st.integers(1, 3),
+)
+def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
+                                             n_slots, chunk_tokens,
+                                             token_budget, tight_pool,
+                                             prefix, arrival_every):
+    """Differential fuzz: random arrival times / prompt lengths / budgets /
+    preemption pressure driven through the ragged-paged engine vs the
+    dense-slot oracle, asserting token identity end-to-end."""
+    _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
+                        token_budget, tight_pool, prefix, arrival_every)
+
+
+@pytest.mark.parametrize("case", [
+    # seed, n_req, slots, chunk, budget, tight, prefix, arrival
+    (3, 4, 2, 3, 5, True, False, 2),       # tight pool + tiny budget
+    (7, 5, 3, 8, 0, False, True, 1),       # prefix sharing, burst arrival
+    (11, 3, 1, 1, 0, True, True, 3),       # serial lane, 1-token chunks
+])
+def test_differential_pinned_cases_token_identity(model, case):
+    """The fuzz harness's named corners, runnable without hypothesis (the
+    container lacks the dev extra; CI runs the full randomized sweep)."""
+    _drive_differential(model, *case)
+
+
+def _check_scheduler_flat_invariants(seed, n_lanes, token_budget,
+                                     chunk_tokens, num_blocks):
+    from repro.serving import KVCacheManager, Request, Scheduler, \
+        SchedulerConfig
+    bs = 2
+    rng = np.random.default_rng(seed)
+    kv = KVCacheManager(num_blocks, bs, max_blocks_per_seq=8)
+    sched = Scheduler(SchedulerConfig(n_lanes=n_lanes,
+                                      token_budget=token_budget,
+                                      chunk_tokens=chunk_tokens,
+                                      fill_to_bucket=True), kv)
+    budget = sched._budget()
+    rid = 0
+    for _ in range(30):
+        if rng.random() < 0.5 and rid < 8:
+            plen = int(rng.integers(1, 13))
+            if -(-(plen + 2) // bs) <= 8:      # serveable under the ceiling
+                sched.add(Request(rid, rng.integers(
+                    0, 100, plen).astype(np.int32), 2))
+                rid += 1
+        if not sched.has_work():
+            continue
+        try:
+            d = sched.schedule()
+        except RuntimeError:
+            break                              # pool too small for 1 seq
+        total = sum(d.num_scheduled.values())
+        assert total <= budget                 # budget invariant
+        batch = RaggedBatch.build(d, kv, n_lanes, bs, cap=budget)
+        assert batch.total_tokens == total
+        assert batch.padded_tokens >= max(total, 1)
+        covered = set()
+        for r in d.scheduled:
+            n = d.num_scheduled[r.request_id]
+            assert n >= 1
+            assert r.cursor + n <= len(r.feed)     # never past the feed
+            assert kv.n_tokens(r.request_id) == r.cursor + n
+            off = batch.q_starts[r.request_id]
+            seg = range(off, off + n)
+            assert not covered & set(seg)          # disjoint segments
+            covered |= set(seg)
+            table = kv.block_table(r.request_id)
+            for i, t in enumerate(seg):
+                p = r.cursor + i
+                assert batch.token_pos[t] == p
+                assert batch.token_lane[t] == r.lane
+                assert batch.slot_mapping[t] == \
+                    table[p // bs] * bs + p % bs
+        assert len(covered) == total
+        # the engine's role: consume the scheduled tokens
+        for r in list(d.scheduled):
+            n = d.num_scheduled[r.request_id]
+            if r.cursor + n == len(r.feed):
+                r.generated.append(int(rng.integers(0, 100)))
+                r.feed.append(r.generated[-1])
+            r.cursor += n
+            if len(r.generated) >= r.max_new_tokens:
+                sched.finish(r)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n_lanes=st.integers(1, 4),
+    token_budget=st.sampled_from([0, 3, 7, 16]),
+    chunk_tokens=st.sampled_from([1, 2, 5, 16]),
+    num_blocks=st.integers(4, 24),
+)
+def test_fuzz_scheduler_flat_batch_invariants(seed, n_lanes, token_budget,
+                                              chunk_tokens, num_blocks):
+    """Host-only fuzz (no model): every schedule() under random load keeps
+    the flat-batch invariants — budget respected, no lane past its feed,
+    KV slots granted for exactly the scheduled tokens, and the RaggedBatch
+    segments contiguous, disjoint, and consistent with the block tables."""
+    _check_scheduler_flat_invariants(seed, n_lanes, token_budget,
+                                     chunk_tokens, num_blocks)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_scheduler_flat_batch_invariants_pinned(seed):
+    """No-hypothesis slice of the scheduler fuzz (CI runs the full sweep)."""
+    _check_scheduler_flat_invariants(seed, n_lanes=1 + seed % 4,
+                                     token_budget=(0, 3, 7, 16)[seed % 4],
+                                     chunk_tokens=(1, 2, 5, 16)[seed % 4],
+                                     num_blocks=5 + 3 * seed)

@@ -218,3 +218,99 @@ def test_admission_shares_cached_prefix():
     assert d.prefix_cached_tokens == 5             # 6 aligned, capped at 5
     assert r1.cursor == 5
     assert d.num_scheduled[1] == 1                 # only the last token
+
+
+# ---------------------------------------------------------------------------
+# ragged flat-token scheduling (fill_to_bucket) invariants
+# ---------------------------------------------------------------------------
+def test_budget_invariant_holds_every_step():
+    """sum(num_scheduled) <= token_budget and no lane scheduled past its
+    prompt, across a full mixed drain with bucket fill on."""
+    sched, kv = make(n_lanes=3, num_blocks=65, block_size=2, max_blocks=16,
+                     token_budget=7)
+    sched.cfg.chunk_tokens = 4
+    sched.cfg.fill_to_bucket = True
+    for i in range(5):
+        sched.add(req(i, plen=3 + 5 * (i % 3), max_new=3))
+    for _ in range(100):
+        if not sched.has_work():
+            break
+        d = sched.schedule()
+        assert sum(d.num_scheduled.values()) <= 7
+        for r in d.scheduled:
+            n = d.num_scheduled[r.request_id]
+            assert 1 <= n
+            assert r.cursor + n <= len(r.feed)
+            assert kv.n_tokens(r.request_id) == r.cursor + n
+        for r in d.scheduled:                  # chunk-aware engine stand-in
+            n = d.num_scheduled[r.request_id]
+            if r.cursor + n == len(r.feed):
+                r.generated.append(0)
+                r.feed.append(0)
+            r.cursor += n
+        for r in list(sched.running):
+            if len(r.generated) >= r.max_new_tokens:
+                sched.finish(r)
+    assert not sched.has_work()
+
+
+def test_one_decode_plus_prefill_fills_exactly_256_flat_slots():
+    """The padding-waste regression: a 1-token decode sharing a step with
+    a 255-token prefill chunk must produce a flat batch of exactly 256
+    slots — zero padding, where the rectangular layout would have padded
+    the decode lane to 256 (2 * 256 = 512 slots, 50% waste floor)."""
+    from repro.serving import RaggedBatch
+    kv = KVCacheManager(600, 2, max_blocks_per_seq=300)
+    sched = Scheduler(SchedulerConfig(n_lanes=2, token_budget=256,
+                                      chunk_tokens=255,
+                                      fill_to_bucket=True), kv)
+    r0 = req(0, plen=1, max_new=4)            # 1-token prompt: decode lane
+    sched.add(r0)
+    d = sched.schedule()
+    advance(sched, d)                          # r0 emitted: now decoding
+    sched.add(req(1, plen=400, max_new=1))     # long prefill
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 1             # the decode
+    assert d.num_scheduled[1] == 255           # the chunk
+    batch = RaggedBatch.build(d, kv, 2, 2, cap=256)
+    assert batch.total_tokens == 256
+    assert batch.padded_tokens == 256          # exactly, no pow2 blow-up
+    assert batch.padding_efficiency == 1.0
+
+
+def test_bucket_fill_extends_chunk_to_pow2_boundary():
+    """When a step's total lands between buckets, prefill chunks are
+    extended so the padding slots carry real prompt tokens instead."""
+    sched, kv = make(n_lanes=2, num_blocks=129, block_size=2,
+                     max_blocks=64, token_budget=64)
+    sched.cfg.chunk_tokens = 10
+    sched.cfg.fill_to_bucket = True
+    sched.add(req(0, plen=1, max_new=4))
+    d = sched.schedule()
+    advance(sched, d)                          # lane 0 now decodes
+    sched.add(req(1, plen=100, max_new=1))
+    d = sched.schedule()
+    # decode(1) + chunk(10) = 11 -> bucket 16: the chunk grows to 15
+    assert d.num_scheduled[0] == 1
+    assert d.num_scheduled[1] == 15
+    assert sum(d.num_scheduled.values()) == 16
+    assert kv.n_tokens(1) == 15                # fills got KV slots too
+
+
+def test_bucket_fill_never_exceeds_feed_or_budget():
+    sched, kv = make(n_lanes=2, num_blocks=65, block_size=2, max_blocks=16,
+                     token_budget=16)
+    sched.cfg.chunk_tokens = 2
+    sched.cfg.fill_to_bucket = True
+    sched.add(req(0, plen=1, max_new=2))
+    d = sched.schedule()
+    advance(sched, d)                          # lane 0 now decodes
+    sched.add(req(1, plen=4, max_new=1))
+    d = sched.schedule()
+    # decode(1) + chunk(2) = 3 -> bucket 4: ONE fill token rides; the
+    # chunk never grows past the remaining feed
+    assert d.num_scheduled[0] == 1
+    assert d.num_scheduled[1] == 3
+    r1 = next(r for r in d.scheduled if r.request_id == 1)
+    assert r1.cursor + d.num_scheduled[1] <= len(r1.feed)
+    assert sum(d.num_scheduled.values()) <= 16     # budget still binds
