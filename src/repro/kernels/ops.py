@@ -163,6 +163,47 @@ def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
                                                  window=window)
 
 
+def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, block_tables: jax.Array,
+                                 tile_meta: jax.Array, row_tile: jax.Array,
+                                 *, tile: int, window: int = 0,
+                                 use_kernel: Optional[bool] = None,
+                                 interpret: Optional[bool] = None
+                                 ) -> jax.Array:
+    """Segment-tiled flat-stream paged attention read: the same q (T, H, D)
+    stream as :func:`paged_attention_ragged`, attended through the tile
+    metadata built by ``serving.batch.build_tile_map`` — ``block_tables``
+    (n_lanes, max_blocks) per-lane rows, ``tile_meta`` (5, n_tiles) int32
+    (window / row span / position / lane per tile; rows = ``ref.TILE_*``),
+    ``row_tile`` (T,) each flat row's owning tile.  Every lane's KV blocks
+    are read once per q-tile (kernel) / once per lane span (reference)
+    instead of once per token.
+
+    Backend dispatch mirrors :func:`paged_attention`: Pallas kernel on TPU,
+    pure-JAX tiled reference (per-lane span gather + masked softmax) on
+    CPU.
+    """
+    from repro.kernels import paged_attention as _pa
+    from repro.kernels import ref as _ref
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        T, H, D = q.shape
+        Hkv = k_pool.shape[2]
+        qg = q.reshape(T, Hkv, H // Hkv, D)
+        out = _pa.paged_attention_ragged_tiled(qg, k_pool, v_pool,
+                                               block_tables, tile_meta,
+                                               row_tile, tile=tile,
+                                               window=window,
+                                               interpret=interpret)
+        return out.reshape(T, H, D)
+    return _ref.paged_attention_ragged_tiled_reference(
+        q, k_pool, v_pool, block_tables, tile_meta, row_tile, tile=tile,
+        window=window)
+
+
 # ---------------------------------------------------------------------------
 def ssd_scan_heads(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                    Cm: jax.Array, *, chunk: int = 128,

@@ -40,6 +40,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ref import (TILE_HI, TILE_LANE, TILE_LO, TILE_POS0,
+                               TILE_WINDOW)
+
 NEG_INF = -1e30
 
 
@@ -250,6 +253,139 @@ def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
         interpret=interpret,
     )(token_tables.astype(jnp.int32), token_pos.astype(jnp.int32),
       q, k_pool, v_pool)
+
+
+def _tiled_ragged_attn_kernel(meta_ref, tables_ref, q_ref, k_ref, v_ref,
+                              o_ref, m_scr, l_scr, acc_scr, *,
+                              block_size: int, tile: int, window: int,
+                              scale: float, group: int):
+    t = pl.program_id(0)          # tile = one (q-window, segment) pair
+    j = pl.program_id(2)          # logical block index within the tile's lane
+    nblk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    lo = meta_ref[TILE_LO, t]     # the tile's flat-row span [lo, hi)
+    hi = meta_ref[TILE_HI, t]
+    pos0 = meta_ref[TILE_POS0, t]          # sequence position of row lo
+    row0 = meta_ref[TILE_WINDOW, t] * tile  # flat row of the window's row 0
+    maxpos = pos0 + hi - 1 - lo            # deepest causal bound in the tile
+
+    @pl.when((lo < hi) & (j * block_size <= maxpos))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (tile*G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
+        v = v_ref[0, :, 0]                               # (bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (tile*G, bs)
+        tok = row0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        qpos = pos0 + tok - lo
+        kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 1)
+        # in-tile causal mask + window-rows outside this tile's segment
+        mask = (tok >= lo) & (tok < hi) & (kpos <= qpos)
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (tile*G, D)
+        m_scr[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "window", "interpret"))
+def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, block_tables: jax.Array,
+                                 tile_meta: jax.Array, row_tile: jax.Array,
+                                 *, tile: int, window: int = 0,
+                                 interpret: bool = False) -> jax.Array:
+    """Segment-tiled flat-stream paged attention: q (T, Hkv, G, D), the
+    same mixed 1-D token batch as :func:`paged_attention_ragged`, but tiled
+    so each lane's KV blocks are DMA'd once per *q-tile* instead of once
+    per token.
+
+    The stream is covered by fixed ``tile``-row q windows; ``tile_meta``
+    (5, n_tiles) int32 (rows = ``ref.TILE_*``; built by
+    ``serving.batch.build_tile_map``) names, per tile, the window it loads,
+    its flat-row span ``[lo, hi)`` inside one segment, the sequence
+    position of row ``lo``, and the owning lane whose ``block_tables`` row
+    the kv index maps sweep.  The grid is (tile, kv_head, block): one
+    (tile*G, D) query slab rides per tile — ``tile`` times fewer kv DMAs
+    than the per-token grid and a ``tile``-times taller MXU tile at small
+    GQA group sizes.  Straddled windows are split into one tile per
+    segment; each tile masks the window rows outside its own span, and the
+    per-row outputs are gathered back through ``row_tile`` (T,).  Inert
+    capacity-padding tiles (lo == hi) skip all compute; stream-padding
+    rows yield finite garbage the caller ignores.  Returns (T, Hkv, G, D).
+    """
+    T, Hkv, G, D = q.shape
+    num_blocks, bs, Hkv_p, _ = k_pool.shape
+    assert Hkv_p == Hkv, (Hkv_p, Hkv)
+    max_blocks = block_tables.shape[1]
+    n_tiles = tile_meta.shape[1]
+    scale = 1.0 / (D ** 0.5)
+
+    n_windows = -(-T // tile)
+    pad = n_windows * tile - T
+    qw = jnp.pad(q, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    qw = qw.reshape(n_windows, tile, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+    qw = qw.reshape(n_windows, Hkv, tile * G, D)
+
+    kernel = functools.partial(_tiled_ragged_attn_kernel, block_size=bs,
+                               tile=tile, window=window, scale=scale,
+                               group=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, tile * G, D),
+                         lambda t, h, j, meta, tables:
+                         (meta[TILE_WINDOW, t], h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda t, h, j, meta, tables:
+                         (tables[meta[TILE_LANE, t], j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda t, h, j, meta, tables:
+                         (tables[meta[TILE_LANE, t], j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile * G, D),
+                               lambda t, h, j, meta, tables: (t, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tile * G, 1), jnp.float32),   # m
+            pltpu.VMEM((tile * G, 1), jnp.float32),   # l
+            pltpu.VMEM((tile * G, D), jnp.float32),   # acc
+        ],
+    )
+    out_tiles = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, Hkv, tile * G, D), q.dtype),
+        interpret=interpret,
+    )(tile_meta.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qw, k_pool, v_pool)
+
+    # gather every real row's (Hkv, G, D) slab back from its owning tile
+    t_idx = row_tile[:T].astype(jnp.int32)
+    off = jnp.clip(jnp.arange(T) - tile_meta[TILE_WINDOW, t_idx] * tile,
+                   0, tile - 1)
+    rows = out_tiles.reshape(n_tiles, Hkv, tile, G, D)
+    return rows[t_idx, :, off]                        # (T, Hkv, G, D)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))

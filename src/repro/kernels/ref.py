@@ -107,8 +107,9 @@ def paged_attention_ragged_reference(q: jax.Array, k_pool: jax.Array,
     _, bs, Hkv, _ = k_pool.shape
     max_blocks = token_tables.shape[1]
     G = H // Hkv
-    k = k_pool[token_tables].reshape(T, max_blocks * bs, Hkv, D)
-    v = v_pool[token_tables].reshape(T, max_blocks * bs, Hkv, D)
+    # one span gather PER TOKEN — the traffic the tiled oracle below kills
+    k = _gather_block_spans(k_pool, token_tables)
+    v = _gather_block_spans(v_pool, token_tables)
     qg = q.reshape(T, Hkv, G, D)
     s = jnp.einsum("tkgd,tskd->tkgs", qg, k).astype(jnp.float32)
     s = s / (D ** 0.5)
@@ -120,6 +121,93 @@ def paged_attention_ragged_reference(q: jax.Array, k_pool: jax.Array,
     w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     out = jnp.einsum("tkgs,tskd->tkgd", w, v)
     return out.reshape(T, H, D)
+
+
+# ---------------------------------------------------------------------------
+# segment-tiled ragged oracle — KV gathered once per lane *span*, not once
+# per token.
+#
+# The per-token ragged reference above materializes token_tables-many
+# (max_blocks * bs) KV spans: a 256-token prefill re-gathers its lane's
+# blocks 256 times, which made all-prefill workloads ~30% slower than the
+# rectangular path on CPU.  The tiled form reads the pool once per *lane*
+# (k_pool[tables], each block touched once per step) and then computes
+# attention per q-row tile, so gather traffic scales with tiles + lanes
+# instead of tokens.  Tile metadata contract (shared with the Pallas
+# kernel and serving.batch.TileMap): ``tile_meta`` is (5, n_tiles) int32
+# with rows indexed by the TILE_* constants below; ``row_tile`` (T,) maps
+# every flat row to its owning tile.
+# ---------------------------------------------------------------------------
+TILE_WINDOW, TILE_LO, TILE_HI, TILE_POS0, TILE_LANE = range(5)
+
+# pool-read instrumentation: every eager call of the span gather adds the
+# number of (row, block) pairs it materializes.  Tests assert the tiled
+# reference's reads scale with lanes/tiles while the per-token form scales
+# with tokens; under jit the count reflects one trace, so instrumented
+# tests call the references eagerly.
+pool_gather_stats = {"blocks": 0}
+
+
+def _gather_block_spans(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """The one place reference oracles read the KV pool: row r of the
+    result is the gathered span ``pool[tables[r]]`` flattened to
+    (rows, max_blocks * bs, Hkv, D)."""
+    rows, max_blocks = tables.shape
+    pool_gather_stats["blocks"] += rows * max_blocks
+    _, bs, Hkv, D = pool.shape
+    return pool[tables].reshape(rows, max_blocks * bs, Hkv, D)
+
+
+def paged_attention_ragged_tiled_reference(
+        q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+        tables: jax.Array, tile_meta: jax.Array, row_tile: jax.Array, *,
+        tile: int, window: int = 0) -> jax.Array:
+    """q: (T, H, D) — the same flat stream as
+    :func:`paged_attention_ragged_reference`, but attended through the
+    segment-tiled metadata: ``tables`` (n_lanes, max_blocks) per-lane block
+    rows, ``tile_meta`` (5, n_tiles) int32 (TILE_* rows), ``row_tile`` (T,)
+    the owning tile of every flat row.  Returns (T, H, D), bit-identical
+    to the per-token oracle on every real row.
+
+    Each lane's KV span is gathered from the pool exactly once; tile t
+    then attends its q rows ``[lo, hi)`` (a slab of window
+    ``tile_meta[TILE_WINDOW, t]``) against its lane's span with the causal
+    bound ``pos0 + (row - lo)``.  Rows of a window outside the tile's
+    segment are masked out; inert capacity-padding tiles (lo == hi) and
+    stream-padding rows produce finite garbage the caller ignores.
+    """
+    T, H, D = q.shape
+    _, bs, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    S = tables.shape[1] * bs
+    n_windows = -(-T // tile)
+    pad = n_windows * tile - T
+    qw = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+    qw = qw.reshape(n_windows, tile, Hkv, G, D)
+    k_lanes = _gather_block_spans(k_pool, tables)      # (n_lanes, S, Hkv, D)
+    v_lanes = _gather_block_spans(v_pool, tables)
+    win, lo, hi = tile_meta[TILE_WINDOW], tile_meta[TILE_LO], \
+        tile_meta[TILE_HI]
+    pos0, lane = tile_meta[TILE_POS0], tile_meta[TILE_LANE]
+    qt = qw[win]                                   # (n_tiles, tile, Hkv, G, D)
+    kt = k_lanes[lane]                             # (n_tiles, S, Hkv, D)
+    vt = v_lanes[lane]
+    s = jnp.einsum("ntkgd,nskd->ntkgs", qt, kt).astype(jnp.float32)
+    s = s / (D ** 0.5)
+    rows = win[:, None] * tile + jnp.arange(tile)[None, :]   # (n_tiles, tile)
+    qpos = pos0[:, None] + rows - lo[:, None]
+    rowvalid = (rows >= lo[:, None]) & (rows < hi[:, None])
+    kpos = jnp.arange(S)[None, None, :]
+    valid = rowvalid[:, :, None] & (kpos <= qpos[:, :, None])
+    if window:
+        valid &= (qpos[:, :, None] - kpos) < window
+    s = jnp.where(valid[:, :, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    ot = jnp.einsum("ntkgs,nskd->ntkgd", w, vt)    # (n_tiles, tile, Hkv, G, D)
+    r = jnp.arange(T)
+    t_idx = row_tile[:T]
+    off = jnp.clip(r - win[t_idx] * tile, 0, tile - 1)
+    return ot[t_idx, off].reshape(T, H, D)
 
 
 def paged_attention_reference(q: jax.Array, k_pool: jax.Array,

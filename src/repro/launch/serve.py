@@ -45,6 +45,13 @@ def main() -> None:
                     help="flat-token serving batch (one 1-D stream of all "
                          "scheduled tokens per step); --no-ragged pins the "
                          "rectangular (lanes, chunk_width) layout")
+    ap.add_argument("--tiled", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="segment-tiled attention grid over the flat "
+                         "stream (KV read once per q-tile); --no-tiled "
+                         "pins the per-token (token, head, block) grid")
+    ap.add_argument("--tile", type=int, default=16,
+                    help="q rows per segment tile window (pow2)")
     ap.add_argument("--engine", choices=["auto", "paged", "slot"],
                     default="auto",
                     help="paged block-pool engine vs dense-slot reference")
@@ -66,7 +73,10 @@ def main() -> None:
               "token_budget": args.token_budget,
               "chunk_tokens": args.chunk_tokens,
               "prefix_cache": args.prefix_cache,
-              "ragged": args.ragged and api.supports_ragged}
+              "ragged": args.ragged and api.supports_ragged,
+              "tiled": (args.tiled and args.ragged
+                        and api.supports_ragged),
+              "tile": args.tile}
     eng = DecodeEngine(api, params, paged=paged, n_slots=args.slots,
                        cache_len=args.cache_len, window=window, **kw)
     rng = np.random.default_rng(0)

@@ -43,7 +43,11 @@ class ModelAPI:
     paged_decode_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
     # ``ragged_step`` consumes one flat (T,) stream of all scheduled tokens
     # (mixed prefill chunks + decodes, per-token lane/pos/slot metadata in
-    # the cache) — the serving layout that kills the rectangular padding tax
+    # the cache) — the serving layout that kills the rectangular padding
+    # tax.  When the engine also ships ``tile_meta``/``row_tile`` (a
+    # serving.batch.TileMap, the default) the attention read runs the
+    # segment-tiled grid — KV blocks swept once per q-tile, not per token;
+    # the static ``tile`` width rides through **kw into the jitted step.
     ragged_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
 
     @property

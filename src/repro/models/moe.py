@@ -3,7 +3,10 @@
 Design (see DESIGN.md §5):
   * tokens are grouped by batch row (G = B groups of S tokens); each group
     computes its own expert capacity ``C = ceil(S * k / E * capacity_factor)``
-    so the dispatch/combine einsums have static shapes;
+    so the dispatch/combine einsums have static shapes; the ragged serving
+    step feeds the whole flat token stream as one (1, T) group, so expert
+    load balances across the entire mixed prefill+decode batch rather than
+    per lane;
   * everything is expressed as einsums over one-hot dispatch tensors, so
     expert parallelism falls out of pjit sharding constraints
     (experts -> "model" axis, groups -> "data" axis) and the token

@@ -150,8 +150,9 @@ def _apply_block_paged(bp: Dict, x: jax.Array, cache_l: Dict,
 
 
 def _apply_block_ragged(bp: Dict, x: jax.Array, cache_l: Dict,
-                        token_tables: jax.Array, token_pos: jax.Array,
-                        slot_mapping: jax.Array, cfg: ArchConfig, *,
+                        token_tables: Optional[jax.Array],
+                        token_pos: jax.Array, slot_mapping: jax.Array,
+                        tile_spec, cfg: ArchConfig, *,
                         window: int) -> Tuple[jax.Array, Dict]:
     """Process one flat stream of T tokens (mixed prefill chunks and
     decodes from many lanes, no per-lane rectangle) through one block
@@ -161,8 +162,14 @@ def _apply_block_ragged(bp: Dict, x: jax.Array, cache_l: Dict,
     anchored per token by ``token_pos`` (T,).  Each token's K/V is
     scattered straight into its physical pool slot ``slot_mapping[t]``
     (= block_id * block_size + offset); padding tokens carry slot 0 — the
-    reserved null block, a legal never-trusted target.  The attention read
-    gathers per token through ``token_tables`` (T, max_blocks).
+    reserved null block, a legal never-trusted target.
+
+    The attention read has two grids: with ``tile_spec`` — a (block_tables,
+    tile_meta, row_tile, tile) tuple from the engine's
+    :class:`~repro.serving.batch.TileMap` — q rows are tiled by segment and
+    each lane's KV blocks are read once per tile; with ``tile_spec=None``
+    the per-token baseline gathers through ``token_tables`` (T, max_blocks)
+    once per token.
     """
     from repro.kernels import ops as kernel_ops
     bs = cache_l["k"].shape[1]
@@ -172,9 +179,15 @@ def _apply_block_ragged(bp: Dict, x: jax.Array, cache_l: Dict,
     off = slot_mapping % bs
     new_k = cache_l["k"].at[blk, off].set(k[0].astype(cache_l["k"].dtype))
     new_v = cache_l["v"].at[blk, off].set(v[0].astype(cache_l["v"].dtype))
-    attn = kernel_ops.paged_attention_ragged(q[0], new_k, new_v,
-                                             token_tables, token_pos,
-                                             window=window)
+    if tile_spec is not None:
+        tables, tile_meta, row_tile, tile = tile_spec
+        attn = kernel_ops.paged_attention_ragged_tiled(
+            q[0], new_k, new_v, tables, tile_meta, row_tile, tile=tile,
+            window=window)
+    else:
+        attn = kernel_ops.paged_attention_ragged(q[0], new_k, new_v,
+                                                 token_tables, token_pos,
+                                                 window=window)
     attn = layers.project_out(bp["attn"], attn[None], cfg)
 
     if cfg.parallel_block:
@@ -428,7 +441,7 @@ def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
 
 
 def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
-                cfg: ArchConfig, *, window: int = 0,
+                cfg: ArchConfig, *, window: int = 0, tile: int = 16,
                 compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
     """tokens (T,) -> (logits (T, V), new cache) — the ragged flat-token
     serving step.  T is one pow2-bucketed stream of *all* scheduled tokens
@@ -449,12 +462,24 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
         padding tokens);
       * ``block_tables`` (n_lanes, max_blocks) — per-lane physical block
         rows.
+
+    When the engine also ships segment-tile metadata (the default):
+      * ``tile_meta`` (5, n_tiles) int32 + ``row_tile`` (T,) — the
+        :class:`~repro.serving.batch.TileMap` arrays (``tile`` static rows
+        per q window) — the attention read runs the segment-tiled grid,
+        sweeping each lane's KV blocks once per q-tile instead of once per
+        token.  Without them the per-token grid is the measured baseline.
     """
     token_pos = cache["token_pos"]
     token_lane = cache["token_lane"]
     slot_mapping = cache["slot_mapping"]
     tables = cache["block_tables"]
-    token_tables = tables[token_lane]                     # (T, max_blocks)
+    if "tile_meta" in cache:
+        tile_spec = (tables, cache["tile_meta"], cache["row_tile"], tile)
+        token_tables = None            # tiled read never gathers per token
+    else:
+        tile_spec = None
+        token_tables = tables[token_lane]                 # (T, max_blocks)
     x = layers.embed_tokens(params["embed"], tokens[None], compute_dtype)
     if getattr(cfg, "scale_embeddings", False):
         x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
@@ -463,13 +488,15 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
     for i, bp in enumerate(params.get("head_blocks", [])):
         cl = {"k": cache["head"]["k"][i], "v": cache["head"]["v"][i]}
         x, ncl = _apply_block_ragged(bp, x, cl, token_tables, token_pos,
-                                     slot_mapping, cfg, window=window)
+                                     slot_mapping, tile_spec, cfg,
+                                     window=window)
         new_head.append(ncl)
 
     def layer_step(x, inp):
         bp, cl = inp
         x, ncl = _apply_block_ragged(bp, x, cl, token_tables, token_pos,
-                                     slot_mapping, cfg, window=window)
+                                     slot_mapping, tile_spec, cfg,
+                                     window=window)
         return x, ncl
 
     x, new_scan = jax.lax.scan(layer_step, x,
@@ -485,6 +512,9 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
         "token_pos": token_pos,
         "slot_mapping": slot_mapping,
     }
+    if "tile_meta" in cache:
+        new_cache["tile_meta"] = cache["tile_meta"]
+        new_cache["row_tile"] = cache["row_tile"]
     if new_head:
         new_cache["head"] = {
             "k": jnp.stack([c["k"] for c in new_head]),

@@ -96,12 +96,14 @@ def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
 
 
 def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
-                cfg: ArchConfig, *, window: int = 0,
+                cfg: ArchConfig, *, window: int = 0, tile: int = 16,
                 compute_dtype=jnp.bfloat16):
     # the flat-token serving step sees text tokens only (patches entered
-    # during prefill); the LM backbone consumes the ragged stream directly
+    # during prefill); the LM backbone consumes the ragged stream directly,
+    # segment-tiled whenever the engine ships tile_meta/row_tile in the
+    # cache (``tile`` = static q-window rows of that TileMap)
     return transformer.ragged_step(params["lm"], cache, tokens, cfg,
-                                   window=window,
+                                   window=window, tile=tile,
                                    compute_dtype=compute_dtype)
 
 

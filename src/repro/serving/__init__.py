@@ -1,5 +1,5 @@
 from repro.serving.batch import (BatchEngine, BatchStats,  # noqa: F401
-                                 RaggedBatch)
+                                 RaggedBatch, TileMap, build_tile_map)
 from repro.serving.blocks import (BlockAllocator, KVCacheManager,  # noqa: F401
                                   NULL_BLOCK)
 from repro.serving.engine import (DecodeEngine, PagedDecodeEngine,  # noqa: F401

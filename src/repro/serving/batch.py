@@ -1,6 +1,6 @@
 """Serving batch containers.
 
-Two kinds live here:
+Three kinds live here:
 
   * :class:`RaggedBatch` — the flat-token serving batch: one 1-D stream of
     *all* tokens an engine step schedules (mixed multi-token prefill chunks
@@ -9,6 +9,12 @@ Two kinds live here:
     Replaces the rectangular ``(n_lanes, chunk_width)`` layout in which one
     lane prefilling a 256-token chunk forced every decoding lane to pad 1
     real token out to 256.  Bucketing is pow2 on *total tokens*.
+  * :class:`TileMap` — the segment-tiled view of a RaggedBatch consumed by
+    the tiled paged-attention path: the flat stream is cut into fixed
+    pow2-sized q-row windows, each window is split at the segment
+    boundaries crossing it, and every resulting (window, segment)
+    intersection becomes one *tile* that sweeps exactly one lane's KV
+    blocks — KV is read once per tile instead of once per token.
   * :class:`BatchEngine` — stateless batched inference (BraggNN /
     CookieNetAE at the edge): dynamic micro-batching with a latency budget,
     padded to fixed compiled batch sizes.
@@ -115,6 +121,101 @@ class RaggedBatch:
                    token_pos=token_pos, slot_mapping=slot_mapping,
                    last_row=last_row, q_starts=q_starts, seg_lens=seg_lens,
                    total_tokens=total, padded_tokens=padded)
+
+    def tiles(self, n_lanes: int, tile: int) -> "TileMap":
+        """The segment-tiled view of this batch (see :class:`TileMap`).
+        Segments are recovered from ``q_starts``/``seg_lens`` in stream
+        order; lane and first position come from the per-token arrays."""
+        segs = sorted((off, self.seg_lens[rid]) for rid, off
+                      in self.q_starts.items())
+        seg_lanes = [int(self.token_lane[off]) for off, _ in segs]
+        seg_pos0 = [int(self.token_pos[off]) for off, _ in segs]
+        return build_tile_map([s[0] for s in segs], [s[1] for s in segs],
+                              seg_lanes, seg_pos0, self.padded_tokens,
+                              n_lanes, tile)
+
+
+# rows of TileMap.meta — one (5, n_tiles) int32 array so the jitted step
+# carries a single scalar-prefetch operand per tile map.  The kernel layer
+# owns the contract; re-exported here for the serving-side builders/tests.
+from repro.kernels.ref import (TILE_HI, TILE_LANE, TILE_LO,  # noqa: E402,F401
+                               TILE_POS0, TILE_WINDOW)
+
+
+@dataclasses.dataclass
+class TileMap:
+    """Segment-tiled decomposition of one flat token stream.
+
+    The padded stream is covered by ``ceil(padded_tokens / tile)`` fixed
+    q-row *windows* of ``tile`` rows each; a window crossing one or more
+    segment boundaries is split at them, and every (window, segment)
+    intersection is a *tile*.  A tile therefore always lies inside a single
+    window (its q rows are one contiguous slab of that window) AND inside a
+    single segment (all its rows share one lane / block table, so the
+    kernel DMAs that lane's KV blocks once for the whole tile).
+
+    ``meta`` is (5, capacity) int32, row ``r`` of tile ``t``:
+
+      * ``meta[TILE_WINDOW, t]`` — window index (q-row block the tile loads);
+      * ``meta[TILE_LO, t]``/``meta[TILE_HI, t]`` — the tile's flat-row span
+        ``[lo, hi)``; rows of the window outside it are masked in-kernel;
+      * ``meta[TILE_POS0, t]`` — absolute sequence position of row ``lo``
+        (row ``q`` sits at ``pos0 + q - lo``: the causal bound);
+      * ``meta[TILE_LANE, t]`` — owning lane (block-table row to sweep).
+
+    ``capacity`` is the *static* upper bound ``n_windows + n_lanes`` (each
+    of the <= n_lanes segments adds at most one window split), so the
+    jitted step retraces per pow2 token bucket only, never per tile count.
+    Tiles past ``n_tiles`` are inert: ``lo == hi`` skips all compute.
+    ``row_tile[q]`` maps every real flat row to its owning tile (padding
+    rows map to tile 0 — their output is garbage the engine never reads).
+    ``cu_seqlens`` (n_segs + 1,) are the segment boundaries in the flat
+    stream: segment s is rows ``[cu_seqlens[s], cu_seqlens[s+1])``.
+    """
+    meta: np.ndarray                   # (5, capacity) int32
+    row_tile: np.ndarray               # (padded_tokens,) int32
+    cu_seqlens: np.ndarray             # (n_segs + 1,) int32
+    n_tiles: int                       # real tiles (<= capacity)
+    tile: int                          # q-window row count (pow2)
+
+
+def build_tile_map(seg_offsets, seg_lens, seg_lanes, seg_pos0,
+                   padded_tokens: int, n_lanes: int, tile: int) -> TileMap:
+    """Cut back-to-back segments into (window, segment) tiles.
+
+    ``seg_offsets``/``seg_lens``/``seg_lanes``/``seg_pos0`` describe the
+    segments in stream order (offsets must be contiguous from 0 — the
+    scheduler packs them back to back); ``padded_tokens`` is the bucketed
+    flat length the windows must cover.
+    """
+    if tile < 1 or tile & (tile - 1):
+        raise ValueError(f"tile must be a positive power of two, got {tile}")
+    n_windows = -(-max(padded_tokens, 1) // tile)
+    capacity = n_windows + n_lanes
+    meta = np.zeros((5, capacity), np.int32)
+    row_tile = np.zeros((padded_tokens,), np.int32)
+    cu = [0]
+    t = 0
+    for off, n, lane, pos0 in zip(seg_offsets, seg_lens, seg_lanes,
+                                  seg_pos0):
+        if off != cu[-1]:
+            raise ValueError(
+                f"segments must be contiguous: expected offset {cu[-1]}, "
+                f"got {off}")
+        cu.append(off + n)
+        row = off
+        while row < off + n:
+            if t >= capacity:
+                raise ValueError(
+                    f"tile capacity {capacity} exceeded: more than "
+                    f"{n_lanes} segments for {n_windows} windows?")
+            w = row // tile
+            hi = min(off + n, (w + 1) * tile)
+            meta[:, t] = (w, row, hi, pos0 + (row - off), lane)
+            row_tile[row:hi] = t
+            row, t = hi, t + 1
+    return TileMap(meta=meta, row_tile=row_tile,
+                   cu_seqlens=np.asarray(cu, np.int32), n_tiles=t, tile=tile)
 
 
 @dataclasses.dataclass

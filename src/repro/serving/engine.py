@@ -67,6 +67,13 @@ class PagedDecodeEngine:
     layout, where one lane prefilling a wide chunk pads every decoding
     lane to the same width (``lanes * max(q_len)`` work) — kept as the PR 2
     baseline and for the padding-tax comparison in bench_serving.
+
+    Attention grid (``tiled``, default True under ``ragged``): the flat
+    stream is segment-tiled (``tile`` q rows per window, split at segment
+    boundaries — serving/batch.py::TileMap), so the paged-attention read
+    sweeps each lane's KV blocks once per q-tile instead of once per
+    token.  ``tiled=False`` pins the per-token ``(token, head, block)``
+    grid as the measured baseline.
     """
 
     def __init__(self, model_api, params: PyTree, *, n_slots: int,
@@ -74,6 +81,7 @@ class PagedDecodeEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  token_budget: int = 0, chunk_tokens: int = 16,
                  prefix_cache: bool = True, ragged: Optional[bool] = None,
+                 tiled: Optional[bool] = None, tile: int = 16,
                  cache_dtype=None, compute_dtype=None) -> None:
         if not getattr(model_api, "supports_paged", False):
             raise ValueError(
@@ -104,6 +112,18 @@ class PagedDecodeEngine:
                 f"{model_api.cfg.family} models have no ragged_step; "
                 "pass ragged=False for the rectangular paged path")
         self.ragged = ragged
+        # the segment-tiled attention grid is the ragged default; tiled=False
+        # pins the per-token (token, head, block) grid as the baseline
+        if tiled is None:
+            tiled = ragged
+        if tiled and not ragged:
+            raise ValueError("tiled=True requires the ragged flat-token "
+                             "layout (pass ragged=True)")
+        if tile < 1 or tile & (tile - 1):
+            raise ValueError(f"tile must be a positive power of two, "
+                             f"got {tile}")
+        self.tiled = tiled
+        self.tile = tile
         self.chunk_tokens = chunk_tokens
         self.max_blocks = -(-cache_len // block_size)
         if num_blocks is None:
@@ -128,6 +148,8 @@ class PagedDecodeEngine:
             # later one (a lingering key = one pointless retrace per bucket)
             self.cache.pop("pos", None)
         step_kw = {"window": window}
+        if self.ragged and self.tiled:
+            step_kw["tile"] = tile     # static TileMap q-window rows
         if compute_dtype is not None:
             step_kw["compute_dtype"] = compute_dtype
         # donate the cache: the KV pool is updated in place rather than
@@ -240,6 +262,13 @@ class PagedDecodeEngine:
         self.cache["token_lane"] = jnp.asarray(batch.token_lane)
         self.cache["token_pos"] = jnp.asarray(batch.token_pos)
         self.cache["slot_mapping"] = jnp.asarray(batch.slot_mapping)
+        if self.tiled:
+            # segment-tile the stream: tile capacity is a pure function of
+            # the pow2 bucket (windows + n_slots), so the jitted step still
+            # retraces per bucket only
+            tiles = batch.tiles(self.n_slots, self.tile)
+            self.cache["tile_meta"] = jnp.asarray(tiles.meta)
+            self.cache["row_tile"] = jnp.asarray(tiles.row_tile)
         logits, self.cache = self._step(self.params, self.cache,
                                         jnp.asarray(batch.tokens))
         self.scheduled_tokens += batch.total_tokens
@@ -316,6 +345,7 @@ class PagedDecodeEngine:
             "cow_copies": self.kv.cow_copies,
             "cache_evictions": self.kv.evictions,
             "ragged": int(self.ragged),
+            "tiled": int(self.tiled),
             "padding_efficiency": (self.scheduled_tokens
                                    / max(self.padded_tokens, 1)),
         }

@@ -88,7 +88,11 @@ class SchedulerConfig:
     # ragged flat-token mode: after the normal pass, extend prefill chunks
     # until the step's total token count reaches its pow2 bucket boundary
     # (capped at the budget) — the flat slots the bucket would otherwise
-    # waste on padding carry real prefill work instead
+    # waste on padding carry real prefill work instead.  The per-segment
+    # view of the resulting stream (cu_seqlens, per-segment lane/position,
+    # and the segment-tiled TileMap the tiled attention grid consumes) is
+    # derived from the decision by serving/batch.py — one segment per
+    # scheduled request, so a step never has more segments than lanes.
     fill_to_bucket: bool = False
 
 

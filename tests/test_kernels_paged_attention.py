@@ -6,11 +6,15 @@ import pytest
 
 from repro.kernels.paged_attention import (paged_attention,
                                            paged_attention_chunk,
-                                           paged_attention_ragged)
+                                           paged_attention_ragged,
+                                           paged_attention_ragged_tiled)
 from repro.kernels.ref import (paged_attention_chunk_reference,
                                paged_attention_ragged_reference,
-                               paged_attention_reference)
+                               paged_attention_ragged_tiled_reference,
+                               paged_attention_reference,
+                               pool_gather_stats)
 from repro.kernels import ops
+from repro.serving.batch import TILE_HI, TILE_LO, build_tile_map
 
 
 def _setup(key, B, Hkv, G, D, num_blocks, bs, max_blocks, ctx, dtype):
@@ -332,3 +336,239 @@ def test_ops_ragged_wrapper_dispatches_to_reference_on_cpu(key):
                                            jnp.asarray(tpos))
     assert out.shape == q.shape
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# segment-tiled generalization: (q_tile, kv_head, kv_block) grid
+# ---------------------------------------------------------------------------
+# (tile, segments, T_pad): each segment is (start_pos, n_tokens) for one
+# lane, packed back to back into a flat stream padded to T_pad.  The mixes
+# pin the geometry the tiled grid must survive: q windows straddling
+# segment boundaries (segment offsets not multiples of tile), segments
+# both smaller and larger than a tile, and start positions straddling KV
+# block edges (start % bs != 0 with bs = 4 below).
+TILED_MIXES = {
+    "straddling_boundaries": (4, [(3, 1), (0, 9), (7, 5), (14, 1)], 16),
+    "segments_smaller_than_tile": (16, [(0, 3), (1, 2), (4, 6)], 16),
+    "segments_larger_than_tile": (4, [(0, 17), (5, 9)], 32),
+    "all_decode": (8, [(2, 1), (5, 1), (9, 1), (0, 1)], 8),
+}
+
+
+def _tiled_setup(key, segments, Hkv, G, D, bs, max_blocks, tile, T_pad,
+                 dtype):
+    """Pools + per-lane tables + flat-token metadata + the TileMap."""
+    q, k_pool, v_pool, tables, token_tables, token_pos = _ragged_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, dtype)
+    T = q.shape[0]
+    if T_pad > T:            # bucket tail: lane-0/pos-0 padding rows
+        ks = jax.random.split(key, 2)
+        q = jnp.concatenate(
+            [q, jax.random.normal(ks[1], (T_pad - T,) + q.shape[1:], dtype)])
+        token_tables = np.concatenate(
+            [token_tables, np.zeros((T_pad - T, max_blocks), np.int32)])
+        token_pos = np.concatenate(
+            [token_pos, np.zeros((T_pad - T,), np.int32)])
+    offs, lens, lanes, pos0 = [], [], [], []
+    off = 0
+    for lane, (start, n) in enumerate(segments):
+        offs.append(off); lens.append(n); lanes.append(lane)
+        pos0.append(start)
+        off += n
+    tm = build_tile_map(offs, lens, lanes, pos0, T_pad, len(segments), tile)
+    return q, k_pool, v_pool, tables, token_tables, token_pos, tm, T
+
+
+@pytest.mark.parametrize("mix", sorted(TILED_MIXES))
+@pytest.mark.parametrize("G", [1, 4, 8])
+def test_tiled_reference_matches_per_token_reference(key, mix, G):
+    """The segment-tiled oracle must agree with the per-token flat oracle
+    on every real row: tiling is a scheduling change, not a math change."""
+    tile, segments, T_pad = TILED_MIXES[mix]
+    Hkv, D, bs, max_blocks = 2, 16, 4, 8
+    q, kp, vp, tables, ttab, tpos, tm, T = _tiled_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, tile, T_pad, jnp.float32)
+    per_tok = paged_attention_ragged_reference(
+        q, kp, vp, jnp.asarray(ttab), jnp.asarray(tpos))
+    tiled = paged_attention_ragged_tiled_reference(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile)
+    np.testing.assert_array_equal(np.asarray(tiled[:T]),
+                                  np.asarray(per_tok[:T]))
+    assert np.all(np.isfinite(np.asarray(tiled)))    # padding rows: finite
+
+
+@pytest.mark.parametrize("mix", sorted(TILED_MIXES))
+@pytest.mark.parametrize("G", [1, 4, 8])
+@pytest.mark.parametrize("window", [0, 5])
+def test_tiled_kernel_matches_tiled_reference(key, mix, G, window):
+    """Pallas segment-tiled kernel (interpret mode) vs the tiled oracle vs
+    the per-token oracle, across boundary-straddling tiles, GQA group
+    sizes, block-edge positions, and sliding windows."""
+    tile, segments, T_pad = TILED_MIXES[mix]
+    Hkv, D, bs, max_blocks = 2, 32, 4, 8
+    q, kp, vp, tables, ttab, tpos, tm, T = _tiled_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, tile, T_pad, jnp.float32)
+    ref_t = paged_attention_ragged_tiled_reference(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile, window=window)
+    per_tok = paged_attention_ragged_reference(
+        q, kp, vp, jnp.asarray(ttab), jnp.asarray(tpos), window=window)
+    H = Hkv * G
+    qg = q.reshape(T_pad, Hkv, G, D)
+    out = paged_attention_ragged_tiled(
+        qg, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile, window=window,
+        interpret=True).reshape(T_pad, H, D)
+    np.testing.assert_allclose(np.asarray(out[:T]), np.asarray(ref_t[:T]),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(out[:T]), np.asarray(per_tok[:T]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_tiled_kernel_padding_tiles_are_inert(key):
+    """Capacity-padding tiles (lo == hi) and stream-padding rows must not
+    change any real row, in kernel or reference — scribbling the null
+    block and growing the tile capacity is invisible."""
+    tile, segments, T_pad = TILED_MIXES["straddling_boundaries"]
+    Hkv, G, D, bs, max_blocks = 2, 2, 16, 4, 8
+    q, kp, vp, tables, ttab, tpos, tm, T = _tiled_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, tile, T_pad, jnp.float32)
+    qg = q.reshape(T_pad, Hkv, G, D)
+    out1 = paged_attention_ragged_tiled(
+        qg, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile, interpret=True)
+    # double the inert capacity + poison the null block
+    meta2 = np.concatenate([tm.meta, np.zeros_like(tm.meta)], axis=1)
+    out2 = paged_attention_ragged_tiled(
+        qg, kp.at[0].set(1e4), vp.at[0].set(-1e4), jnp.asarray(tables),
+        jnp.asarray(meta2), jnp.asarray(tm.row_tile), tile=tile,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1[:T]), np.asarray(out2[:T]))
+    assert np.all(np.isfinite(np.asarray(out2)))
+    r1 = paged_attention_ragged_tiled_reference(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile)
+    r2 = paged_attention_ragged_tiled_reference(
+        q, kp.at[0].set(1e4), vp.at[0].set(-1e4), jnp.asarray(tables),
+        jnp.asarray(meta2), jnp.asarray(tm.row_tile), tile=tile)
+    np.testing.assert_array_equal(np.asarray(r1[:T]), np.asarray(r2[:T]))
+
+
+def test_tiled_single_tile_equals_decode_kernel(key):
+    """Pure-decode tiles must reproduce the rectangular decode kernel row
+    for row (same online-softmax sweep per token)."""
+    tile, segments, T_pad = TILED_MIXES["all_decode"]
+    Hkv, G, D, bs, max_blocks = 2, 2, 32, 4, 8
+    q, kp, vp, tables, ttab, tpos, tm, T = _tiled_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, tile, T_pad, jnp.float32)
+    qg = q.reshape(T_pad, Hkv, G, D)
+    out = paged_attention_ragged_tiled(
+        qg, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile, interpret=True)
+    dec = paged_attention(qg[:T], kp, vp, jnp.asarray(ttab[:T]),
+                          jnp.asarray(tpos[:T]) + 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:T]), np.asarray(dec),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_tiled_wrapper_dispatches_to_reference_on_cpu(key):
+    """On the CPU backend the wrapper must use the tiled XLA reference and
+    accept the model-native (T, H, D) flat query layout."""
+    tile, segments, T_pad = TILED_MIXES["segments_larger_than_tile"]
+    Hkv, G, D, bs, max_blocks = 2, 2, 16, 4, 8
+    q, kp, vp, tables, ttab, tpos, tm, T = _tiled_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, tile, T_pad, jnp.float32)
+    out = ops.paged_attention_ragged_tiled(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile)
+    ref = paged_attention_ragged_tiled_reference(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile)
+    assert out.shape == q.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# instrumented-reference regression: KV gather traffic scales with
+# tiles/lanes, not tokens — the fix for the ~30% all-prefill CPU gap
+# ---------------------------------------------------------------------------
+def test_tiled_reference_gathers_each_block_once_per_lane(key):
+    """A 256-token single-segment prefill must read each pool block once
+    (one span gather per lane), where the per-token reference reads every
+    block once per token — 256x the traffic."""
+    T = 256
+    tile, bs, max_blocks = 16, 8, 32
+    Hkv, G, D = 1, 2, 16
+    segments = [(0, T)]
+    q, kp, vp, tables, ttab, tpos, tm, _ = _tiled_setup(
+        key, segments, Hkv, G, D, bs, max_blocks, tile, T, jnp.float32)
+    pool_gather_stats["blocks"] = 0
+    paged_attention_ragged_tiled_reference(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+        jnp.asarray(tm.row_tile), tile=tile)
+    tiled_reads = pool_gather_stats["blocks"]
+    pool_gather_stats["blocks"] = 0
+    paged_attention_ragged_reference(q, kp, vp, jnp.asarray(ttab),
+                                     jnp.asarray(tpos))
+    per_token_reads = pool_gather_stats["blocks"]
+    # one lane: k and v pools each gathered once -> each block read once
+    assert tiled_reads == 2 * max_blocks
+    assert per_token_reads == 2 * T * max_blocks
+    assert per_token_reads == T * tiled_reads
+
+
+def test_tiled_reference_gather_traffic_independent_of_tokens(key):
+    """Doubling the scheduled token count must not change the tiled
+    reference's pool traffic (it scales with lanes), while the per-token
+    reference's doubles."""
+    tile, bs, max_blocks = 8, 4, 16
+    Hkv, G, D = 2, 2, 16
+    counts = {}
+    for name, segments in (("short", [(0, 16), (0, 16)]),
+                           ("long", [(0, 32), (0, 32)])):
+        T = sum(n for _, n in segments)
+        q, kp, vp, tables, ttab, tpos, tm, _ = _tiled_setup(
+            key, segments, Hkv, G, D, bs, max_blocks, tile, T, jnp.float32)
+        pool_gather_stats["blocks"] = 0
+        paged_attention_ragged_tiled_reference(
+            q, kp, vp, jnp.asarray(tables), jnp.asarray(tm.meta),
+            jnp.asarray(tm.row_tile), tile=tile)
+        tiled_reads = pool_gather_stats["blocks"]
+        pool_gather_stats["blocks"] = 0
+        paged_attention_ragged_reference(q, kp, vp, jnp.asarray(ttab),
+                                         jnp.asarray(tpos))
+        counts[name] = (tiled_reads, pool_gather_stats["blocks"])
+    assert counts["long"][0] == counts["short"][0]       # lanes unchanged
+    assert counts["long"][1] == 2 * counts["short"][1]   # tokens doubled
+
+
+def test_tile_map_partitions_real_rows(key):
+    """Host-side contract: tiles are disjoint, within-window, within-
+    segment slabs whose union is exactly the real token rows."""
+    for mix in sorted(TILED_MIXES):
+        tile, segments, T_pad = TILED_MIXES[mix]
+        offs, lens, lanes, pos0 = [], [], [], []
+        off = 0
+        for lane, (start, n) in enumerate(segments):
+            offs.append(off); lens.append(n); lanes.append(lane)
+            pos0.append(start)
+            off += n
+        tm = build_tile_map(offs, lens, lanes, pos0, T_pad, len(segments),
+                            tile)
+        total = off
+        assert tm.cu_seqlens[0] == 0 and tm.cu_seqlens[-1] == total
+        assert np.all(np.diff(tm.cu_seqlens) >= 1)
+        covered = np.zeros(total, bool)
+        for t in range(tm.n_tiles):
+            lo, hi = tm.meta[TILE_LO, t], tm.meta[TILE_HI, t]
+            assert lo < hi
+            assert lo // tile == (hi - 1) // tile        # one window
+            s = np.searchsorted(tm.cu_seqlens, lo, side="right") - 1
+            assert hi <= tm.cu_seqlens[s + 1]            # one segment
+            assert not covered[lo:hi].any()
+            covered[lo:hi] = True
+            assert np.all(tm.row_tile[lo:hi] == t)
+        assert covered.all()
+        for t in range(tm.n_tiles, tm.meta.shape[1]):    # inert capacity
+            assert tm.meta[TILE_LO, t] == tm.meta[TILE_HI, t]

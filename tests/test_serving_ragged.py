@@ -4,9 +4,11 @@ The ragged engine (one 1-D stream of all scheduled tokens per step, no
 ``(lanes, chunk_width)`` rectangle) must be **token-identical** to both the
 dense-slot reference engine and the rectangular paged engine under every
 combination of arrival schedule, prompt lengths, token budgets, chunk
-widths, preemption pressure, and prefix sharing.  The hypothesis fuzz test
-drives randomized workloads end-to-end through both engines; the plain
-tests pin the named regressions.
+widths, preemption pressure, and prefix sharing — in both attention grids:
+the default **segment-tiled** grid (KV swept once per q-tile) and the
+per-token baseline (``tiled=False``).  The hypothesis fuzz test drives
+randomized workloads end-to-end through both engines; the plain tests pin
+the named regressions.
 """
 import jax
 import jax.numpy as jnp
@@ -47,8 +49,14 @@ def test_ragged_is_default_paged_layout(model):
     cfg, api, params = model
     eng = DecodeEngine(api, params, n_slots=2, **COMMON)
     assert isinstance(eng, PagedDecodeEngine) and eng.ragged
+    assert eng.tiled                 # segment-tiled grid is the default
     rect = PagedDecodeEngine(api, params, n_slots=2, ragged=False, **COMMON)
-    assert not rect.ragged
+    assert not rect.ragged and not rect.tiled
+    pertok = PagedDecodeEngine(api, params, n_slots=2, tiled=False, **COMMON)
+    assert pertok.ragged and not pertok.tiled
+    with pytest.raises(ValueError):  # tiling needs the flat stream
+        PagedDecodeEngine(api, params, n_slots=2, ragged=False, tiled=True,
+                          **COMMON)
 
 
 def test_ragged_engine_token_identical_to_slot_engine(model):
@@ -82,6 +90,24 @@ def test_ragged_engine_token_identical_to_rect_engine(model):
     done_r = {r.request_id: r.generated for r in re.run_until_drained()}
     done_c = {r.request_id: r.generated for r in rc.run_until_drained()}
     assert done_r == done_c and len(done_r) == len(prompts)
+
+
+def test_tiled_engine_token_identical_to_per_token_engine(model):
+    """Direct attention-grid differential: the segment-tiled sweep vs the
+    per-token (token, head, block) baseline over the same flat batches,
+    with tile widths bigger and smaller than the prefill chunks."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=4, hi=14, seed=17)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=6, **COMMON)
+    for tile in (4, 16):
+        te = PagedDecodeEngine(api, params, tiled=True, tile=tile, **kw)
+        pe = PagedDecodeEngine(api, params, tiled=False, **kw)
+        for p in prompts:
+            te.submit(p, 8)
+            pe.submit(p, 8)
+        done_t = {r.request_id: r.generated for r in te.run_until_drained()}
+        done_p = {r.request_id: r.generated for r in pe.run_until_drained()}
+        assert done_t == done_p and len(done_t) == len(prompts)
 
 
 def test_ragged_preemption_token_identical(model):
@@ -148,10 +174,12 @@ def test_ragged_padding_efficiency_beats_rect_on_mixed_load(model):
 # the fuzz harness (hypothesis; collected as a skip without the dev extra)
 # ---------------------------------------------------------------------------
 def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
-                        token_budget, tight_pool, prefix, arrival_every):
+                        token_budget, tight_pool, prefix, arrival_every,
+                        tiled=True, tile=8):
     """One randomized workload through ragged-paged vs dense-slot engines,
     asserting token identity end-to-end (shared by the hypothesis fuzz and
-    the pinned no-hypothesis cases)."""
+    the pinned no-hypothesis cases).  ``tiled`` selects the attention
+    grid: the segment-tiled sweep (default) or the per-token baseline."""
     cfg, api, params = model
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
@@ -173,8 +201,9 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     re = PagedDecodeEngine(api, params, n_slots=n_slots, block_size=bs,
                            chunk_tokens=chunk_tokens,
                            token_budget=token_budget, num_blocks=pool,
-                           prefix_cache=prefix, **COMMON)
-    assert re.ragged
+                           prefix_cache=prefix, tiled=tiled, tile=tile,
+                           **COMMON)
+    assert re.ragged and re.tiled == tiled
     se = SlotDecodeEngine(api, params, n_slots=n_slots, **COMMON)
     assert re.max_blocks == max_blocks
     pending = list(zip(prompts, max_new))
@@ -203,27 +232,35 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     tight_pool=st.booleans(),
     prefix=st.booleans(),
     arrival_every=st.integers(1, 3),
+    tiled=st.booleans(),
+    tile=st.sampled_from([4, 8, 16]),
 )
 def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
                                              n_slots, chunk_tokens,
                                              token_budget, tight_pool,
-                                             prefix, arrival_every):
+                                             prefix, arrival_every,
+                                             tiled, tile):
     """Differential fuzz: random arrival times / prompt lengths / budgets /
-    preemption pressure driven through the ragged-paged engine vs the
-    dense-slot oracle, asserting token identity end-to-end."""
+    preemption pressure / attention grid (segment-tiled vs per-token)
+    driven through the ragged-paged engine vs the dense-slot oracle,
+    asserting token identity end-to-end."""
     _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
-                        token_budget, tight_pool, prefix, arrival_every)
+                        token_budget, tight_pool, prefix, arrival_every,
+                        tiled, tile)
 
 
 @pytest.mark.parametrize("case", [
-    # seed, n_req, slots, chunk, budget, tight, prefix, arrival
-    (3, 4, 2, 3, 5, True, False, 2),       # tight pool + tiny budget
-    (7, 5, 3, 8, 0, False, True, 1),       # prefix sharing, burst arrival
-    (11, 3, 1, 1, 0, True, True, 3),       # serial lane, 1-token chunks
+    # seed, n_req, slots, chunk, budget, tight, prefix, arrival, tiled, tile
+    (3, 4, 2, 3, 5, True, False, 2, True, 4),   # tight pool + tiny budget
+    (7, 5, 3, 8, 0, False, True, 1, True, 16),  # prefix sharing, burst
+    (11, 3, 1, 1, 0, True, True, 3, True, 8),   # serial lane, 1-tok chunks
+    (3, 4, 2, 3, 5, True, False, 2, False, 8),  # per-token grid baseline
+    (7, 5, 3, 8, 0, False, True, 1, False, 8),  # per-token + prefix CoW
 ])
 def test_differential_pinned_cases_token_identity(model, case):
     """The fuzz harness's named corners, runnable without hypothesis (the
-    container lacks the dev extra; CI runs the full randomized sweep)."""
+    container lacks the dev extra; CI runs the full randomized sweep) —
+    both attention grids ride through the same identity gate."""
     _drive_differential(model, *case)
 
 
@@ -258,6 +295,21 @@ def _check_scheduler_flat_invariants(seed, n_lanes, token_budget,
         batch = RaggedBatch.build(d, kv, n_lanes, bs, cap=budget)
         assert batch.total_tokens == total
         assert batch.padded_tokens >= max(total, 1)
+        # segment-tile view: cu_seqlens partition the real stream, every
+        # scheduled token is covered by exactly one tile, and each tile's
+        # lane/position metadata agrees with the per-token arrays
+        from repro.serving.batch import (TILE_HI, TILE_LANE, TILE_LO,
+                                         TILE_POS0)
+        tm = batch.tiles(n_lanes, tile=4)
+        assert tm.cu_seqlens[0] == 0 and tm.cu_seqlens[-1] == total
+        real = tm.meta[:, :tm.n_tiles]
+        assert (real[TILE_HI] - real[TILE_LO]).sum() == total
+        for t in range(tm.n_tiles):
+            lo, hi = real[TILE_LO, t], real[TILE_HI, t]
+            assert lo < hi and np.all(tm.row_tile[lo:hi] == t)
+            assert np.all(batch.token_lane[lo:hi] == real[TILE_LANE, t])
+            assert np.all(batch.token_pos[lo:hi]
+                          == real[TILE_POS0, t] + np.arange(hi - lo))
         covered = set()
         for r in d.scheduled:
             n = d.num_scheduled[r.request_id]

@@ -314,3 +314,118 @@ def test_bucket_fill_never_exceeds_feed_or_budget():
     r1 = next(r for r in d.scheduled if r.request_id == 1)
     assert r1.cursor + d.num_scheduled[1] <= len(r1.feed)
     assert sum(d.num_scheduled.values()) <= 16     # budget still binds
+
+
+# ---------------------------------------------------------------------------
+# segment-tile metadata (TileMap) invariants over scheduled batches
+# ---------------------------------------------------------------------------
+from repro.serving import RaggedBatch  # noqa: E402
+from repro.serving.batch import (TILE_HI, TILE_LANE, TILE_LO,  # noqa: E402
+                                 TILE_POS0, TILE_WINDOW)
+
+
+def _schedule_batch(sched, kv, n_lanes, tile):
+    d = sched.schedule()
+    batch = RaggedBatch.build(d, kv, n_lanes, kv.block_size,
+                              cap=sched._budget())
+    return d, batch, batch.tiles(n_lanes, tile)
+
+
+def advance_chunked(sched, decision):
+    """Consume every scheduled token (the chunk-aware engine stand-in)."""
+    for r in list(decision.scheduled):
+        n = decision.num_scheduled[r.request_id]
+        if r.cursor + n == len(r.feed):
+            r.generated.append(0)
+            r.feed.append(0)
+        r.cursor += n
+        if len(r.generated) >= r.max_new_tokens:
+            sched.finish(r)
+
+
+def test_cu_seqlens_partition_flat_stream_exactly():
+    """cu_seqlens must be the exact segment boundaries of the flat stream:
+    starting at 0, ending at total_tokens, one interval per scheduled
+    request matching its (q_start, seg_len)."""
+    sched, kv = make(n_lanes=3, num_blocks=65, block_size=2, max_blocks=16,
+                     token_budget=16)
+    sched.cfg.chunk_tokens = 5
+    sched.cfg.fill_to_bucket = True
+    for i in range(3):
+        sched.add(req(i, plen=4 + 3 * i, max_new=2))
+    for _ in range(6):
+        if not sched.has_work():
+            break
+        d, batch, tm = _schedule_batch(sched, kv, 3, tile=4)
+        total = sum(d.num_scheduled.values())
+        assert tm.cu_seqlens[0] == 0 and tm.cu_seqlens[-1] == total
+        bounds = set(zip(tm.cu_seqlens[:-1].tolist(),
+                         tm.cu_seqlens[1:].tolist()))
+        for r in d.scheduled:
+            off = batch.q_starts[r.request_id]
+            assert (off, off + batch.seg_lens[r.request_id]) in bounds
+        assert len(bounds) == len(d.scheduled)
+        advance_chunked(sched, d)
+
+
+def test_tile_map_covers_every_scheduled_token_once():
+    """Across a full mixed drain, the tile map must partition the real
+    rows: disjoint [lo, hi) slabs inside one window and one segment whose
+    union is every scheduled token, with per-tile lane/pos agreeing with
+    the per-token arrays."""
+    tile = 4
+    sched, kv = make(n_lanes=3, num_blocks=129, block_size=2, max_blocks=32,
+                     token_budget=13)
+    sched.cfg.chunk_tokens = 6
+    sched.cfg.fill_to_bucket = True
+    for i in range(5):
+        sched.add(req(i, plen=2 + 7 * (i % 3), max_new=3))
+    for _ in range(100):
+        if not sched.has_work():
+            break
+        d, batch, tm = _schedule_batch(sched, kv, 3, tile)
+        total = batch.total_tokens
+        covered = np.zeros(max(total, 1), bool)
+        for t in range(tm.n_tiles):
+            lo, hi = int(tm.meta[TILE_LO, t]), int(tm.meta[TILE_HI, t])
+            assert lo < hi
+            assert lo // tile == (hi - 1) // tile          # one q window
+            assert tm.meta[TILE_WINDOW, t] == lo // tile
+            assert not covered[lo:hi].any()                # disjoint
+            covered[lo:hi] = True
+            assert np.all(tm.row_tile[lo:hi] == t)
+            assert np.all(batch.token_lane[lo:hi]
+                          == tm.meta[TILE_LANE, t])
+            assert np.all(batch.token_pos[lo:hi]
+                          == tm.meta[TILE_POS0, t] + np.arange(hi - lo))
+        assert covered.all() or total == 0                 # full coverage
+        # static capacity: windows + lanes, never exceeded
+        assert tm.meta.shape[1] == -(-batch.padded_tokens // tile) + 3
+        assert tm.n_tiles <= tm.meta.shape[1]
+        advance_chunked(sched, d)
+    assert not sched.has_work()
+
+
+def test_fill_to_bucket_padding_becomes_real_prefill_under_tiling():
+    """The flat bucket's padding slots must still be converted to real
+    prefill work when tiling is on, and the tile map must cover the filled
+    chunk: a decode + a long prefill land on the pow2 boundary with
+    padding_efficiency 1.0."""
+    kv = KVCacheManager(600, 2, max_blocks_per_seq=300)
+    sched = Scheduler(SchedulerConfig(n_lanes=2, token_budget=256,
+                                      chunk_tokens=255,
+                                      fill_to_bucket=True), kv)
+    r0 = req(0, plen=1, max_new=4)
+    sched.add(r0)
+    d = sched.schedule()
+    advance(sched, d)                          # r0 emitted: now decoding
+    sched.add(req(1, plen=400, max_new=1))
+    d, batch, tm = _schedule_batch(sched, kv, 2, tile=16)
+    assert batch.total_tokens == 256 == batch.padded_tokens
+    assert batch.padding_efficiency == 1.0
+    # decode segment [0,1) splits window 0; prefill fills the rest:
+    # 16 windows + 1 boundary split = 17 tiles, all real
+    assert tm.n_tiles == 17
+    real = tm.meta[:, :tm.n_tiles]
+    assert (real[TILE_HI] - real[TILE_LO]).sum() == 256
+    assert np.array_equal(tm.cu_seqlens, np.asarray([0, 1, 256]))
