@@ -24,7 +24,19 @@ Four scenario families, all at **equal physical KV budget**:
                        on CPU): rect vs ragged per-token vs ragged
                        segment-tiled; headline metric is total
                        (prefill + decode) token throughput — CI gates
-                       tiled >= rect here.
+                       tiled >= rect here;
+  * ``decode_heavy`` — short prompts, long generations (the regime
+                       speculative decode exists for: greedy tails settle
+                       into repetitive/structured continuations n-gram
+                       prompt-lookup drafts hit): spec (draft + verify +
+                       rewind) vs the one-token-per-step baseline at
+                       identical knobs; headline metrics are decode
+                       throughput and mean accepted tokens per
+                       speculative verification — CI gates spec >=
+                       nonspec and accepted_per_spec_step >= 1.0 here.
+
+All scenarios except ``decode_heavy`` pin ``spec=False`` so their tracked
+rows stay comparable with earlier PRs.
 
 ``python benchmarks/bench_serving.py [--json BENCH_serving.json] [--quick]``
 emits the CSV rows plus a machine-readable JSON (tokens/s, TTFT,
@@ -68,6 +80,13 @@ DUEL_LANES = 8
 # sized so one drain is long enough that best-of-reps beats machine noise
 ALL_PREFILL_LO, ALL_PREFILL_HI = 24, 56
 ALL_PREFILL_REQUESTS = 24
+
+# decode-heavy scenario: short prompts, long generations; draft budget per
+# decode lane per step
+DECODE_HEAVY_PROMPT = 6
+DECODE_HEAVY_NEW = 48
+DECODE_HEAVY_REQUESTS = 16
+DRAFT_K = 4
 
 
 def _requests(vocab: int):
@@ -162,11 +181,18 @@ def _reset_counters(engine) -> None:
     engine.steps = 0
     engine.scheduled_tokens = 0
     engine.padded_tokens = 0
+    for attr in ("tokens_drafted", "draft_tokens_accepted",
+                 "spec_verifications", "spec_tokens_emitted"):
+        if hasattr(engine, attr):
+            setattr(engine, attr, 0)
     if getattr(engine, "kv", None) is not None:
         engine.kv.prefix_hits = 0
         engine.kv.prefix_tokens_reused = 0
         engine.kv.cow_copies = 0
         engine.kv.evictions = 0
+        engine.kv.rewinds = 0
+        engine.kv.tokens_rewound = 0
+        engine.kv.blocks_rewound = 0
 
 
 def _drain_timed(engine, reqs) -> Dict[str, float]:
@@ -217,7 +243,7 @@ def _engines(api, params, quick: bool):
                                  cache_len=CACHE_LEN,
                                  block_size=BLOCK_SIZE, num_blocks=pool,
                                  chunk_tokens=chunk, prefix_cache=prefix,
-                                 ragged=ragged)
+                                 ragged=ragged, spec=False)
 
     return [("pr1", lambda: make(1, False, False)),
             ("unified", lambda: make(CHUNK_TOKENS, True, False)),
@@ -249,7 +275,7 @@ def _scenario_all_prefill(api, params, vocab: int, quick: bool):
                                  chunk_tokens=CHUNK_TOKENS,
                                  prefix_cache=False,
                                  ragged=(kind != "rect"),
-                                 tiled=(kind == "ragged"))
+                                 tiled=(kind == "ragged"), spec=False)
 
     # a single drain is tens of ms on the smoke model — noise-dominated —
     # so every engine runs the identical burst several times and reports
@@ -267,6 +293,51 @@ def _scenario_all_prefill(api, params, vocab: int, quick: bool):
                 best = r
         best["reps"] = reps
         out[kind] = best
+    return out
+
+
+def _scenario_decode_heavy(api, params, vocab: int, quick: bool):
+    """The regime speculative decode exists for: short prompts, long
+    generations, most engine steps pure decode.  The smoke model's greedy
+    tails settle into repetitive continuations (as real structured output
+    does), so n-gram prompt-lookup drafts land and each verification
+    emits several tokens for one model step.  spec vs nonspec at
+    identical knobs, best-of-N repeat drains (single smoke-scale drains
+    are noise-dominated)."""
+    from repro.serving import PagedDecodeEngine
+    rng = np.random.default_rng(4)
+    n = 8 if quick else DECODE_HEAVY_REQUESTS
+    reqs = [(rng.integers(0, vocab, DECODE_HEAVY_PROMPT).astype(np.int32),
+             DECODE_HEAVY_NEW) for _ in range(n)]
+    lanes = 4 if quick else 8
+    pool = lanes * (CACHE_LEN // BLOCK_SIZE) + 1
+
+    def make(spec):
+        return PagedDecodeEngine(api, params, n_slots=lanes,
+                                 cache_len=CACHE_LEN,
+                                 block_size=BLOCK_SIZE, num_blocks=pool,
+                                 chunk_tokens=CHUNK_TOKENS,
+                                 prefix_cache=False, spec=spec,
+                                 draft_k=DRAFT_K)
+
+    reps = 4 if quick else 6
+    out = {}
+    for name, spec in (("nonspec", False), ("spec", True)):
+        eng = make(spec)
+        _warm(eng, DECODE_HEAVY_PROMPT, vocab)
+        best = None
+        for _ in range(reps):
+            _reset_counters(eng)
+            r = _drain_timed(eng, reqs)
+            s = eng.stats()
+            r["accepted_per_spec_step"] = float(s["accepted_per_spec_step"])
+            r["draft_acceptance_rate"] = float(s["draft_acceptance_rate"])
+            r["tokens_drafted"] = int(s["tokens_drafted"])
+            r["kv_rewinds"] = int(s["kv_rewinds"])
+            if best is None or r["tok_s"] > best["tok_s"]:
+                best = r
+        best["reps"] = reps
+        out[name] = best
     return out
 
 
@@ -324,7 +395,7 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
                                      block_size=BLOCK_SIZE,
                                      num_blocks=pool_blocks,
                                      chunk_tokens=1, prefix_cache=False,
-                                     ragged=False)
+                                     ragged=False, spec=False)
         # the padding-tax duel: chunked prefill mixing with decodes, the
         # rectangular (lanes, width) layout vs the ragged flat stream
         # (per-token and segment-tiled attention grids) at identical
@@ -367,10 +438,13 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
     long_prompt = _scenario_long_prompt(api, params, cfg.vocab_size, quick)
     prefix_heavy = _scenario_prefix_heavy(api, params, cfg.vocab_size, quick)
     all_prefill = _scenario_all_prefill(api, params, cfg.vocab_size, quick)
+    decode_heavy = _scenario_decode_heavy(api, params, cfg.vocab_size, quick)
     ttft_speedup = (long_prompt["pr1"]["ttft_mean_s"]
                     / max(long_prompt["unified"]["ttft_mean_s"], 1e-9))
     tput_speedup = (prefix_heavy["unified"]["tok_s"]
                     / max(prefix_heavy["pr1"]["tok_s"], 1e-9))
+    spec_speedup = (decode_heavy["spec"]["tok_s"]
+                    / max(decode_heavy["nonspec"]["tok_s"], 1e-9))
     # the tiled-grid duel: segment-tiled vs per-token vs rect on the
     # all-prefill burst, by total (prefill + decode) throughput
     ap_tiled_vs_rect = (all_prefill["ragged"]["total_tok_s"]
@@ -395,6 +469,14 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
             f"total_tok_s={r['total_tok_s']:.1f};"
             f"ttft_ms={r['ttft_mean_s']*1e3:.0f};steps={r['steps']};"
             f"pad_eff={r['padding_efficiency']:.2f}")
+    for name, r in decode_heavy.items():
+        us = 1e6 / max(r["tok_s"], 1e-9)
+        rows.append(
+            f"serving/decode_heavy_{name},{us:.0f},"
+            f"tok_s={r['tok_s']:.1f};steps={r['steps']};"
+            f"accepted_per_step={r['accepted_per_spec_step']:.2f};"
+            f"accept_rate={r['draft_acceptance_rate']:.2f};"
+            f"rewinds={r['kv_rewinds']}")
     # scenario-aggregate padding efficiency (total real / total padded
     # across every arrival rate)
     pad_eff_ragged = pad_tokens["ragged"][0] / max(pad_tokens["ragged"][1], 1)
@@ -403,6 +485,7 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
                 f"throughput_prefix_heavy={tput_speedup:.2f}x;"
                 f"all_prefill_tiled_vs_rect={ap_tiled_vs_rect:.2f}x;"
                 f"all_prefill_tiled_vs_pertok={ap_tiled_vs_pertok:.2f}x;"
+                f"decode_heavy_spec_vs_nonspec={spec_speedup:.2f}x;"
                 f"padding_eff_mixed_ragged={pad_eff_ragged:.2f};"
                 f"padding_eff_mixed_rect={pad_eff_rect:.2f}")
 
@@ -410,14 +493,17 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
         results.update({
             "arch": cfg.name,
             "config": {"cache_len": CACHE_LEN, "block_size": BLOCK_SIZE,
-                       "chunk_tokens": CHUNK_TOKENS, "quick": quick},
+                       "chunk_tokens": CHUNK_TOKENS, "draft_k": DRAFT_K,
+                       "quick": quick},
             "scenarios": {"mixed": mixed, "long_prompt": long_prompt,
                           "prefix_heavy": prefix_heavy,
-                          "all_prefill": all_prefill},
+                          "all_prefill": all_prefill,
+                          "decode_heavy": decode_heavy},
             "speedups": {"ttft_long_prompt": ttft_speedup,
                          "throughput_prefix_heavy": tput_speedup,
                          "all_prefill_tiled_vs_rect": ap_tiled_vs_rect,
-                         "all_prefill_tiled_vs_pertok": ap_tiled_vs_pertok},
+                         "all_prefill_tiled_vs_pertok": ap_tiled_vs_pertok,
+                         "decode_heavy_spec_vs_nonspec": spec_speedup},
             "padding_efficiency": {"mixed_ragged": pad_eff_ragged,
                                    "mixed_rect": pad_eff_rect},
         })

@@ -52,6 +52,15 @@ def main() -> None:
                          "pins the per-token (token, head, block) grid")
     ap.add_argument("--tile", type=int, default=16,
                     help="q rows per segment tile window (pow2)")
+    ap.add_argument("--spec", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="speculative multi-token decode: n-gram drafts "
+                         "verified by the step's own argmax, accepted "
+                         "prefix + bonus token emitted per step; "
+                         "--no-spec pins one-token-per-step decode")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max draft tokens proposed per decode lane per "
+                         "step (0 disables speculation)")
     ap.add_argument("--engine", choices=["auto", "paged", "slot"],
                     default="auto",
                     help="paged block-pool engine vs dense-slot reference")
@@ -76,7 +85,9 @@ def main() -> None:
               "ragged": args.ragged and api.supports_ragged,
               "tiled": (args.tiled and args.ragged
                         and api.supports_ragged),
-              "tile": args.tile}
+              "tile": args.tile,
+              "spec": args.spec and api.supports_spec,
+              "draft_k": args.draft_k}
     eng = DecodeEngine(api, params, paged=paged, n_slots=args.slots,
                        cache_len=args.cache_len, window=window, **kw)
     rng = np.random.default_rng(0)

@@ -48,6 +48,15 @@ class ModelAPI:
     # serving.batch.TileMap, the default) the attention read runs the
     # segment-tiled grid — KV blocks swept once per q-tile, not per token;
     # the static ``tile`` width rides through **kw into the jitted step.
+    #
+    # Verification-logits contract (speculative decode): both multi-token
+    # steps return logits for EVERY position of every segment — (B, C, V)
+    # from ``paged_step``, (T, V) from ``ragged_step`` — not just each
+    # lane's last row.  Row j of a segment is the next-token distribution
+    # given the segment's tokens 0..j, so the engine can verify a chain of
+    # drafted tokens against the model's own argmax in one step.  A step
+    # implementation that only materialized final rows would silently
+    # break ``PagedDecodeEngine(spec=True)``.
     ragged_step: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
 
     @property
@@ -60,6 +69,13 @@ class ModelAPI:
     @property
     def supports_ragged(self) -> bool:
         return self.ragged_step is not None
+
+    @property
+    def supports_spec(self) -> bool:
+        """Speculative decode needs a true multi-token step (q_len >= 1
+        with per-position logits); the q_len=1 legacy step cannot verify
+        draft chains."""
+        return self.paged_step is not None
 
     def resolve_paged_step(self):
         """The unified chunked step, or the q_len=1 legacy step when that

@@ -469,6 +469,13 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
         per q window) — the attention read runs the segment-tiled grid,
         sweeping each lane's KV blocks once per q-tile instead of once per
         token.  Without them the per-token grid is the measured baseline.
+
+    The returned logits cover EVERY row of the stream, not just each
+    lane's final segment row — the speculative-decode verification
+    contract (see :class:`~repro.models.api.ModelAPI`): row t is the
+    next-token distribution after the stream's token t, so a decode
+    segment carrying drafted tokens at consecutive positions yields the
+    model's own greedy continuation at every draft slot in one step.
     """
     token_pos = cache["token_pos"]
     token_lane = cache["token_lane"]

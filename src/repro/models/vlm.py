@@ -101,7 +101,10 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
     # the flat-token serving step sees text tokens only (patches entered
     # during prefill); the LM backbone consumes the ragged stream directly,
     # segment-tiled whenever the engine ships tile_meta/row_tile in the
-    # cache (``tile`` = static q-window rows of that TileMap)
+    # cache (``tile`` = static q-window rows of that TileMap).  Like the
+    # text backbone it returns logits for every stream row — the
+    # speculative-decode verification contract — so draft segments verify
+    # through the VLM path unchanged.
     return transformer.ragged_step(params["lm"], cache, tokens, cfg,
                                    window=window, tile=tile,
                                    compute_dtype=compute_dtype)

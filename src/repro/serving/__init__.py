@@ -7,3 +7,4 @@ from repro.serving.engine import (DecodeEngine, PagedDecodeEngine,  # noqa: F401
 from repro.serving.scheduler import (Request, RequestState,  # noqa: F401
                                      Scheduler, SchedulerConfig,
                                      StepDecision)
+from repro.serving.spec import NgramProposer, Proposer  # noqa: F401

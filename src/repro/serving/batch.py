@@ -49,10 +49,11 @@ class RaggedBatch:
     """One engine step's scheduled tokens as a flat 1-D stream.
 
     ``tokens[q_starts[rid] : q_starts[rid] + seg_lens[rid]]`` is request
-    ``rid``'s contiguous segment (a prefill chunk or a single decode
-    token); segments are packed back to back in schedule order and the
-    tail is padded to a pow2 bucket (capped at the scheduler's token
-    budget).  Per token:
+    ``rid``'s contiguous segment (a prefill chunk, a single decode token,
+    or — speculative decode — one feed token followed by ``seg_drafts``
+    proposer drafts, verified by the same step's per-row argmax); segments
+    are packed back to back in schedule order and the tail is padded to a
+    pow2 bucket (capped at the scheduler's token budget).  Per token:
 
       * ``token_lane``   — owning engine lane (selects the block-table row
         the attention read gathers through);
@@ -73,8 +74,15 @@ class RaggedBatch:
     last_row: np.ndarray               # (n_lanes,) int32
     q_starts: Dict[int, int]           # request_id -> flat segment offset
     seg_lens: Dict[int, int]           # request_id -> segment length
+    # request_id -> trailing speculative draft rows in the segment (a
+    # spec decode lane's segment is 1 feed token + seg_drafts[rid]
+    # drafts; prefill segments carry 0).  The engine verifies rows
+    # [q_starts + seg_lens - seg_drafts - 1, q_starts + seg_lens) of the
+    # step's argmax against the drafts.
+    seg_drafts: Dict[int, int]
     total_tokens: int                  # real scheduled tokens
     padded_tokens: int                 # bucketed flat length T_pad
+    n_draft_tokens: int = 0            # sum of seg_drafts values
 
     @property
     def padding_efficiency(self) -> float:
@@ -103,12 +111,17 @@ class RaggedBatch:
         last_row = np.zeros((n_lanes,), np.int32)
         q_starts: Dict[int, int] = {}
         seg_lens: Dict[int, int] = {}
+        seg_drafts: Dict[int, int] = {}
+        n_drafts = 0
         off = 0
         for r in decision.scheduled:
             n = decision.num_scheduled[r.request_id]
             table = np.asarray(kv.block_table(r.request_id), np.int64)
             ps = np.arange(r.cursor, r.cursor + n)
-            tokens[off:off + n] = r.feed[r.cursor:r.cursor + n]
+            # a speculative decode lane's segment is its feed token plus
+            # its draft tokens, at consecutive positions — verification
+            # is just this segment riding the ordinary multi-token path
+            tokens[off:off + n] = decision.segment_tokens(r)
             token_lane[off:off + n] = r.lane
             token_pos[off:off + n] = ps
             slot_mapping[off:off + n] = (table[ps // block_size] * block_size
@@ -116,11 +129,15 @@ class RaggedBatch:
             last_row[r.lane] = off + n - 1
             q_starts[r.request_id] = off
             seg_lens[r.request_id] = n
+            seg_drafts[r.request_id] = len(
+                decision.drafts.get(r.request_id, ()))
+            n_drafts += seg_drafts[r.request_id]
             off += n
         return cls(tokens=tokens, token_lane=token_lane,
                    token_pos=token_pos, slot_mapping=slot_mapping,
                    last_row=last_row, q_starts=q_starts, seg_lens=seg_lens,
-                   total_tokens=total, padded_tokens=padded)
+                   seg_drafts=seg_drafts, total_tokens=total,
+                   padded_tokens=padded, n_draft_tokens=n_drafts)
 
     def tiles(self, n_lanes: int, tile: int) -> "TileMap":
         """The segment-tiled view of this batch (see :class:`TileMap`).
@@ -166,6 +183,9 @@ class TileMap:
     ``capacity`` is the *static* upper bound ``n_windows + n_lanes`` (each
     of the <= n_lanes segments adds at most one window split), so the
     jitted step retraces per pow2 token bucket only, never per tile count.
+    Speculative decode needs no extra metadata here: a ``1 + k`` draft
+    segment is just a multi-token segment, split at window boundaries and
+    swept against its lane's KV exactly like a prefill chunk.
     Tiles past ``n_tiles`` are inert: ``lo == hi`` skips all compute.
     ``row_tile[q]`` maps every real flat row to its owning tile (padding
     rows map to tile 0 — their output is garbage the engine never reads).

@@ -8,8 +8,12 @@ sequence grows instead of one dense ``cache_len`` slab per slot.  Two layers:
     reference counts (refcount > 1 means the block is shared between
     sequences, e.g. a forked or prefix-matched block).
   * :class:`KVCacheManager` — per-sequence logical->physical block tables
-    with ``allocate`` / ``append_token`` / ``free`` / ``fork`` APIs, and the
-    padded numpy block-table matrix the jitted decode step consumes.
+    with ``allocate`` / ``append_token`` / ``rewind`` / ``free`` / ``fork``
+    APIs, and the padded numpy block-table matrix the jitted decode step
+    consumes.  ``rewind`` is the speculative-decode rollback: it drops a
+    sequence's tail back to the accepted watermark, freeing blocks that
+    only held rejected draft tokens and leaving the pool (and the prefix
+    cache) exactly as if only the accepted tokens had been appended.
 
 Physical block 0 is reserved as the *null block*: idle engine lanes point
 their table at it so the jitted scatter always has a legal target, and no
@@ -95,12 +99,22 @@ class SeqBlocks:
     ``digests`` is the hash chain of this sequence's *completed* full blocks
     and ``pending`` the token ids of the current partial block — both only
     maintained when the prefix cache is on and token contents are known
-    (``pending is None`` marks the sequence unhashable).
+    (``pending is None`` marks the sequence unhashable).  ``history`` is
+    the full token-id record (attached prefix + every appended token),
+    kept in lockstep with ``pending`` so :meth:`KVCacheManager.rewind` can
+    rebuild the partial-block hash state after a speculative rollback
+    crosses a block boundary.
     """
     table: List[int] = dataclasses.field(default_factory=list)
     n_tokens: int = 0
     digests: List[str] = dataclasses.field(default_factory=list)
     pending: Optional[List[int]] = None
+    history: Optional[List[int]] = None
+    # chain indexes (positions in ``digests``) whose cache registration
+    # THIS sequence created (vs attached/pre-existing content) — the set
+    # :meth:`KVCacheManager.rewind` must un-register when those blocks
+    # turn out to hold rejected speculative tokens
+    registered: set = dataclasses.field(default_factory=set)
 
 
 def _digest(parent: str, tokens: Sequence[int]) -> str:
@@ -137,6 +151,12 @@ class KVCacheManager:
         self.prefix_tokens_reused = 0
         self.cow_copies = 0
         self.evictions = 0
+        # speculative-rollback accounting (rewind calls that dropped >= 1
+        # token; blocks_rewound counts blocks freed because they only held
+        # rejected tokens)
+        self.rewinds = 0
+        self.tokens_rewound = 0
+        self.blocks_rewound = 0
         # bumped whenever the set of cached digests changes — lets the
         # scheduler skip re-hashing a blocked prompt when nothing moved
         self.cache_version = 0
@@ -210,6 +230,7 @@ class KVCacheManager:
         self._cached[digest] = blk
         self._block_digest[blk] = digest
         self.allocator.incref(blk)          # the cache's own hold
+        seq.registered.add(len(seq.digests) - 1)
         self.cache_version += 1
 
     def _match_prefix(self, feed: Sequence[int]
@@ -306,7 +327,8 @@ class KVCacheManager:
         n_full = num_computed // self.block_size
         seq = SeqBlocks(table=list(table), n_tokens=num_computed,
                         digests=digests[:n_full],
-                        pending=feed[n_full * self.block_size:num_computed])
+                        pending=feed[n_full * self.block_size:num_computed],
+                        history=feed[:num_computed])
         self._seqs[seq_id] = seq
         if num_computed:
             self.prefix_hits += 1
@@ -331,8 +353,9 @@ class KVCacheManager:
                 f"seq {seq_id} needs {need} blocks, "
                 f"{self.num_free_blocks} free")
         # pre-allocated contents are unknown: such sequences are unhashable
-        seq = SeqBlocks(pending=[] if (self.enable_prefix_cache
-                                       and n_tokens == 0) else None)
+        hashable = self.enable_prefix_cache and n_tokens == 0
+        seq = SeqBlocks(pending=[] if hashable else None,
+                        history=[] if hashable else None)
         for _ in range(need):
             seq.table.append(self._alloc_block())
         seq.n_tokens = n_tokens
@@ -381,11 +404,69 @@ class KVCacheManager:
         if seq.pending is not None:
             if token is None:
                 seq.pending = None          # content unknown: stop hashing
+                seq.history = None
             else:
                 seq.pending.append(int(token))
+                seq.history.append(int(token))
                 if len(seq.pending) == self.block_size:
                     self._register_full_block(seq)
         return new_block
+
+    def rewind(self, seq_id: int, n_tokens: int) -> None:
+        """Roll a sequence's tail back to ``n_tokens`` — the speculative
+        decode rollback: tokens past the new end (rejected drafts) are
+        logically dropped.
+
+        Blocks that only held rejected tokens are released (a shared or
+        cache-held block is only decref'd, never reclaimed or mutated in
+        place — copy-on-write still protects any other holder).  Cache
+        registrations THIS sequence created for now-rejected full blocks
+        are un-registered, so the prefix cache ends up exactly as if only
+        the accepted tokens had ever been appended; registrations that
+        pre-existed (attached prefixes, content another sequence cached
+        first) are left alone.  The digest chain is truncated and the
+        partial-block hash state rebuilt from the retained token history,
+        so a later re-completion of the tail block re-hashes cleanly.
+        Stale KV left in the retained tail block's upper slots is
+        unreachable: every attention read masks positions past the
+        query's own, and the next appends overwrite (or CoW-fork) those
+        slots before they are ever covered."""
+        seq = self._seqs[seq_id]
+        if not 0 <= n_tokens <= seq.n_tokens:
+            raise ValueError(
+                f"cannot rewind seq {seq_id} to {n_tokens} tokens "
+                f"(has {seq.n_tokens})")
+        if n_tokens == seq.n_tokens:
+            return
+        self.rewinds += 1
+        self.tokens_rewound += seq.n_tokens - n_tokens
+        if seq.pending is not None:
+            n_full = n_tokens // self.block_size
+            for idx in [i for i in seq.registered if i >= n_full]:
+                seq.registered.discard(idx)
+                digest = seq.digests[idx]
+                blk = self._cached.get(digest)
+                if blk is not None and \
+                        self._block_digest.get(blk) == digest:
+                    del self._cached[digest]
+                    del self._block_digest[blk]
+                    self._lru.pop(blk, None)
+                    self.allocator.decref(blk)  # drop the cache's hold
+                    self.cache_version += 1
+            del seq.digests[n_full:]
+            seq.pending = list(
+                seq.history[n_full * self.block_size:n_tokens])
+            del seq.history[n_tokens:]
+        keep = self.blocks_needed(n_tokens)
+        for blk in seq.table[keep:]:
+            # blocks_rewound counts only blocks actually reclaimed: a
+            # block still shared (fork / prefix attach) is merely
+            # decref'd and stays allocated for its other holders
+            if self.allocator.refcount(blk) == 1:
+                self.blocks_rewound += 1
+            self._release(blk)
+        del seq.table[keep:]
+        seq.n_tokens = n_tokens
 
     def free(self, seq_id: int) -> None:
         seq = self._seqs.pop(seq_id)
@@ -406,7 +487,9 @@ class KVCacheManager:
         dst = SeqBlocks(table=list(src.table), n_tokens=src.n_tokens,
                         digests=list(src.digests),
                         pending=None if src.pending is None
-                        else list(src.pending))
+                        else list(src.pending),
+                        history=None if src.history is None
+                        else list(src.history))
         for blk in dst.table:
             self._attach(blk)
         self._seqs[dst_seq_id] = dst

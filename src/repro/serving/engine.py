@@ -34,6 +34,7 @@ from repro.serving.batch import RaggedBatch, padded_pow2
 from repro.serving.blocks import KVCacheManager
 from repro.serving.scheduler import (Request, Scheduler, SchedulerConfig,
                                      StepDecision)
+from repro.serving.spec import NgramProposer, Proposer
 
 PyTree = Any
 
@@ -74,6 +75,22 @@ class PagedDecodeEngine:
     sweeps each lane's KV blocks once per q-tile instead of once per
     token.  ``tiled=False`` pins the per-token ``(token, head, block)``
     grid as the measured baseline.
+
+    Speculative decode (``spec``, default True wherever the multi-token
+    step exists): each decode lane schedules up to ``draft_k`` proposer
+    drafts as one ``1 + k``-token segment per step; the step's per-row
+    greedy argmax verifies them, the longest matching draft prefix plus
+    one bonus token is accepted (always >= 1 token — zero acceptance
+    degrades exactly to the plain decode step), and the KV cache is
+    rewound past the rejected slots (``KVCacheManager.rewind``).  Greedy
+    outputs are token-identical to ``spec=False`` (which pins the
+    one-token-per-step decode) for ANY proposer; the default
+    :class:`~repro.serving.spec.NgramProposer` drafts from each request's
+    own token history, so acceptance is free on the repetitive tails long
+    generations settle into.  This is the one path where a request
+    advances a *variable* number of tokens per engine iteration —
+    positions, slot mapping, budget accounting, and preemption all ride
+    the same multi-token segment bookkeeping chunked prefill uses.
     """
 
     def __init__(self, model_api, params: PyTree, *, n_slots: int,
@@ -82,6 +99,8 @@ class PagedDecodeEngine:
                  token_budget: int = 0, chunk_tokens: int = 16,
                  prefix_cache: bool = True, ragged: Optional[bool] = None,
                  tiled: Optional[bool] = None, tile: int = 16,
+                 spec: bool = True, draft_k: int = 4,
+                 proposer: Optional[Proposer] = None,
                  cache_dtype=None, compute_dtype=None) -> None:
         if not getattr(model_api, "supports_paged", False):
             raise ValueError(
@@ -101,6 +120,7 @@ class PagedDecodeEngine:
                              "(1 = one-token-per-step prefill)")
         if getattr(model_api, "paged_step", None) is None:
             chunk_tokens = 1          # legacy q_len=1 step: no chunking
+            spec = False              # q_len=1: no multi-token verification
         # ragged flat-token batching is the default whenever the model
         # family provides the flat step; ``ragged=False`` pins the legacy
         # rectangular (n_slots, chunk_width) layout (the PR 2 baseline)
@@ -125,6 +145,13 @@ class PagedDecodeEngine:
         self.tiled = tiled
         self.tile = tile
         self.chunk_tokens = chunk_tokens
+        if draft_k < 0:
+            raise ValueError(f"draft_k must be >= 0, got {draft_k}")
+        self.spec = bool(spec) and draft_k > 0
+        self.draft_k = draft_k if self.spec else 0
+        if self.spec and proposer is None:
+            proposer = NgramProposer()
+        self.proposer = proposer if self.spec else None
         self.max_blocks = -(-cache_len // block_size)
         if num_blocks is None:
             num_blocks = n_slots * self.max_blocks + 1   # +1: null block
@@ -135,7 +162,8 @@ class PagedDecodeEngine:
         self.scheduler = Scheduler(
             SchedulerConfig(n_lanes=n_slots, token_budget=token_budget,
                             chunk_tokens=self.chunk_tokens,
-                            fill_to_bucket=self.ragged),
+                            fill_to_bucket=self.ragged,
+                            draft_k=self.draft_k, proposer=self.proposer),
             self.kv)
         kw = {"num_blocks": num_blocks, "block_size": block_size,
               "max_blocks_per_lane": self.max_blocks}
@@ -181,6 +209,12 @@ class PagedDecodeEngine:
         # the compiled step actually processed
         self.scheduled_tokens = 0
         self.padded_tokens = 0
+        # speculative-decode accounting: drafted vs accepted draft tokens,
+        # and per-verification emitted counts (always >= 1: the bonus)
+        self.tokens_drafted = 0
+        self.draft_tokens_accepted = 0
+        self.spec_verifications = 0       # decode emissions that had drafts
+        self.spec_tokens_emitted = 0      # tokens those emissions produced
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
@@ -213,10 +247,10 @@ class PagedDecodeEngine:
                              "v": v.at[:, dst].set(v[:, src])}
         return out
 
-    def _run_rect(self, decision: StepDecision) -> np.ndarray:
+    def _run_rect(self, decision: StepDecision):
         """The rectangular (n_slots, chunk_width) step: every lane is
-        padded to the widest scheduled chunk.  Returns (n_slots,) next
-        tokens (garbage for non-emitting lanes)."""
+        padded to the widest scheduled chunk.  Returns ``greedy(req, j)``,
+        the step's argmax token at row ``j`` of ``req``'s chunk."""
         sched_ids = {r.request_id for r in decision.scheduled}
         width = padded_pow2(max(
             [decision.num_scheduled[r.request_id]
@@ -233,7 +267,7 @@ class PagedDecodeEngine:
             if r.request_id in sched_ids:
                 n = decision.num_scheduled[r.request_id]
                 q_lens[r.lane] = n
-                tokens[r.lane, :n] = r.feed[r.cursor:r.cursor + n]
+                tokens[r.lane, :n] = decision.segment_tokens(r)
         self.cache["block_tables"] = jnp.asarray(tables)
         self.cache["pos"] = jnp.asarray(pos)
         self.cache["q_lens"] = jnp.asarray(q_lens)
@@ -241,17 +275,45 @@ class PagedDecodeEngine:
                                         jnp.asarray(tokens))
         self.scheduled_tokens += int(q_lens.sum())
         self.padded_tokens += self.n_slots * width
+        if decision.drafts:
+            # speculative verification reads every row of a draft segment
+            # — but still only those: gather them (plus each lane's last
+            # row) before the argmax instead of reducing all (slots, C)
+            flat = logits.reshape(self.n_slots * width, -1)
+            return self._gather_greedy(
+                decision, flat, lambda r: r.lane * width)
         # only each lane's last real chunk row can emit — gather those
         # (n_slots, V) rows before the argmax instead of reducing all C
         last = jnp.asarray(np.maximum(q_lens - 1, 0))
-        return np.asarray(jnp.argmax(
+        lane_tok = np.asarray(jnp.argmax(
             logits[jnp.arange(self.n_slots), last], axis=-1))   # (slots,)
+        return lambda r, j: int(lane_tok[r.lane])
 
-    def _run_ragged(self, decision: StepDecision) -> np.ndarray:
+    def _gather_greedy(self, decision: StepDecision, flat_logits,
+                       seg_start):
+        """Argmax only the rows verification can read: for each scheduled
+        request, rows ``base-1 .. n-1`` of its segment (the draft
+        verification window — just the emitting row when it has no
+        drafts).  ``seg_start(req)`` maps a request to its segment's
+        first flat row.  Returns ``greedy(req, j)`` over those rows."""
+        offsets: Dict[int, int] = {}
+        rows: List[int] = []
+        for r in decision.scheduled:
+            n = decision.num_scheduled[r.request_id]
+            first = n - 1 - len(decision.drafts.get(r.request_id, ()))
+            offsets[r.request_id] = len(rows) - first
+            start = seg_start(r)
+            rows.extend(range(start + first, start + n))
+        toks = np.asarray(jnp.argmax(
+            flat_logits[jnp.asarray(np.asarray(rows, np.int32))], axis=-1))
+        return lambda r, j: int(toks[offsets[r.request_id] + j])
+
+    def _run_ragged(self, decision: StepDecision):
         """The flat-token step: all scheduled tokens as one 1-D stream with
         per-token lane/pos/slot metadata — work proportional to the real
         token count, ~sum(q_len) instead of lanes * max(q_len).  Returns
-        (n_slots,) next tokens (garbage for non-emitting lanes)."""
+        ``greedy(req, j)``, the step's argmax token at row ``j`` of
+        ``req``'s segment."""
         batch = RaggedBatch.build(decision, self.kv, self.n_slots,
                                   self.block_size,
                                   cap=self.scheduler._budget())
@@ -273,14 +335,29 @@ class PagedDecodeEngine:
                                         jnp.asarray(batch.tokens))
         self.scheduled_tokens += batch.total_tokens
         self.padded_tokens += batch.padded_tokens
+        if decision.drafts:
+            # speculative verification reads every row of a draft segment
+            # — but still only those: gather them (plus each lane's last
+            # row) before the argmax instead of reducing all T
+            starts = batch.q_starts
+            return self._gather_greedy(decision, logits,
+                                       lambda r: starts[r.request_id])
         # only each lane's final segment row can emit — gather those
         # (n_slots, V) rows before the argmax instead of reducing all T
-        return np.asarray(jnp.argmax(
+        lane_tok = np.asarray(jnp.argmax(
             logits[jnp.asarray(batch.last_row)], axis=-1))      # (slots,)
+        return lambda r, j: int(lane_tok[r.lane])
 
     def step(self) -> StepDecision:
         """One engine iteration: one token-budgeted batch mixing prefill
-        chunks and decodes."""
+        chunks, decodes, and (``spec``) speculative draft segments.
+
+        Propose -> verify -> accept: the scheduler attached each decode
+        lane's drafts (``decision.drafts``); the model step verified them
+        by producing per-row greedy argmax; here the longest matching
+        draft prefix plus one bonus token is accepted per lane, and the
+        KV cache is rewound past the rejected draft slots so the next
+        step's appends land where the accepted sequence actually ends."""
         decision = self.scheduler.schedule()
         # apply queued copy-on-write copies BEFORE this step's KV writes
         # land in the forked blocks
@@ -295,25 +372,59 @@ class PagedDecodeEngine:
                                    jnp.asarray(dst))
             self.cow_block_copies += len(copies)
 
-        next_tokens = (self._run_ragged(decision) if self.ragged
-                       else self._run_rect(decision))
+        greedy = (self._run_ragged(decision) if self.ragged
+                  else self._run_rect(decision))
         self.steps += 1
 
         for r in list(decision.scheduled):
             n = decision.num_scheduled[r.request_id]
-            emitting = r.cursor + n == len(r.feed)
-            r.cursor += n
-            self.tokens_prefilled += n - 1 if emitting else n
-            if emitting:
-                tok = int(next_tokens[r.lane])
+            drafts = decision.drafts.get(r.request_id, [])
+            base = n - len(drafts)              # fed (non-draft) tokens
+            emitting = r.cursor + base == len(r.feed)
+            if not emitting:
+                r.cursor += n                   # mid-prompt prefill chunk
+                self.tokens_prefilled += n
+                continue
+            self.tokens_prefilled += base - 1
+            # greedy rows base-1 .. n-1 predict the tokens at positions
+            # cursor+base .. cursor+n: accept the longest draft prefix the
+            # argmax reproduces, plus the bonus token at the first
+            # mismatching (or final) row — with no drafts this is exactly
+            # the old single-token emission
+            m = 0
+            while m < len(drafts) and greedy(r, base - 1 + m) == drafts[m]:
+                m += 1
+            new_toks = [int(t) for t in drafts[:m]] + [greedy(r, base - 1 + m)]
+            if drafts:
+                self.tokens_drafted += len(drafts)
+                self.draft_tokens_accepted += m
+                self.spec_verifications += 1
+            kept = 0
+            finished = False
+            for tok in new_toks:
                 r.generated.append(tok)
                 r.feed.append(tok)
+                kept += 1
                 self.tokens_decoded += 1
                 if r.t_first_token == 0.0:
                     r.t_first_token = time.perf_counter()
                 if len(r.generated) >= r.max_new_tokens or tok == self.eos:
-                    self.scheduler.finish(r)
-                    self._finished.append(r)
+                    finished = True
+                    break
+            if drafts:
+                self.spec_tokens_emitted += kept
+            # cursor counts feed tokens resident in KV: the fed base plus
+            # the accepted drafts that stayed (the bonus token is never in
+            # KV — it is fed next step like any fresh decode token)
+            r.cursor += base + min(kept, m)
+            if finished:
+                self.scheduler.finish(r)
+                self._finished.append(r)
+            elif len(drafts) > m:
+                # roll back the rejected draft slots (and free any block
+                # that only held rejected tokens) so the KV watermark
+                # matches the accepted sequence exactly
+                self.kv.rewind(r.request_id, r.cursor)
         return decision
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
@@ -348,6 +459,18 @@ class PagedDecodeEngine:
             "tiled": int(self.tiled),
             "padding_efficiency": (self.scheduled_tokens
                                    / max(self.padded_tokens, 1)),
+            "spec": int(self.spec),
+            "kv_rewinds": self.kv.rewinds,
+            "kv_tokens_rewound": self.kv.tokens_rewound,
+            "tokens_drafted": self.tokens_drafted,
+            "draft_tokens_accepted": self.draft_tokens_accepted,
+            "spec_verifications": self.spec_verifications,
+            # accepted drafts + bonus per verification; 1.0 = speculation
+            # never pays off, k+1 = every draft lands
+            "accepted_per_spec_step": (self.spec_tokens_emitted
+                                       / max(self.spec_verifications, 1)),
+            "draft_acceptance_rate": (self.draft_tokens_accepted
+                                      / max(self.tokens_drafted, 1)),
         }
 
 

@@ -7,6 +7,16 @@ a ``num_scheduled_tokens`` count under one shared budget:
 
   * **decode** lanes (next step emits a new token) are served first at one
     token each — cheap, so a flood of long prompts can never starve them;
+    with a speculative :class:`~repro.serving.spec.Proposer` wired
+    (``draft_k > 0``) a decode lane additionally schedules up to ``k``
+    draft tokens as one ``1 + k``-token segment (the engine verifies them
+    against the model's own argmax in the same step); drafted tokens count
+    against the step's token budget like any other scheduled token, but a
+    rejected draft never advances the request — one budget token is
+    reserved per still-unserved decode lane, per running prefill lane,
+    and per pending admission with a free lane, so drafts can never
+    starve a sibling decode, stall a mid-prompt request, or gate
+    admissions indefinitely;
   * **prefill** lanes (still consuming their prompt / replaying after
     preemption) take chunks of up to ``chunk_tokens`` from the remaining
     budget — a long prompt is consumed in a few chunked steps instead of
@@ -94,21 +104,41 @@ class SchedulerConfig:
     # derived from the decision by serving/batch.py — one segment per
     # scheduled request, so a step never has more segments than lanes.
     fill_to_bucket: bool = False
+    # speculative decode: when a proposer is set and draft_k > 0, each
+    # decode lane is offered up to draft_k draft tokens per step (see the
+    # module docstring for the budget interaction)
+    draft_k: int = 0
+    proposer: Optional[object] = None      # repro.serving.spec.Proposer
 
 
 @dataclasses.dataclass
 class StepDecision:
     scheduled: List[Request]
     # request_id -> tokens scheduled this step (>= 1 for every scheduled
-    # request; decode lanes get exactly 1)
+    # request; decode lanes get 1 + their draft count)
     num_scheduled: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # request_id -> this step's speculative draft tokens (decode lanes
+    # only; absent = no drafts).  A lane's scheduled segment is its feed
+    # slice followed by these drafts — num_scheduled counts both.
+    drafts: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
     n_prefill: int = 0
     n_decode: int = 0
     n_prefill_tokens: int = 0
     n_decode_tokens: int = 0
+    n_draft_tokens: int = 0          # drafted tokens scheduled this step
     n_admitted: int = 0
     n_preempted: int = 0
     prefix_cached_tokens: int = 0    # feed tokens skipped via prefix sharing
+
+    def segment_tokens(self, req: Request) -> List[int]:
+        """The token ids of ``req``'s scheduled segment, in stream order:
+        its feed slice, extended by its draft tokens when it is a
+        speculative decode lane."""
+        n = self.num_scheduled[req.request_id]
+        toks = [int(t) for t in req.feed[req.cursor:req.cursor + n]]
+        if len(toks) < n:
+            toks += self.drafts.get(req.request_id, [])[:n - len(toks)]
+        return toks
 
 
 class Scheduler:
@@ -181,6 +211,7 @@ class Scheduler:
         if victim in scheduled:
             scheduled.remove(victim)
         decision.num_scheduled.pop(victim.request_id, None)
+        decision.drafts.pop(victim.request_id, None)
         self.waiting.appendleft(victim)        # resume as soon as possible
         decision.n_preempted += 1
         self.total_preemptions += 1
@@ -193,14 +224,45 @@ class Scheduler:
         chunk = self._chunk()
         scheduled: List[Request] = []
 
-        # decodes first (1 token each): never starved by prefill chunks
-        for r in self.running:
+        # decodes first (1 token each, plus speculative drafts): never
+        # starved by prefill chunks.  Draft budgeting is fair: one budget
+        # token is reserved for every decode lane still unserved behind
+        # this one (a greedy 1+k segment can never push a sibling decode
+        # out of the step, which would otherwise starve it forever — the
+        # starved lane stays a decode next step too), for every running
+        # prefill lane (drafts never reduce a mid-prompt request below
+        # the one-token-per-step progress floor it had before speculation
+        # existed), and for one admission when a request is waiting on a
+        # free lane (a pure-decode fleet regenerates its decode state
+        # every step, so without the reserve full-budget draft segments
+        # would gate admissions on a lane finishing).
+        decodes = [r for r in self.running if r.is_decode]
+        reserve = (len(self.running) - len(decodes)
+                   + (1 if self.waiting and None in self.lanes else 0))
+        for i, r in enumerate(decodes):
             if budget_left <= 0:
                 break
-            if r.is_decode:
-                scheduled.append(r)
-                decision.num_scheduled[r.request_id] = 1
-                budget_left -= 1
+            drafts: List[int] = []
+            if self.cfg.proposer is not None and self.cfg.draft_k > 0:
+                # cap drafts by the fair budget share, the per-seq KV
+                # ceiling (a draft past it could never be appended), and
+                # the request's own remaining output (accepting more than
+                # remaining - 1 drafts is wasted work: the bonus token
+                # already covers the last slot)
+                room = (self.kv.max_blocks_per_seq * self.kv.block_size
+                        - (r.cursor + 1))
+                want = min(self.cfg.draft_k,
+                           budget_left - 1 - (len(decodes) - i - 1)
+                           - reserve,
+                           room, r.max_new_tokens - len(r.generated) - 1)
+                if want > 0:
+                    drafts = [int(t) for t in
+                              self.cfg.proposer.propose(r.feed, want)][:want]
+            scheduled.append(r)
+            decision.num_scheduled[r.request_id] = 1 + len(drafts)
+            if drafts:
+                decision.drafts[r.request_id] = drafts
+            budget_left -= 1 + len(drafts)
         # prefill chunks from the remaining budget
         for r in self.running:
             if budget_left <= 0:
@@ -240,6 +302,7 @@ class Scheduler:
             if req not in scheduled:           # evicted by an earlier lane
                 continue
             n = decision.num_scheduled[req.request_id]
+            toks = decision.segment_tokens(req)
             k = 0
             while k < n:
                 self_blocked = False
@@ -260,11 +323,16 @@ class Scheduler:
                             "victim remains")
                     self._preempt(req, decision, scheduled)
                     break
-                self.kv.append_token(req.request_id,
-                                     req.feed[req.cursor + k])
+                self.kv.append_token(req.request_id, toks[k])
                 k += 1
-            if req in scheduled:
+            if req in scheduled and k < n:
+                # mid-chunk truncation: a prefill chunk keeps its first k
+                # tokens; a speculative decode keeps its mandatory feed
+                # token plus the first k - 1 drafts
                 decision.num_scheduled[req.request_id] = k
+                drafts = decision.drafts.pop(req.request_id, None)
+                if drafts is not None and k > 1:
+                    decision.drafts[req.request_id] = drafts[:k - 1]
 
         decision.scheduled = scheduled
         for r in scheduled:
@@ -272,6 +340,8 @@ class Scheduler:
             if r.is_decode:
                 decision.n_decode += 1
                 decision.n_decode_tokens += n
+                decision.n_draft_tokens += len(
+                    decision.drafts.get(r.request_id, ()))
             else:
                 decision.n_prefill += 1
                 decision.n_prefill_tokens += n

@@ -1,5 +1,11 @@
-"""Block allocator + KV cache manager invariants (alloc/free/refcount)."""
+"""Block allocator + KV cache manager invariants (alloc/free/refcount),
+including the speculative-decode rewind: after any propose/verify/rewind
+sequence the pool must look exactly as if only the accepted tokens had
+ever been appended — no orphaned or double-freed blocks, no stale prefix
+cache entries, CoW-shared blocks never rewound in place."""
 import pytest
+
+from _hyp import given, settings, st
 
 from repro.serving import BlockAllocator, KVCacheManager, NULL_BLOCK
 
@@ -133,3 +139,194 @@ def test_full_prefix_match_accounts_for_cow_block():
     assert t.n_tokens(1) == 4
     assert t.evictions == 1
     t.free(1)
+
+
+# ---------------------------------------------------------------------------
+# speculative-decode rewind
+# ---------------------------------------------------------------------------
+def _pool_state(m: KVCacheManager, seq_ids):
+    """Content-addressed snapshot of everything rewind must keep honest:
+    physical block ids differ between managers with different allocation
+    histories, so compare counts, per-seq hash state, per-seq refcount
+    shapes, and the digest set of the prefix cache."""
+    return {
+        "free": m.num_free_blocks,
+        "allocated": m.allocator.num_allocated,
+        "lru": len(m._lru),
+        "cached": set(m._cached),
+        "seqs": {
+            sid: (m.n_tokens(sid), len(m.block_table(sid)),
+                  tuple(m._seqs[sid].digests),
+                  tuple(m._seqs[sid].pending or ()),
+                  tuple(m.allocator.refcount(b)
+                        for b in m.block_table(sid)))
+            for sid in seq_ids if m.has_seq(sid)
+        },
+    }
+
+
+def test_rewind_frees_draft_only_blocks():
+    m = KVCacheManager(16, 4, max_blocks_per_seq=4)
+    m.allocate(0, 0)
+    for t in range(6):                       # 6 accepted tokens, 2 blocks
+        m.append_token(0, t)
+    free_before = m.num_free_blocks
+    for t in range(5):                       # 5 drafts -> 11 tokens, 3 blocks
+        m.append_token(0, 100 + t)
+    assert m.num_free_blocks == free_before - 1
+    m.rewind(0, 6)                           # all drafts rejected
+    assert m.n_tokens(0) == 6
+    assert len(m.block_table(0)) == 2
+    assert m.num_free_blocks == free_before  # draft-only block came back
+    with pytest.raises(ValueError):
+        m.rewind(0, 7)                       # forward "rewind" is nonsense
+    m.rewind(0, 6)                           # no-op rewind is fine
+    m.free(0)
+    assert m.num_free_blocks == 15           # no leak, no double free
+
+
+def test_rewind_across_block_boundary_rehashes_cleanly():
+    """Rejecting drafts that completed (and cache-registered) a full block
+    must un-register it and rebuild the partial-block hash state, so
+    re-appending the ACCEPTED continuation re-registers content-correct
+    digests — the cache looks as if the drafts never happened."""
+    bs = 4
+    ref = KVCacheManager(16, bs, max_blocks_per_seq=4,
+                         enable_prefix_cache=True)
+    m = KVCacheManager(16, bs, max_blocks_per_seq=4,
+                       enable_prefix_cache=True)
+    feed = list(range(6))
+    for mgr in (ref, m):
+        mgr.begin_seq(0, feed)
+        for t in feed[mgr.n_tokens(0):]:
+            mgr.append_token(0, t)
+    # m speculates 4 drafts (completing block 1 and starting block 2),
+    # verification accepts 1 of them (token 50) + bonus
+    for t in (50, 51, 52, 53):
+        m.append_token(0, t)
+    assert len(m._cached) == 2               # draft content got registered
+    m.rewind(0, 7)
+    # replay the accepted continuation on both managers
+    for mgr in (ref, m):
+        if mgr is ref:
+            mgr.append_token(0, 50)
+        for t in (60, 61, 62):
+            mgr.append_token(0, t)
+    assert _pool_state(m, [0]) == _pool_state(ref, [0])
+    assert len(m._cached) == 2               # blocks 0 and 1, accepted content
+
+
+def test_rewind_never_mutates_cow_shared_blocks():
+    """A forked (refcount-shared) tail is never rewound in place: the
+    rewinding side only drops its reference, and its next append
+    copy-on-writes away from the still-shared block."""
+    m = KVCacheManager(16, 2, max_blocks_per_seq=6)
+    m.allocate(0, 0)
+    for t in range(4):
+        m.append_token(0, t)                 # 2 full blocks, aligned
+    m.fork(0, 1)
+    shared = m.block_table(0)
+    assert m.block_table(1) == shared
+    # seq 1 speculates into a fresh block, then rejects everything
+    m.append_token(1, 10)
+    m.append_token(1, 11)
+    assert m.block_table(1)[:2] == shared    # shared prefix untouched
+    m.rewind(1, 4)
+    assert m.block_table(1) == shared
+    assert [m.allocator.refcount(b) for b in shared] == [2, 2]
+    # rewind INTO the shared region: only drops seq 1's references
+    m.rewind(1, 2)
+    assert m.block_table(1) == shared[:1]
+    assert [m.allocator.refcount(b) for b in shared] == [2, 1]
+    # seq 0 still owns its full table; writing on seq 1's side CoWs
+    m.append_token(1, 99)
+    assert m.block_table(1)[1] != shared[1]
+    assert m.n_tokens(0) == 4 and m.block_table(0) == shared
+    m.free(0)
+    m.free(1)
+    assert m.num_free_blocks == 15
+
+
+def _drive_rewind_replay(seed, num_blocks, block_size, n_seqs, n_rounds):
+    """The rollback invariant: a manager that speculates (appends drafts,
+    then rewinds to the accepted watermark) must end every round in a
+    state indistinguishable from a fresh manager replaying ONLY the
+    accepted tokens — refcounts, free/LRU sizes, prefix-cache digests,
+    per-seq hash state.  The replay mirrors the original admission/append
+    split (same ``begin_seq`` feed, then the accepted continuation) so
+    the two managers see identical non-speculative histories."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    mb = 6
+    spec = KVCacheManager(num_blocks, block_size, max_blocks_per_seq=mb,
+                          enable_prefix_cache=True)
+    log = []          # ("admit", sid, feed) / ("extend", sid, toks) /
+    #                   ("free", sid) — the accepted-only history
+    for sid in range(n_seqs):
+        plen = rng.integers(1, min(8, mb * block_size - 3))
+        feed = [int(t) for t in rng.integers(0, 5, plen)]
+        if not spec.can_admit(feed):
+            continue
+        start = spec.begin_seq(sid, feed)
+        for t in feed[start:]:
+            spec.append_token(sid, t)
+        log.append(("admit", sid, feed))
+        for _ in range(n_rounds):
+            room = mb * block_size - spec.n_tokens(sid)
+            k = int(rng.integers(0, min(4, room) + 1))
+            if spec.allocator.num_free < k:
+                k = 0     # keep draft appends off the eviction path: an
+                #           eviction forced by a later-rejected draft is a
+                #           real (and acceptable) spec-vs-replay divergence
+            drafts = [int(t) for t in rng.integers(0, 5, k)]
+            base = spec.n_tokens(sid)
+            for t in drafts:
+                spec.append_token(sid, t)
+            m = int(rng.integers(0, len(drafts) + 1))     # accepted prefix
+            spec.rewind(sid, base + m)
+            if m:
+                log.append(("extend", sid, drafts[:m]))
+        if rng.random() < 0.3:
+            spec.free(sid)
+            log.append(("free", sid))
+    spec.take_copy_ops()
+    replay = KVCacheManager(num_blocks, block_size, max_blocks_per_seq=mb,
+                            enable_prefix_cache=True)
+    for op, sid, *rest in log:
+        if op == "admit":
+            start = replay.begin_seq(sid, rest[0])
+            for t in rest[0][start:]:
+                replay.append_token(sid, t)
+        elif op == "extend":
+            for t in rest[0]:
+                replay.append_token(sid, t)
+        else:
+            replay.free(sid)
+    replay.take_copy_ops()
+    assert _pool_state(spec, range(n_seqs)) == \
+        _pool_state(replay, range(n_seqs))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    num_blocks=st.integers(8, 40),
+    block_size=st.sampled_from([1, 2, 4]),
+    n_seqs=st.integers(1, 5),
+    n_rounds=st.integers(1, 5),
+)
+def test_fuzz_rewind_matches_accepted_only_replay(seed, num_blocks,
+                                                  block_size, n_seqs,
+                                                  n_rounds):
+    """Hypothesis sweep of the rollback invariant (prefix sharing across
+    sequences, partial accepts at every alignment, interleaved frees)."""
+    _drive_rewind_replay(seed, num_blocks, block_size, n_seqs, n_rounds)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_rewind_matches_accepted_only_replay_pinned(seed):
+    """No-hypothesis slice of the rollback-replay fuzz (CI runs the full
+    randomized sweep)."""
+    _drive_rewind_replay(seed, num_blocks=10 + 4 * seed,
+                         block_size=(1, 2, 4)[seed % 3],
+                         n_seqs=1 + seed % 4, n_rounds=1 + seed % 5)

@@ -4,11 +4,14 @@ The ragged engine (one 1-D stream of all scheduled tokens per step, no
 ``(lanes, chunk_width)`` rectangle) must be **token-identical** to both the
 dense-slot reference engine and the rectangular paged engine under every
 combination of arrival schedule, prompt lengths, token budgets, chunk
-widths, preemption pressure, and prefix sharing — in both attention grids:
-the default **segment-tiled** grid (KV swept once per q-tile) and the
-per-token baseline (``tiled=False``).  The hypothesis fuzz test drives
-randomized workloads end-to-end through both engines; the plain tests pin
-the named regressions.
+widths, preemption pressure, prefix sharing, and **speculative decode**
+(``spec``/``draft_k`` are fuzz dimensions: n-gram drafts verified by the
+step's own argmax, with KV rewind of rejected slots) — in both attention
+grids: the default **segment-tiled** grid (KV swept once per q-tile) and
+the per-token baseline (``tiled=False``).  The hypothesis fuzz test
+drives randomized workloads end-to-end through both engines; the plain
+tests pin the named regressions, including the speculative accept corners
+(all-accept, all-reject, partial accept straddling a block boundary).
 """
 import jax
 import jax.numpy as jnp
@@ -19,8 +22,8 @@ from _hyp import given, settings, st
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import (DecodeEngine, PagedDecodeEngine, RaggedBatch,
-                           SlotDecodeEngine)
+from repro.serving import (DecodeEngine, PagedDecodeEngine, Proposer,
+                           RaggedBatch, SlotDecodeEngine)
 
 
 @pytest.fixture(scope="module")
@@ -50,6 +53,7 @@ def test_ragged_is_default_paged_layout(model):
     eng = DecodeEngine(api, params, n_slots=2, **COMMON)
     assert isinstance(eng, PagedDecodeEngine) and eng.ragged
     assert eng.tiled                 # segment-tiled grid is the default
+    assert eng.spec                  # speculative decode is the default
     rect = PagedDecodeEngine(api, params, n_slots=2, ragged=False, **COMMON)
     assert not rect.ragged and not rect.tiled
     pertok = PagedDecodeEngine(api, params, n_slots=2, tiled=False, **COMMON)
@@ -57,6 +61,8 @@ def test_ragged_is_default_paged_layout(model):
     with pytest.raises(ValueError):  # tiling needs the flat stream
         PagedDecodeEngine(api, params, n_slots=2, ragged=False, tiled=True,
                           **COMMON)
+    nospec = PagedDecodeEngine(api, params, n_slots=2, draft_k=0, **COMMON)
+    assert not nospec.spec           # draft_k=0 pins plain decode too
 
 
 def test_ragged_engine_token_identical_to_slot_engine(model):
@@ -175,11 +181,14 @@ def test_ragged_padding_efficiency_beats_rect_on_mixed_load(model):
 # ---------------------------------------------------------------------------
 def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
-                        tiled=True, tile=8):
+                        tiled=True, tile=8, spec=False, draft_k=4):
     """One randomized workload through ragged-paged vs dense-slot engines,
     asserting token identity end-to-end (shared by the hypothesis fuzz and
     the pinned no-hypothesis cases).  ``tiled`` selects the attention
-    grid: the segment-tiled sweep (default) or the per-token baseline."""
+    grid: the segment-tiled sweep (default) or the per-token baseline;
+    ``spec``/``draft_k`` turn on speculative multi-token decode (n-gram
+    drafts + verification + KV rewind), which must never change a single
+    output token."""
     cfg, api, params = model
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
@@ -202,8 +211,9 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                            chunk_tokens=chunk_tokens,
                            token_budget=token_budget, num_blocks=pool,
                            prefix_cache=prefix, tiled=tiled, tile=tile,
+                           spec=spec, draft_k=draft_k,
                            **COMMON)
-    assert re.ragged and re.tiled == tiled
+    assert re.ragged and re.tiled == tiled and re.spec == spec
     se = SlotDecodeEngine(api, params, n_slots=n_slots, **COMMON)
     assert re.max_blocks == max_blocks
     pending = list(zip(prompts, max_new))
@@ -234,34 +244,166 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     arrival_every=st.integers(1, 3),
     tiled=st.booleans(),
     tile=st.sampled_from([4, 8, 16]),
+    spec=st.booleans(),
+    draft_k=st.sampled_from([1, 2, 4]),
 )
 def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
                                              n_slots, chunk_tokens,
                                              token_budget, tight_pool,
                                              prefix, arrival_every,
-                                             tiled, tile):
+                                             tiled, tile, spec, draft_k):
     """Differential fuzz: random arrival times / prompt lengths / budgets /
-    preemption pressure / attention grid (segment-tiled vs per-token)
-    driven through the ragged-paged engine vs the dense-slot oracle,
-    asserting token identity end-to-end."""
+    preemption pressure / attention grid (segment-tiled vs per-token) /
+    speculative decode (spec + draft_k) driven through the ragged-paged
+    engine vs the dense-slot oracle, asserting token identity
+    end-to-end."""
     _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
-                        tiled, tile)
+                        tiled, tile, spec, draft_k)
 
 
 @pytest.mark.parametrize("case", [
-    # seed, n_req, slots, chunk, budget, tight, prefix, arrival, tiled, tile
+    # seed, n_req, slots, chunk, budget, tight, prefix, arrival, tiled,
+    # tile, spec, draft_k
     (3, 4, 2, 3, 5, True, False, 2, True, 4),   # tight pool + tiny budget
     (7, 5, 3, 8, 0, False, True, 1, True, 16),  # prefix sharing, burst
     (11, 3, 1, 1, 0, True, True, 3, True, 8),   # serial lane, 1-tok chunks
     (3, 4, 2, 3, 5, True, False, 2, False, 8),  # per-token grid baseline
     (7, 5, 3, 8, 0, False, True, 1, False, 8),  # per-token + prefix CoW
+    # speculative decode rides every harness knob the baseline does
+    (3, 4, 2, 3, 5, True, False, 2, True, 4, True, 4),   # spec + tight pool
+    (7, 5, 3, 8, 0, False, True, 1, True, 16, True, 2),  # spec + prefix CoW
+    (5, 4, 2, 8, 7, True, True, 2, True, 8, True, 4),    # spec + budget 7
+    (9, 4, 2, 6, 0, False, False, 1, False, 8, True, 1), # spec, per-token
 ])
 def test_differential_pinned_cases_token_identity(model, case):
     """The fuzz harness's named corners, runnable without hypothesis (the
     container lacks the dev extra; CI runs the full randomized sweep) —
-    both attention grids ride through the same identity gate."""
+    both attention grids and the speculative path ride through the same
+    identity gate."""
     _drive_differential(model, *case)
+
+
+# ---------------------------------------------------------------------------
+# speculative decode: accept-rule corners, pinned without hypothesis
+# ---------------------------------------------------------------------------
+class _ScriptedProposer(Proposer):
+    """Test proposer with a known accept outcome: drafts the TRUE greedy
+    continuation (from a baseline run), corrupting every draft from depth
+    ``wrong_from`` on — so exactly ``wrong_from`` drafts are accepted per
+    verification (all of them when ``wrong_from`` is None)."""
+
+    def __init__(self, targets, wrong_from=None, vocab=2):
+        self.targets = [list(map(int, t)) for t in targets]
+        self.wrong_from = wrong_from
+        self.vocab = vocab
+
+    def propose(self, tokens, k):
+        toks = [int(t) for t in tokens]
+        for t in self.targets:
+            if len(t) > len(toks) and t[:len(toks)] == toks:
+                out = t[len(toks):len(toks) + k]
+                if self.wrong_from is not None:
+                    out = [x if i < self.wrong_from
+                           else (x + 1) % self.vocab
+                           for i, x in enumerate(out)]
+                return out
+        return []
+
+
+def _run_spec_slice(model, wrong_from, *, draft_k=4, max_new=10,
+                    prompt_len=6, block_size=4, n_requests=3):
+    """Drive the spec engine with a scripted proposer against the
+    dense-slot oracle; returns the engine for slice-specific stats
+    asserts.  Geometry: prompt_len=6 with block_size=4 puts the first
+    verification window (positions 6..10) astride the block boundary at
+    8, so partial accepts rewind across it."""
+    cfg, api, params = model
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_requests)]
+    base = SlotDecodeEngine(api, params, n_slots=n_requests, **COMMON)
+    for p in prompts:
+        base.submit(p, max_new)
+    ref = {r.request_id: r.generated for r in base.run_until_drained()}
+    targets = [list(map(int, p)) + ref[i] for i, p in enumerate(prompts)]
+    eng = PagedDecodeEngine(
+        api, params, n_slots=n_requests, block_size=block_size,
+        prefix_cache=False, spec=True, draft_k=draft_k,
+        proposer=_ScriptedProposer(targets, wrong_from=wrong_from,
+                                   vocab=cfg.vocab_size),
+        **COMMON)
+    for p in prompts:
+        eng.submit(p, max_new)
+    got = {r.request_id: r.generated for r in eng.run_until_drained()}
+    assert got == ref                       # token identity, always
+    # drained pool: every block back, none orphaned or double-freed
+    assert eng.kv.num_free_blocks == eng.num_blocks - 1
+    assert eng.kv.allocator.num_allocated == 0
+    return eng
+
+
+def test_spec_all_accept_token_identical(model):
+    """Every draft matches the model's argmax: verification accepts whole
+    windows, no rewinds, several tokens per decode emission — outputs
+    still exactly match the oracle."""
+    eng = _run_spec_slice(model, wrong_from=None)
+    s = eng.stats()
+    assert s["tokens_drafted"] > 0
+    assert s["draft_tokens_accepted"] == s["tokens_drafted"]
+    assert s["accepted_per_spec_step"] > 1.5
+    assert s["kv_rewinds"] == 0             # nothing to roll back
+    assert eng.steps < 3 * eng.n_slots + eng.stats()["tokens_decoded"]
+
+
+def test_spec_all_reject_token_identical(model):
+    """Every draft is wrong: each verification degrades to exactly the
+    plain one-token decode (bonus token only), every draft slot is
+    rewound, and blocks that only held rejected drafts return to the
+    pool."""
+    eng = _run_spec_slice(model, wrong_from=0)
+    s = eng.stats()
+    assert s["tokens_drafted"] > 0
+    assert s["draft_tokens_accepted"] == 0
+    assert s["accepted_per_spec_step"] == 1.0
+    assert s["kv_rewinds"] == s["spec_verifications"]
+    assert s["kv_tokens_rewound"] == s["tokens_drafted"]
+    assert eng.kv.blocks_rewound > 0        # draft-only blocks were freed
+
+
+def test_spec_partial_accept_straddles_block_boundary(model):
+    """One draft accepted per window: the accept watermark (8 tokens on
+    the first verification) lands exactly on the 4-token block boundary
+    while the rejected drafts spill into the next block — the rewind
+    frees that block without touching the accepted one."""
+    eng = _run_spec_slice(model, wrong_from=1)
+    s = eng.stats()
+    assert 0 < s["draft_tokens_accepted"] < s["tokens_drafted"]
+    assert s["kv_rewinds"] > 0
+    assert eng.kv.blocks_rewound > 0
+    # every emission = 1 accepted draft + the bonus token
+    assert s["accepted_per_spec_step"] == 2.0
+
+
+def test_spec_engine_token_identical_to_nonspec_engine(model):
+    """The spec=False baseline pins today's one-token-per-step decode;
+    the speculative engine (default n-gram proposer) must reproduce its
+    outputs exactly while taking no more engine steps."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=3, hi=10, seed=23)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=8, **COMMON)
+    sp = PagedDecodeEngine(api, params, spec=True, draft_k=4, **kw)
+    ns = PagedDecodeEngine(api, params, spec=False, **kw)
+    assert sp.spec and not ns.spec
+    for p in prompts:
+        sp.submit(p, 16)
+        ns.submit(p, 16)
+    done_s = {r.request_id: r.generated for r in sp.run_until_drained()}
+    done_n = {r.request_id: r.generated for r in ns.run_until_drained()}
+    assert done_s == done_n and len(done_s) == len(prompts)
+    assert sp.steps <= ns.steps
+    # the smoke model's greedy tails repeat, so n-gram lookup must land
+    assert sp.stats()["draft_tokens_accepted"] > 0
 
 
 def _check_scheduler_flat_invariants(seed, n_lanes, token_budget,

@@ -429,3 +429,195 @@ def test_fill_to_bucket_padding_becomes_real_prefill_under_tiling():
     real = tm.meta[:, :tm.n_tiles]
     assert (real[TILE_HI] - real[TILE_LO]).sum() == 256
     assert np.array_equal(tm.cu_seqlens, np.asarray([0, 1, 256]))
+
+
+# ---------------------------------------------------------------------------
+# speculative draft scheduling (budget / flat-slot / fill interactions)
+# ---------------------------------------------------------------------------
+from repro.serving import Proposer  # noqa: E402
+
+
+class _FixedProposer(Proposer):
+    """Deterministic test proposer: always offers the same draft tokens."""
+
+    def __init__(self, drafts):
+        self.drafts = list(drafts)
+
+    def propose(self, tokens, k):
+        return self.drafts[:k]
+
+
+def make_spec(n_lanes=2, num_blocks=65, block_size=2, max_blocks=16,
+              token_budget=0, draft_k=4, drafts=(7, 8, 9, 7, 8, 9)):
+    kv = KVCacheManager(num_blocks, block_size,
+                        max_blocks_per_seq=max_blocks)
+    sched = Scheduler(SchedulerConfig(n_lanes=n_lanes,
+                                      token_budget=token_budget,
+                                      chunk_tokens=8,
+                                      draft_k=draft_k,
+                                      proposer=_FixedProposer(drafts)), kv)
+    return sched, kv
+
+
+def advance_spec(sched, kv, decision):
+    """Engine stand-in under speculation: consume the fed tokens, accept
+    no drafts (emit only the bonus token), and rewind the rejected draft
+    slots — the contract the real engine honors after verification."""
+    for r in decision.scheduled:
+        n = decision.num_scheduled[r.request_id]
+        k = len(decision.drafts.get(r.request_id, []))
+        if r.cursor + (n - k) == len(r.feed):
+            r.generated.append(0)
+            r.feed.append(0)
+        r.cursor += n - k
+        if kv.has_seq(r.request_id):
+            kv.rewind(r.request_id, r.cursor)
+
+
+def to_decode(sched, kv, rid=0, plen=1):
+    """Admit a request and advance it to its first decode step."""
+    r = req(rid, plen=plen, max_new=8)
+    sched.add(r)
+    while not r.is_decode or r.lane is None:
+        d = sched.schedule()
+        advance_spec(sched, kv, d)
+    return r
+
+
+def test_decode_lane_with_drafts_occupies_1_plus_k_flat_slots():
+    """A speculating decode lane schedules (and KV-reserves) 1 + k tokens
+    and its flat segment carries the feed token followed by the drafts."""
+    sched, kv = make_spec(draft_k=3)
+    r = to_decode(sched, kv)
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 4                 # 1 feed + 3 drafts
+    assert d.drafts[0] == [7, 8, 9]
+    assert d.n_decode_tokens == 4 and d.n_draft_tokens == 3
+    assert kv.n_tokens(0) == r.cursor + 4          # every draft has a slot
+    batch = RaggedBatch.build(d, kv, 2, 2, cap=sched._budget())
+    assert batch.seg_lens[0] == 4
+    assert batch.seg_drafts[0] == 3
+    assert batch.n_draft_tokens == 3
+    seg = batch.tokens[batch.q_starts[0]:batch.q_starts[0] + 4].tolist()
+    assert seg == [r.feed[r.cursor]] + [7, 8, 9]
+    # consecutive positions: verification rows are ordinary chunk rows
+    pos = batch.token_pos[batch.q_starts[0]:batch.q_starts[0] + 4]
+    assert pos.tolist() == list(range(r.cursor, r.cursor + 4))
+
+
+def test_rejected_drafts_charge_budget_not_progress():
+    """Drafted-but-rejected tokens consume the step's token budget (and
+    KV slots) but the request's progress only advances by what the engine
+    accepts — after a full rejection + rewind the next step re-schedules
+    from the same cursor."""
+    sched, kv = make_spec(n_lanes=2, token_budget=6, draft_k=4)
+    r = to_decode(sched, kv)
+    cursor0 = r.cursor
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 5                 # 1 + 4 drafts
+    assert sum(d.num_scheduled.values()) <= 6      # budget includes drafts
+    assert kv.n_tokens(0) == cursor0 + 5
+    # engine verdict: all drafts rejected -> emit 1 bonus token, rewind
+    r.generated.append(0)
+    r.feed.append(0)
+    r.cursor = cursor0 + 1
+    kv.rewind(0, r.cursor)
+    assert kv.n_tokens(0) == cursor0 + 1
+    d = sched.schedule()                           # same point, drafts again
+    assert d.num_scheduled[0] == 5
+    assert kv.n_tokens(0) == cursor0 + 2 + 4
+
+
+def test_draft_budget_is_fair_across_decode_lanes():
+    """A greedy 1+k draft segment must never starve a sibling decode lane
+    out of the step: with budget 6 and 3 decode lanes, every lane decodes
+    and the draft budget shrinks to what is left."""
+    sched, kv = make_spec(n_lanes=3, token_budget=6, draft_k=8)
+    for rid in range(3):                           # admitted in one step
+        sched.add(req(rid, plen=1, max_new=50))
+    d = sched.schedule()
+    assert d.n_admitted == 3
+    advance_spec(sched, kv, d)                     # all three now decode
+    d = sched.schedule()
+    assert len(d.scheduled) == 3
+    assert all(d.num_scheduled[rid] >= 1 for rid in range(3))
+    assert sum(d.num_scheduled.values()) <= 6
+    # lane order: the first decode lane gets the spare draft budget
+    assert d.num_scheduled[0] == 4                 # 6 - 2 reserved siblings
+    assert d.num_scheduled[1] == 1 and d.num_scheduled[2] == 1
+
+
+def test_drafts_capped_by_remaining_output():
+    """A request one token from max_new_tokens proposes no drafts (the
+    bonus token already finishes it); nearly-done requests cap k."""
+    sched, kv = make_spec(draft_k=4)
+    r = to_decode(sched, kv)
+    r.max_new_tokens = len(r.generated) + 1        # exactly one to go
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 1 and 0 not in d.drafts
+    advance_spec(sched, kv, d)
+    r.max_new_tokens = len(r.generated) + 3        # room for 2 drafts
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 3 and d.drafts[0] == [7, 8]
+
+
+def test_draft_budget_reserves_prefill_and_admission_floor():
+    """Drafts must never starve the rest of the system: a running
+    prefill lane keeps its one-token-per-step progress floor, and a
+    waiting request with a free lane still gets admitted — even when a
+    decode lane could drink the whole budget as drafts."""
+    sched, kv = make_spec(n_lanes=2, token_budget=8, draft_k=8)
+    r = req(0, plen=1, max_new=50)
+    sched.add(r)
+    d = sched.schedule()
+    advance_spec(sched, kv, d)                     # lane 0 now decodes
+    sched.add(req(1, plen=30, max_new=1))
+    d = sched.schedule()
+    # one budget token was reserved for the pending admission
+    assert d.n_admitted == 1
+    assert d.num_scheduled[0] == 7                 # 1 + (8 - 1 - reserve)
+    assert d.num_scheduled[1] >= 1
+    advance_spec(sched, kv, d)
+    d = sched.schedule()
+    # req 1 is now a RUNNING prefill lane: same floor, every step
+    assert d.num_scheduled[0] == 7
+    assert d.num_scheduled[1] >= 1
+    assert sum(d.num_scheduled.values()) <= 8
+
+
+def test_fill_to_bucket_tops_up_with_prefill_not_drafts():
+    """Bucket fill under speculation: the pow2 remainder is carried by
+    extending a PREFILL chunk; the draft segment itself never grows past
+    1 + draft_k."""
+    kv = KVCacheManager(129, 2, max_blocks_per_seq=64)
+    sched = Scheduler(SchedulerConfig(n_lanes=2, token_budget=64,
+                                      chunk_tokens=10, fill_to_bucket=True,
+                                      draft_k=2,
+                                      proposer=_FixedProposer([7, 8])), kv)
+    r = to_decode(sched, kv)
+    sched.add(req(1, plen=100, max_new=1))
+    d = sched.schedule()
+    # decode(1 + 2 drafts) + chunk(10) = 13 -> bucket 16: the prefill
+    # chunk grows by 3, the draft segment stays at 3
+    assert d.num_scheduled[0] == 3 and d.drafts[0] == [7, 8]
+    assert d.num_scheduled[1] == 13
+    assert sum(d.num_scheduled.values()) == 16
+
+
+def test_preempted_speculating_lane_drops_its_drafts():
+    """When the pool dries up and the speculating decode lane itself is
+    the victim's priority senior, draft slots are truncated before real
+    tokens: a drafts-with-no-pool step degrades toward plain decode."""
+    # pool: 3 usable blocks of 2; lane 0 decoding with 4 prompt tokens
+    # (2 blocks) wants 1 feed + 3 drafts (room-capped), but the 3rd draft
+    # would need a 4th block
+    sched, kv = make_spec(n_lanes=1, num_blocks=4, block_size=2,
+                          max_blocks=4, draft_k=4)
+    r = to_decode(sched, kv, plen=4)
+    d = sched.schedule()
+    # the segment truncates mid-chunk at the dry pool: the feed token and
+    # the first draft keep their slots, nobody is preempted
+    assert d.num_scheduled[0] == 2
+    assert d.drafts[0] == [7]
+    assert kv.n_tokens(0) == r.cursor + 2
+    assert d.n_preempted == 0 and r.lane is not None
