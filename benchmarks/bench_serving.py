@@ -34,6 +34,14 @@ Four scenario families, all at **equal physical KV budget**:
                        throughput and mean accepted tokens per
                        speculative verification — CI gates spec >=
                        nonspec and accepted_per_spec_step >= 1.0 here.
+  * ``disaggregated`` — the paper's edge<->DC split on the prefix-heavy
+                       fleet: prefill at the "DC", decode at the "edge",
+                       KV blocks shipped through the §4.1 transfer cost
+                       model, vs the same fleet on one engine.  Reports
+                       the content-addressed dedup savings (CI gates
+                       shipped bytes < naive bytes) and the crossover
+                       link bandwidth where the split starts winning,
+                       plus a turnaround-vs-bandwidth sweep.
 
 All scenarios except ``decode_heavy`` pin ``spec=False`` so their tracked
 rows stay comparable with earlier PRs.
@@ -87,6 +95,11 @@ DECODE_HEAVY_PROMPT = 6
 DECODE_HEAVY_NEW = 48
 DECODE_HEAVY_REQUESTS = 16
 DRAFT_K = 4
+
+# disaggregated scenario: modeled DCAI-vs-edge prefill speedup and the
+# link bandwidths (bytes/s) the turnaround sweep prices the shipments at
+DISAGG_DC_SPEEDUP = 8.0
+DISAGG_BW_SWEEP = (1e6, 1e7, 1e8, 1.25e9, 1e10)
 
 
 def _requests(vocab: int):
@@ -341,6 +354,78 @@ def _scenario_decode_heavy(api, params, vocab: int, quick: bool):
     return out
 
 
+def _scenario_disaggregated(api, params, vocab: int, quick: bool):
+    """The paper's split on the prefix-heavy fleet: one-engine serving vs
+    DC-prefill -> KV shipment -> edge-decode.  Both sides run identical
+    engine knobs (spec pinned off so the walls compare compute, not
+    speculation luck); the disaggregated run charges DC prefill as
+    modeled time (wall / DISAGG_DC_SPEEDUP), the shipments through the
+    §4.1 cost model, and edge decode for real.  Output tokens are
+    asserted identical to the one-engine drain."""
+    from repro.serving import DisaggregatedEngine, PagedDecodeEngine
+    rng = np.random.default_rng(5)
+    preamble = rng.integers(0, vocab, PREFIX_LEN).astype(np.int32)
+    n = max(6, PREFIX_REQUESTS // (2 if quick else 1))
+    reqs = [(np.concatenate([preamble,
+                             rng.integers(0, vocab,
+                                          int(rng.integers(4, 9)))
+                             .astype(np.int32)]), MAX_NEW)
+            for _ in range(n)]
+    lanes = 4 if quick else 8
+    pool = lanes * (CACHE_LEN // BLOCK_SIZE) + 1
+
+    def make():
+        return PagedDecodeEngine(api, params, n_slots=lanes,
+                                 cache_len=CACHE_LEN,
+                                 block_size=BLOCK_SIZE, num_blocks=pool,
+                                 chunk_tokens=CHUNK_TOKENS,
+                                 prefix_cache=True, spec=False)
+
+    one = make()
+    _warm(one, PREFIX_LEN + 6, vocab)
+    t0 = time.perf_counter()
+    ids = [one.submit(p, m) for p, m in reqs]
+    ref = {r.request_id: r.generated for r in one.run_until_drained()}
+    one_wall = time.perf_counter() - t0
+
+    pf, de = make(), make()
+    _warm(pf, PREFIX_LEN + 6, vocab)
+    _warm(de, PREFIX_LEN + 6, vocab)
+    dis = DisaggregatedEngine(pf, de, dc_speedup=DISAGG_DC_SPEEDUP)
+    dids = [dis.submit(p, m) for p, m in reqs]
+    done = {r.request_id: r.generated for r in dis.run_until_drained()}
+    assert [done[i] for i in dids] == [ref[i] for i in ids], \
+        "disaggregated output diverged from one-engine serving"
+    s = dis.stats()
+    crossover = dis.crossover_bandwidth(one_wall)
+    return {
+        "requests": n,
+        "token_identical": True,
+        "one_engine": {"wall_s": one_wall},
+        "disaggregated": {
+            "prefill_wall_s": s["prefill_wall"],
+            "decode_wall_s": s["decode_wall"],
+            "transfer_s": s["transfer_seconds"],
+            "turnaround_s": s["turnaround"],
+            "dc_speedup": DISAGG_DC_SPEEDUP,
+        },
+        "bytes_naive": int(s["bytes_naive"]),
+        "bytes_shipped": int(s["bytes_shipped"]),
+        "dedup_savings": s["dedup_savings"],
+        "blocks_exported": int(s["blocks_exported"]),
+        "blocks_dedup_skipped": int(s["blocks_dedup_skipped"]),
+        # smallest link bandwidth where the split beats one-engine serving;
+        # None when the per-shipment startup+RTT floor exceeds the modeled
+        # DC compute win (true at smoke-model scale: real prefill is
+        # milliseconds — see the floor below and examples/crossover_analysis)
+        "crossover_nic_bps": crossover,
+        "turnaround_floor_s": dis.priced_turnaround(1e18)["total"],
+        "turnaround_vs_bandwidth_s": {
+            f"{bw:.0e}": dis.priced_turnaround(bw)["total"]
+            for bw in DISAGG_BW_SWEEP},
+    }
+
+
 def _scenario_long_prompt(api, params, vocab: int, quick: bool):
     rng = np.random.default_rng(1)
     n = max(4, LONG_REQUESTS // (2 if quick else 1))
@@ -439,6 +524,7 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
     prefix_heavy = _scenario_prefix_heavy(api, params, cfg.vocab_size, quick)
     all_prefill = _scenario_all_prefill(api, params, cfg.vocab_size, quick)
     decode_heavy = _scenario_decode_heavy(api, params, cfg.vocab_size, quick)
+    disagg = _scenario_disaggregated(api, params, cfg.vocab_size, quick)
     ttft_speedup = (long_prompt["pr1"]["ttft_mean_s"]
                     / max(long_prompt["unified"]["ttft_mean_s"], 1e-9))
     tput_speedup = (prefix_heavy["unified"]["tok_s"]
@@ -477,6 +563,16 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
             f"accepted_per_step={r['accepted_per_spec_step']:.2f};"
             f"accept_rate={r['draft_acceptance_rate']:.2f};"
             f"rewinds={r['kv_rewinds']}")
+    xo = disagg["crossover_nic_bps"]
+    rows.append(
+        f"serving/disaggregated,0,"
+        f"one_engine_wall_s={disagg['one_engine']['wall_s']:.3f};"
+        f"turnaround_s={disagg['disaggregated']['turnaround_s']:.3f};"
+        f"transfer_s={disagg['disaggregated']['transfer_s']:.3f};"
+        f"bytes_shipped={disagg['bytes_shipped']};"
+        f"bytes_naive={disagg['bytes_naive']};"
+        f"dedup_savings={disagg['dedup_savings']:.2f};"
+        f"crossover_nic_bps={'none' if xo is None else f'{xo:.3g}'}")
     # scenario-aggregate padding efficiency (total real / total padded
     # across every arrival rate)
     pad_eff_ragged = pad_tokens["ragged"][0] / max(pad_tokens["ragged"][1], 1)
@@ -498,7 +594,8 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
             "scenarios": {"mixed": mixed, "long_prompt": long_prompt,
                           "prefix_heavy": prefix_heavy,
                           "all_prefill": all_prefill,
-                          "decode_heavy": decode_heavy},
+                          "decode_heavy": decode_heavy,
+                          "disaggregated": disagg},
             "speedups": {"ttft_long_prompt": ttft_speedup,
                          "throughput_prefix_heavy": tput_speedup,
                          "all_prefill_tiled_vs_rect": ap_tiled_vs_rect,

@@ -1,42 +1,178 @@
-"""Figure-4 style decision analysis (the paper's §4.2 'model based analysis').
+"""Crossover analysis: when does shipping work to the DC beat staying local?
 
-Uses the analytical cost model to decide, for a given experiment, whether to
-run conventional analysis or the ML-surrogate workflow — and shows how the
-decision shifts with the labeled fraction p and the DCAI training time.
+The paper answers this twice, and so does this walkthrough:
+
+  1. **§4.2, training** (the original Figure-4 analysis): conventional
+     peak analysis at the DC vs the ML-surrogate workflow, as a function
+     of the number of Bragg peaks N and the DCAI training time T.
+  2. **Serving** (this repo's extension): one-engine local serving vs
+     the disaggregated split — prefill in the data center, paged-KV
+     blocks over the WAN, decode at the edge.  Both sides of the
+     comparison come from *one* served fleet: `DisaggregatedEngine`
+     records every shipment, so `priced_turnaround(nic_bps)` re-prices
+     the run at any link bandwidth without re-running the model.  The
+     printed table is plot-ready turnaround-vs-bandwidth data, and
+     `crossover_bandwidth()` bisects for the break-even link.
+  3. **Serving at production scale** (modeled): the same §4.1 transfer
+     model applied to a 7B-class workload (GQA KV at fp16, long
+     prompts), where prefill is minutes, not milliseconds — the regime
+     the paper's deployment actually lives in, and where the split wins
+     decisively at the paper's 10 Gbps DTN link.
 
 Run: PYTHONPATH=src python examples/crossover_analysis.py
+See docs/ARCHITECTURE.md §5 for the wire-format and coordinator design.
 """
+import dataclasses
+import math
+import time
+
+import numpy as np
+
 from repro.core import build_system
+from repro.serving.transfer import edge_dc_topology
+
+# --- stage 2/3 knobs ------------------------------------------------------
+BW_SWEEP = (1e5, 1e6, 1e7, 1e8, 1.25e9, 1e10)   # bytes/s, DTN NIC = 1.25e9
+DC_SPEEDUP = 8.0                                 # modeled DCAI : edge ratio
+
+# --- stage 3: a 7B-class production workload (modeled) --------------------
+KV_BYTES_PER_TOKEN = 2 * 32 * 8 * 128 * 2   # k+v, 32 layers, GQA 8x128, fp16
+EDGE_PREFILL_TOK_S = 1_000.0                # edge-GPU 7B prefill throughput
+WIRE_BLOCK_TOKENS = 256                     # tokens per shipped payload file
+DECODE_S = 10.0                             # decode wall, identical both ways
 
 
-def main() -> None:
+def training_crossover() -> None:
+    """Stage 1: the paper's §4.2 model-based analysis, unchanged."""
     cm = build_system().costmodel
 
-    print("N peaks      conventional@DC   ML surrogate    winner")
+    print("[1] training crossover (paper §4.2, Figure-4 style)")
+    print("    N peaks    conventional@DC   ML surrogate    winner")
     for n in (10**4, 10**5, 10**6, 10**7, 10**8, 10**9):
         conv = cm.f_conventional_dc(n)
         ml = cm.f_ml(n, p=0.1)
         win = "ML" if ml.total < conv.total else "conventional"
-        print(f"{n:9.0e}   {conv.total:12.1f}s   {ml.total:12.1f}s    {win}")
-
-    n_star = cm.crossover(p=0.1)
-    print(f"\ncrossover N* = {n_star:,} peaks (p=10%, T=19s Cerebras)")
-
-    print("\nsensitivity:")
-    import dataclasses
+        print(f"    {n:7.0e}   {conv.total:12.1f}s   {ml.total:11.1f}s"
+              f"    {win}")
+    print(f"    crossover N* = {cm.crossover(p=0.1):,} peaks "
+          "(p=10%, T=19s Cerebras)")
     for p in (0.02, 0.05, 0.1, 0.2):
-        print(f"  p={p:4.2f}: N* = {cm.crossover(p=p):,}")
+        print(f"      p={p:4.2f}: N* = {cm.crossover(p=p):,}")
     names = {6.0: "Cerebras (CookieNetAE)", 19.0: "Cerebras (BraggNN)",
              139.0: "SambaNova 1-RDU", 1102.0: "local V100"}
     for t in (6.0, 19.0, 139.0, 1102.0):
         cm2 = build_system().costmodel
         cm2.costs = dataclasses.replace(cm2.costs, train=t)
-        print(f"  T={t:7.1f}s: N* = {cm2.crossover(p=0.1):,}  ({names[t]})")
+        print(f"      T={t:7.1f}s: N* = {cm2.crossover(p=0.1):,}"
+              f"  ({names[t]})")
 
-    # decision advice for a typical HEDM scan
-    for n in (5 * 10**5, 5 * 10**7):
-        print(f"\nadvise(N={n:.0e}): {cm.advise(n)}")
+
+def serving_crossover_measured() -> None:
+    """Stage 2: serve one fleet both ways, re-price across bandwidths."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import DisaggregatedEngine, PagedDecodeEngine
+
+    cfg = get_config("gemma-7b").smoke_variant()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    # a shared-preamble fleet (the federated real-time shape)
+    rng = np.random.default_rng(11)
+    preamble = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    prompts = [np.concatenate(
+        [preamble, rng.integers(0, cfg.vocab_size, 6).astype(np.int32)])
+        for _ in range(6)]
+
+    def make():
+        return PagedDecodeEngine(api, params, n_slots=2, cache_len=128,
+                                 block_size=8, chunk_tokens=16,
+                                 prefix_cache=True)
+
+    # pay jit compiles outside the timed comparison
+    warm = make()
+    for p in prompts:
+        warm.submit(p, 8)
+    warm.run_until_drained()
+
+    # one-engine baseline
+    base = make()
+    ids = [base.submit(p, 8) for p in prompts]
+    t0 = time.perf_counter()
+    ref = {r.request_id: r.generated for r in base.run_until_drained()}
+    base_wall = time.perf_counter() - t0
+
+    # disaggregated: same prompts, two engines, the §4.1 cost model
+    dis = DisaggregatedEngine(make(), make(), nic_bps=1.25e9,
+                              dc_speedup=DC_SPEEDUP)
+    rids = [dis.submit(p, 8) for p in prompts]
+    done = {r.request_id: r.generated for r in dis.run_until_drained()}
+    assert [done[r] for r in rids] == [ref[i] for i in ids]
+
+    s = dis.stats()
+    print(f"\n[2] serving crossover, measured (smoke model, "
+          f"{len(prompts)} requests)")
+    print(f"    token-identical to one-engine; dedup saved "
+          f"{s['dedup_savings']:.0%} of shipped bytes")
+    print("    link B/s     prefill_s  transfer_s  decode_s   total_s"
+          "   vs local")
+    for bw in BW_SWEEP:                       # plot-ready sweep data
+        t = dis.priced_turnaround(bw)
+        verdict = "split" if t["total"] <= base_wall else "local"
+        print(f"    {bw:8.0e}   {t['prefill']:9.3f} {t['transfer']:11.3f}"
+              f" {t['decode']:9.3f} {t['total']:9.3f}   {verdict}")
+    print(f"    one-engine baseline: {base_wall:.3f}s")
+    xo = dis.crossover_bandwidth(base_wall)
+    if xo is None:
+        floor = dis.priced_turnaround(1e18)["total"]
+        print(f"    crossover: none — infinite-bandwidth floor "
+              f"{floor:.3f}s still loses; serve locally at this scale")
+    else:
+        print(f"    crossover: split wins above {xo:.3g} B/s "
+              f"({'below' if xo <= 1.25e9 else 'ABOVE'} the paper's "
+              "1.25e9 B/s DTN link)")
+
+
+def _modeled_split(prompt_tokens: int, nic_bps: float) -> dict:
+    """Price a production-scale split with the §4.1 model.
+
+    Edge prefill wall is ``tokens / EDGE_PREFILL_TOK_S``; the DC runs it
+    ``DC_SPEEDUP``x faster; the prompt's KV
+    (``tokens * KV_BYTES_PER_TOKEN``) crosses the WAN as one manifest
+    plus one payload file per ``WIRE_BLOCK_TOKENS`` tokens, exactly how
+    `DisaggregatedEngine` files its shipments.
+    """
+    link = edge_dc_topology(nic_bps).link("dc", "edge")
+    prefill_edge = prompt_tokens / EDGE_PREFILL_TOK_S
+    n_files = 1 + math.ceil(prompt_tokens / WIRE_BLOCK_TOKENS)
+    conc = min(8, n_files)
+    xfer = (prompt_tokens * KV_BYTES_PER_TOKEN / link.effective_rate(conc)
+            + link.per_file_startup * math.ceil(n_files / conc)
+            + 2 * link.rtt)
+    local = prefill_edge + DECODE_S
+    split = prefill_edge / DC_SPEEDUP + xfer + DECODE_S
+    return {"local": local, "split": split, "transfer": xfer}
+
+
+def serving_crossover_modeled() -> None:
+    """Stage 3: the same model at production scale, where the split wins."""
+    print("\n[3] serving crossover, modeled (7B-class KV, "
+          f"{KV_BYTES_PER_TOKEN} B/token, edge prefill "
+          f"{EDGE_PREFILL_TOK_S:.0f} tok/s, DC {DC_SPEEDUP:.0f}x)")
+    print("    prompt tok    local_s    split_s   (transfer_s)   winner")
+    for n in (1_000, 10_000, 50_000, 100_000, 500_000):
+        m = _modeled_split(n, nic_bps=1.25e9)
+        win = "split" if m["split"] < m["local"] else "local"
+        print(f"    {n:10,} {m['local']:10.1f} {m['split']:10.1f}"
+              f"   ({m['transfer']:8.1f})     {win}")
+    m = _modeled_split(500_000, nic_bps=1.25e9)
+    print(f"    at the 500k-token long-prompt shape the split wins "
+          f"{m['local'] / m['split']:.1f}x on the paper's 10 Gbps link")
 
 
 if __name__ == "__main__":
-    main()
+    training_crossover()
+    serving_crossover_measured()
+    serving_crossover_modeled()
+    print("crossover_analysis OK")

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Fail CI when figures quoted in the docs drift from BENCH_serving.json.
+
+The README and docs/ARCHITECTURE.md quote representative benchmark
+numbers ("~0.91 padding efficiency", "5.7x faster first token", ...).
+Those figures are copied by hand from the committed BENCH_serving.json,
+and hand-copied numbers rot: the bench gets re-run, the JSON gets
+re-committed, the prose keeps bragging about last month's speedup.
+
+This script pins every quoted figure to the JSON value it came from.
+Each CHECK names a doc file, a regex with one capture group around the
+quoted number, an expression over the loaded JSON (`d`), and a relative
+tolerance covering prose rounding ("~0.91" for 0.9129).  It fails when:
+
+  * the regex no longer matches (the sentence was edited or deleted —
+    update CHECKS to match the new prose), or
+  * the quoted number is outside tolerance of the JSON value (the bench
+    was re-run — update the prose).
+
+Run from the repo root (CI runs it in the lint job, where the committed
+BENCH_serving.json is intact — the test job overwrites its copy):
+
+    python scripts/check_docs_numbers.py
+"""
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH = ROOT / "BENCH_serving.json"
+
+# (doc path, human label, regex with ONE capture group, json expr, rel_tol)
+CHECKS = [
+    ("README.md", "mixed padding efficiency (ragged)",
+     r"`padding_efficiency` ~(\d+\.\d+) vs",
+     "d['padding_efficiency']['mixed_ragged']", 0.05),
+    ("README.md", "mixed padding efficiency (rect)",
+     r"`padding_efficiency` ~\d+\.\d+ vs ~(\d+\.\d+)",
+     "d['padding_efficiency']['mixed_rect']", 0.10),
+    ("README.md", "long_prompt TTFT speedup",
+     r"\*\*(\d+(?:\.\d+)?)x faster first token\*\*",
+     "d['speedups']['ttft_long_prompt']", 0.10),
+    ("README.md", "prefix_heavy unified tok/s",
+     r"numbers: (\d+) vs \d+ tok/s",
+     "d['scenarios']['prefix_heavy']['unified']['tok_s']", 0.05),
+    ("README.md", "prefix_heavy baseline tok/s",
+     r"numbers: \d+ vs (\d+) tok/s",
+     "d['scenarios']['prefix_heavy']['pr1']['tok_s']", 0.05),
+    ("README.md", "prefix_heavy speedup",
+     r"throughput \(\*\*(\d+(?:\.\d+)?)x\*\*\)",
+     "d['speedups']['throughput_prefix_heavy']", 0.10),
+    ("README.md", "decode_heavy spec speedup",
+     r"~(\d+(?:\.\d+)?)x decode throughput",
+     "d['speedups']['decode_heavy_spec_vs_nonspec']", 0.10),
+    ("README.md", "decode_heavy draft acceptance",
+     r"at ~(\d+\.\d+) draft\s+acceptance",
+     "d['scenarios']['decode_heavy']['spec']['draft_acceptance_rate']",
+     0.10),
+    ("README.md", "decode_heavy accepted per verification",
+     r"~(\d+(?:\.\d+)?) tokens accepted per verification",
+     "d['scenarios']['decode_heavy']['spec']['accepted_per_spec_step']",
+     0.10),
+    ("README.md", "disaggregated dedup savings",
+     r"dedup saves ~(\d+)% of\s+shipped bytes",
+     "100 * d['scenarios']['disaggregated']['dedup_savings']", 0.10),
+    ("docs/ARCHITECTURE.md", "mixed padding efficiency (ragged)",
+     r"at\s+~(\d+\.\d+) ragged vs",
+     "d['padding_efficiency']['mixed_ragged']", 0.05),
+    ("docs/ARCHITECTURE.md", "mixed padding efficiency (rect)",
+     r"ragged vs ~(\d+\.\d+) rectangular",
+     "d['padding_efficiency']['mixed_rect']", 0.10),
+]
+
+
+def main() -> int:
+    d = json.loads(BENCH.read_text())
+    failures = []
+    for relpath, label, pattern, expr, tol in CHECKS:
+        text = (ROOT / relpath).read_text()
+        m = re.search(pattern, text)
+        if not m:
+            failures.append(f"{relpath}: pattern for '{label}' not found "
+                            f"(prose edited? update CHECKS): /{pattern}/")
+            continue
+        quoted = float(m.group(1))
+        actual = float(eval(expr, {"d": d}))  # noqa: S307 — our own exprs
+        rel = abs(quoted - actual) / max(abs(actual), 1e-12)
+        status = "ok" if rel <= tol else "DRIFT"
+        print(f"{status:5s} {relpath}: {label}: quoted {quoted:g} "
+              f"vs bench {actual:.4g} (rel err {rel:.1%}, tol {tol:.0%})")
+        if rel > tol:
+            failures.append(
+                f"{relpath}: '{label}' quotes {quoted:g} but "
+                f"BENCH_serving.json says {actual:.4g} "
+                f"(off by {rel:.1%}, tolerance {tol:.0%}) — update the "
+                "prose or re-commit the bench")
+    if failures:
+        print("\n" + "\n".join(f"FAIL: {f}" for f in failures))
+        return 1
+    print(f"\nall {len(CHECKS)} quoted figures match BENCH_serving.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,19 @@
+"""LM serving stack: paged-KV engines, scheduling, speculation, transfer.
+
+See docs/ARCHITECTURE.md for the design reference tying the pieces
+together; each submodule's docstring states its own contracts.
+"""
 from repro.serving.batch import (BatchEngine, BatchStats,  # noqa: F401
                                  RaggedBatch, TileMap, build_tile_map)
 from repro.serving.blocks import (BlockAllocator, KVCacheManager,  # noqa: F401
-                                  NULL_BLOCK)
+                                  NULL_BLOCK, chain_digest)
 from repro.serving.engine import (DecodeEngine, PagedDecodeEngine,  # noqa: F401
                                   SlotDecodeEngine)
 from repro.serving.scheduler import (Request, RequestState,  # noqa: F401
                                      Scheduler, SchedulerConfig,
                                      StepDecision)
 from repro.serving.spec import NgramProposer, Proposer  # noqa: F401
+from repro.serving.transfer import (DisaggregatedEngine,  # noqa: F401
+                                    KVBlockRecord, KVShipment,
+                                    TransferIntegrityError,
+                                    edge_dc_topology, payload_checksum)

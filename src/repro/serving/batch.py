@@ -240,12 +240,15 @@ def build_tile_map(seg_offsets, seg_lens, seg_lanes, seg_pos0,
 
 @dataclasses.dataclass
 class BatchStats:
+    """Rolling counters for :class:`BatchEngine` (requests, batches, latency)."""
+
     n_requests: int = 0
     n_batches: int = 0
     total_items: int = 0
     total_latency: float = 0.0
 
     def summary(self) -> Dict[str, float]:
+        """Counters plus mean per-batch latency, as a plain dict."""
         return {
             "requests": self.n_requests,
             "batches": self.n_batches,
@@ -263,6 +266,7 @@ class BatchEngine:
 
     def __init__(self, apply_fn: Callable, params: PyTree, *,
                  max_batch: int = 1024) -> None:
+        """Jit ``apply_fn`` once; batches are padded to pow2 sizes."""
         self.params = params
         self.max_batch = max_batch
         self._jitted = jax.jit(apply_fn)

@@ -53,6 +53,7 @@ class BlockAllocator:
     """
 
     def __init__(self, num_blocks: int) -> None:
+        """Create a pool of ``num_blocks`` blocks (block 0 stays reserved)."""
         if num_blocks < 2:
             raise ValueError("need at least 2 blocks (one is the null block)")
         self.num_blocks = num_blocks
@@ -61,13 +62,16 @@ class BlockAllocator:
 
     @property
     def num_free(self) -> int:
+        """Blocks on the free list (excludes cache-held evictable blocks)."""
         return len(self._free)
 
     @property
     def num_allocated(self) -> int:
+        """Blocks currently holding at least one reference."""
         return len(self._refs)
 
     def allocate(self) -> int:
+        """Pop a free block (refcount 1); RuntimeError when the pool is dry."""
         if not self._free:
             raise RuntimeError("out of KV cache blocks")
         blk = self._free.popleft()
@@ -75,9 +79,11 @@ class BlockAllocator:
         return blk
 
     def refcount(self, block_id: int) -> int:
+        """Current reference count of ``block_id`` (0 if unallocated)."""
         return self._refs.get(block_id, 0)
 
     def incref(self, block_id: int) -> None:
+        """Add one reference to an allocated block."""
         if block_id not in self._refs:
             raise KeyError(f"block {block_id} is not allocated")
         self._refs[block_id] += 1
@@ -117,11 +123,26 @@ class SeqBlocks:
     registered: set = dataclasses.field(default_factory=set)
 
 
-def _digest(parent: str, tokens: Sequence[int]) -> str:
+def chain_digest(parent: str, tokens: Sequence[int]) -> str:
+    """Content hash of one full KV block chained to its prefix.
+
+    ``parent`` is the previous block's chain digest (``""`` for the first
+    block of a sequence), ``tokens`` the block's token ids.  The digest
+    therefore identifies the *entire token prefix* up to and including
+    this block, not just the block's own contents — two sequences share a
+    digest iff they share every token from position 0.  Pure function of
+    the token ids (sha256 over little-endian int64 bytes), so digests are
+    stable across processes and hosts: the prefix cache, the KV-block
+    wire format (:mod:`repro.serving.transfer`), and the on-disk
+    prefix-cache persistence format all key on the same value.
+    """
     h = hashlib.sha256()
     h.update(parent.encode())
     h.update(np.asarray(tokens, np.int64).tobytes())
     return h.hexdigest()
+
+
+_digest = chain_digest
 
 
 class KVCacheManager:
@@ -136,6 +157,7 @@ class KVCacheManager:
     def __init__(self, num_blocks: int, block_size: int, *,
                  max_blocks_per_seq: int,
                  enable_prefix_cache: bool = False) -> None:
+        """Build the manager over a fresh ``num_blocks``-block pool."""
         self.allocator = BlockAllocator(num_blocks)
         self.block_size = block_size
         self.max_blocks_per_seq = max_blocks_per_seq
@@ -145,6 +167,10 @@ class KVCacheManager:
         # blocks whose only reference is the cache's own hold
         self._cached: Dict[str, int] = {}
         self._block_digest: Dict[int, str] = {}
+        # digest -> (parent digest, block tokens): the provenance needed to
+        # export a cached block onto the wire (or to disk) and to recompute
+        # its chain digest on the receiving side
+        self._cached_meta: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         self._copy_ops: List[Tuple[int, int]] = []
         self.prefix_hits = 0
@@ -172,15 +198,19 @@ class KVCacheManager:
         return self.allocator.num_free + len(self._lru)
 
     def n_tokens(self, seq_id: int) -> int:
+        """Current logical length of sequence ``seq_id`` in tokens."""
         return self._seqs[seq_id].n_tokens
 
     def has_seq(self, seq_id: int) -> bool:
+        """True when ``seq_id`` is registered with the manager."""
         return seq_id in self._seqs
 
     def blocks_needed(self, n_tokens: int) -> int:
+        """Physical blocks required to hold ``n_tokens`` tokens (ceil)."""
         return -(-n_tokens // self.block_size)          # ceil
 
     def can_allocate(self, n_tokens: int) -> bool:
+        """Prefix-blind admission check against free + evictable blocks."""
         need = self.blocks_needed(n_tokens)
         if need > self.max_blocks_per_seq:
             raise ValueError(
@@ -196,6 +226,7 @@ class KVCacheManager:
         blk, _ = self._lru.popitem(last=False)
         digest = self._block_digest.pop(blk)
         del self._cached[digest]
+        self._cached_meta.pop(digest, None)
         self.allocator.decref(blk)          # drop the cache's hold -> free
         self.evictions += 1
         self.cache_version += 1
@@ -221,7 +252,8 @@ class KVCacheManager:
         """The sequence just completed a full block: chain-hash it and (if
         this content is new) register the block for prefix sharing."""
         parent = seq.digests[-1] if seq.digests else ""
-        digest = _digest(parent, seq.pending)
+        tokens = seq.pending
+        digest = _digest(parent, tokens)
         seq.digests.append(digest)
         seq.pending = []
         if digest in self._cached:
@@ -229,6 +261,7 @@ class KVCacheManager:
         blk = seq.table[(seq.n_tokens - 1) // self.block_size]
         self._cached[digest] = blk
         self._block_digest[blk] = digest
+        self._cached_meta[digest] = (parent, tuple(tokens))
         self.allocator.incref(blk)          # the cache's own hold
         seq.registered.add(len(seq.digests) - 1)
         self.cache_version += 1
@@ -258,6 +291,103 @@ class KVCacheManager:
             return 0
         _, blocks = self._match_prefix([int(t) for t in feed])
         return len(blocks) * self.block_size
+
+    # ------------------------------------------------------------------
+    # transfer / persistence hooks (see repro.serving.transfer)
+    # ------------------------------------------------------------------
+    def has_digest(self, digest: str) -> bool:
+        """True when a full block with this chain digest is cached."""
+        return digest in self._cached
+
+    def cached_digests(self) -> frozenset:
+        """Chain digests of every full block the prefix cache holds."""
+        return frozenset(self._cached)
+
+    def export_chain(self, feed: Sequence[int]
+                     ) -> List[Tuple[str, str, int, List[int]]]:
+        """Walk ``feed`` through the cache and export the longest chain of
+        cached full blocks covering its prefix.
+
+        Returns ``[(digest, parent_digest, physical_block, tokens), ...]``
+        in chain order (parents before children).  The physical block ids
+        let the engine read the actual KV payloads off the device pools;
+        the (parent, tokens) pairs are everything a receiver needs to
+        recompute and verify the digests.  Stops at the first un-cached
+        block, exactly like prefix matching at admission.
+        """
+        out: List[Tuple[str, str, int, List[int]]] = []
+        parent = ""
+        bs = self.block_size
+        feed = [int(t) for t in feed]
+        for i in range(0, len(feed) - len(feed) % bs, bs):
+            tokens = feed[i:i + bs]
+            d = _digest(parent, tokens)
+            blk = self._cached.get(d)
+            if blk is None:
+                break
+            out.append((d, parent, blk, tokens))
+            parent = d
+        return out
+
+    def export_all_cached(self) -> List[Tuple[str, str, int, List[int]]]:
+        """Export every cached full block, as :meth:`export_chain` tuples.
+
+        Registration order is preserved, which puts parents before their
+        children for chains built by a single sequence; a chain whose
+        parent was LRU-evicted exports as an orphan that simply never
+        matches on the importing side (harmless dead weight, evicted there
+        in turn).  This is the prefix-cache persistence path: serialize
+        the result with :class:`repro.serving.transfer.KVShipment` and the
+        wire format doubles as the on-disk format.
+        """
+        out: List[Tuple[str, str, int, List[int]]] = []
+        for digest, blk in self._cached.items():
+            parent, tokens = self._cached_meta[digest]
+            out.append((digest, parent, blk, list(tokens)))
+        return out
+
+    def import_block(self, parent: str, tokens: Sequence[int], *,
+                     digest: Optional[str] = None) -> Optional[int]:
+        """Register one full block arriving from another engine (or disk).
+
+        Allocates a physical block, registers it under
+        ``chain_digest(parent, tokens)`` exactly as if a local sequence had
+        completed it, and returns the block id so the caller can write the
+        KV payload into the device pools.  The cache's own hold is the only
+        reference, so the imported block goes straight onto the LRU — it is
+        evictable and never crowds out live sequences, though importing can
+        itself evict cold cached blocks when the free list is dry.
+
+        Returns ``None`` when the digest is already cached (the dedup-skip:
+        content-addressing makes re-imports free).  ``digest``, when given,
+        is cross-checked against the recomputed chain digest — a mismatch
+        means the token history was corrupted in flight and raises
+        ``ValueError``.  Raises ``RuntimeError`` when live sequences hold
+        the whole pool and nothing is evictable.
+        """
+        if not self.enable_prefix_cache:
+            raise RuntimeError("import_block requires enable_prefix_cache")
+        tokens = [int(t) for t in tokens]
+        if len(tokens) != self.block_size:
+            raise ValueError(
+                f"imported block has {len(tokens)} tokens, expected a full "
+                f"block of {self.block_size}")
+        d = _digest(parent, tokens)
+        if digest is not None and digest != d:
+            raise ValueError(
+                "chain digest mismatch: token history does not hash to the "
+                "advertised digest")
+        if d in self._cached:
+            return None
+        blk = self._alloc_block()
+        self._cached[d] = blk
+        self._block_digest[blk] = d
+        self._cached_meta[d] = (parent, tuple(tokens))
+        # sole ref is the cache's hold -> immediately evictable
+        self._lru[blk] = None
+        self._lru.move_to_end(blk)
+        self.cache_version += 1
+        return blk
 
     def _plan_admission(self, feed: Sequence[int]
                         ) -> Tuple[List[str], List[int], int]:
@@ -450,6 +580,7 @@ class KVCacheManager:
                         self._block_digest.get(blk) == digest:
                     del self._cached[digest]
                     del self._block_digest[blk]
+                    self._cached_meta.pop(digest, None)
                     self._lru.pop(blk, None)
                     self.allocator.decref(blk)  # drop the cache's hold
                     self.cache_version += 1
@@ -469,6 +600,9 @@ class KVCacheManager:
         seq.n_tokens = n_tokens
 
     def free(self, seq_id: int) -> None:
+        """Drop a finished sequence's references.  Blocks the prefix cache
+        registered stay resident (the cache's own hold keeps them) and
+        become evictable; unshared blocks return to the free list."""
         seq = self._seqs.pop(seq_id)
         for blk in seq.table:
             self._release(blk)
@@ -496,6 +630,7 @@ class KVCacheManager:
 
     # ------------------------------------------------------------------
     def block_table(self, seq_id: int) -> List[int]:
+        """Copy of the sequence's logical->physical block table."""
         return list(self._seqs[seq_id].table)
 
     def padded_table(self, seq_id: int) -> np.ndarray:

@@ -102,6 +102,13 @@ class PagedDecodeEngine:
                  spec: bool = True, draft_k: int = 4,
                  proposer: Optional[Proposer] = None,
                  cache_dtype=None, compute_dtype=None) -> None:
+        """Build the paged engine: block pool, scheduler, jitted steps.
+
+        ``ragged``/``tiled`` default to on where supported; ``spec=True``
+        wires the speculative path with an :class:`NgramProposer` unless
+        ``proposer`` overrides it.  ``num_blocks`` defaults to the pool
+        that matches ``n_slots * cache_len`` tokens.
+        """
         if not getattr(model_api, "supports_paged", False):
             raise ValueError(
                 f"{model_api.cfg.family} models have no paged-KV decode "
@@ -218,6 +225,8 @@ class PagedDecodeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        """Queue a request; returns its id.  Rejects requests whose total
+        length (prompt + new tokens) can never fit the pool."""
         prompt = np.asarray(prompt, np.int32)
         total = len(prompt) + max_new_tokens
         usable = min(self.max_blocks, self.num_blocks - 1)
@@ -442,7 +451,152 @@ class PagedDecodeEngine:
         return out
 
     # ------------------------------------------------------------------
+    # KV transfer / persistence (see repro.serving.transfer)
+    # ------------------------------------------------------------------
+    def cached_digests(self) -> frozenset:
+        """Chain digests of every full block the prefix cache holds — the
+        receiver-side set a sender dedups shipments against."""
+        return self.kv.cached_digests()
+
+    def _read_block_payload(self, blk: int) -> Dict:
+        """Read one physical block's K/V off the device pools, as host
+        arrays keyed ``part -> {"k", "v"}`` (the wire payload layout)."""
+        out: Dict[str, Dict[str, np.ndarray]] = {}
+        for part in ("scan", "head"):
+            if part in self.cache:
+                out[part] = {
+                    "k": np.asarray(self.cache[part]["k"][:, blk]),
+                    "v": np.asarray(self.cache[part]["v"][:, blk])}
+        return out
+
+    def export_kv_prefix(self, feed: np.ndarray):
+        """Package the cached KV prefix of ``feed`` as a
+        :class:`~repro.serving.transfer.KVShipment`.
+
+        Exports the longest chain of cached full blocks covering the
+        feed's prefix — each with its device KV payload and checksum —
+        plus the remaining tokens as the payload-free partial tail.  The
+        usual source is a just-prefilled prompt (every full block was
+        registered as prefill completed it, and registrations survive the
+        sequence's ``free`` via the cache's own hold), but any feed whose
+        prefix is cached exports the same way.
+        """
+        from repro.serving.transfer import (KVBlockRecord, KVShipment,
+                                            payload_checksum)
+        chain = self.kv.export_chain(feed)
+        blocks = []
+        for digest, parent, blk, tokens in chain:
+            payload = self._read_block_payload(blk)
+            blocks.append(KVBlockRecord(
+                digest=digest, parent=parent, tokens=tokens,
+                payload=payload, checksum=payload_checksum(payload)))
+        covered = len(chain) * self.block_size
+        return KVShipment(block_size=self.block_size, blocks=blocks,
+                          partial_tokens=[int(t) for t in feed[covered:]])
+
+    def import_kv_shipment(self, shipment) -> Dict[str, int]:
+        """Attach a (verified) shipment's blocks to this engine's cache.
+
+        Each block is registered with the prefix cache under its chain
+        digest and its payload written into the device KV pools, so the
+        next ``submit`` of the matching prompt attaches the chain as an
+        ordinary prefix hit.  Blocks already cached are skipped (the dedup
+        contract: a stripped payload must be one of these — anything else
+        raises :class:`~repro.serving.transfer.TransferIntegrityError`).
+        Imported blocks are immediately evictable, so a shipment can
+        never starve live sequences; when the pool genuinely has no room
+        the remainder of the chain is dropped (counted, not fatal — the
+        decode side just recomputes more).  Returns
+        ``{"imported", "dedup_skipped", "dropped_no_space",
+        "tokens_attachable"}``.
+        """
+        from repro.serving.transfer import TransferIntegrityError
+        if shipment.block_size != self.block_size:
+            raise ValueError(
+                f"shipment block_size {shipment.block_size} != engine "
+                f"block_size {self.block_size}")
+        imported: List[int] = []
+        payloads: List[Dict] = []
+        skipped = dropped = 0
+        for rec in shipment.blocks:
+            if self.kv.has_digest(rec.digest):
+                skipped += 1
+                continue
+            if rec.payload is None:
+                raise TransferIntegrityError(
+                    f"block {rec.digest[:12]} arrived without a payload "
+                    "but is not in this engine's cache — dedup stripped "
+                    "a block the receiver does not hold")
+            try:
+                blk = self.kv.import_block(rec.parent, rec.tokens,
+                                           digest=rec.digest)
+            except RuntimeError:
+                # pool full of live sequences: drop the chain's remainder
+                dropped = sum(1 for b in shipment.blocks
+                              if not self.kv.has_digest(b.digest))
+                break
+            if blk is not None:
+                imported.append(blk)
+                payloads.append(rec.payload)
+        if imported:
+            idx = jnp.asarray(np.asarray(imported, np.int32))
+            for part in ("scan", "head"):
+                if part not in self.cache:
+                    continue
+                k, v = self.cache[part]["k"], self.cache[part]["v"]
+                want = k.shape[:1] + k.shape[2:]
+                for p in payloads:
+                    if part not in p or p[part]["k"].shape != want:
+                        raise ValueError(
+                            f"shipment KV geometry mismatch on '{part}': "
+                            f"got {p[part]['k'].shape if part in p else None}"
+                            f", engine pool expects {want}")
+                # stack along the block axis: (layers, n_new, bs, Hkv, D)
+                new_k = jnp.asarray(np.stack([p[part]["k"]
+                                              for p in payloads], axis=1))
+                new_v = jnp.asarray(np.stack([p[part]["v"]
+                                              for p in payloads], axis=1))
+                self.cache[part] = {
+                    "k": k.at[:, idx].set(new_k.astype(k.dtype)),
+                    "v": v.at[:, idx].set(new_v.astype(v.dtype))}
+        return {"imported": len(imported), "dedup_skipped": skipped,
+                "dropped_no_space": dropped,
+                "tokens_attachable": (len(imported) + skipped)
+                * self.block_size}
+
+    def save_prefix_cache(self, path: str) -> int:
+        """Persist every cached full block to ``path`` and return the
+        bytes written.  The on-disk format IS the wire format
+        (:class:`~repro.serving.transfer.KVShipment`), so a restarted
+        engine reloads with :meth:`load_prefix_cache` and warm prompts hit
+        the cache exactly as before the restart."""
+        from repro.serving.transfer import (KVBlockRecord, KVShipment,
+                                            payload_checksum)
+        blocks = []
+        for digest, parent, blk, tokens in self.kv.export_all_cached():
+            payload = self._read_block_payload(blk)
+            blocks.append(KVBlockRecord(
+                digest=digest, parent=parent, tokens=tokens,
+                payload=payload, checksum=payload_checksum(payload)))
+        data = KVShipment(block_size=self.block_size, blocks=blocks,
+                          partial_tokens=[]).serialize()
+        with open(path, "wb") as f:
+            f.write(data)
+        return len(data)
+
+    def load_prefix_cache(self, path: str) -> Dict[str, int]:
+        """Restore a :meth:`save_prefix_cache` snapshot (verifying every
+        checksum and chain digest) into this engine's prefix cache.
+        Returns the :meth:`import_kv_shipment` stats."""
+        from repro.serving.transfer import KVShipment
+        with open(path, "rb") as f:
+            data = f.read()
+        return self.import_kv_shipment(KVShipment.deserialize(data))
+
+    # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
+        """Counters for benchmarks: token throughput, padding efficiency,
+        prefix-cache and speculative-decode accounting."""
         return {
             "steps": self.steps,
             "tokens_decoded": self.tokens_decoded,
@@ -491,6 +645,7 @@ class SlotDecodeEngine:
                  cache_len: int, eos_token: int = -1,
                  window: int = 0, cache_dtype=None, compute_dtype=None,
                  **_paged_opts) -> None:
+        """Build the dense-slot engine (paged-only options are ignored)."""
         self.api = model_api
         self.params = params
         self.n_slots = n_slots
@@ -520,6 +675,7 @@ class SlotDecodeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        """Queue a request; returns its request id."""
         rid = self._next_id
         self._next_id += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens)
@@ -588,6 +744,7 @@ class SlotDecodeEngine:
         return out
 
     def stats(self) -> Dict[str, float]:
+        """Engine counters: steps, tokens, occupancy, padding efficiency."""
         n_active = sum(1 for a in self.active if a is not None)
         used = sum(min(r.cursor, self._slots_per_lane)
                    for r in self.active if r is not None)

@@ -49,6 +49,9 @@ from repro.serving.blocks import KVCacheManager
 
 
 class RequestState(enum.Enum):
+    """Lifecycle of a request: waiting -> running (-> waiting again on
+    preemption) -> finished."""
+
     WAITING = "waiting"
     RUNNING = "running"
     FINISHED = "finished"
@@ -56,6 +59,13 @@ class RequestState(enum.Enum):
 
 @dataclasses.dataclass(eq=False)          # identity semantics for in/remove
 class Request:
+    """One serving request plus its engine-internal progress state.
+
+    ``feed`` is the token stream still to be pushed through the model
+    (prompt + generated-so-far after a preemption replay); ``cursor`` the
+    next feed index, i.e. how many of its tokens already sit in KV.
+    """
+
     request_id: int
     prompt: np.ndarray               # (prompt_len,) int32
     max_new_tokens: int
@@ -87,11 +97,18 @@ class Request:
 
     @property
     def remaining_feed(self) -> int:
+        """Feed tokens not yet pushed through the model."""
         return len(self.feed) - self.cursor
 
 
 @dataclasses.dataclass
 class SchedulerConfig:
+    """Scheduler knobs: lane count, token budget, chunking, speculation.
+
+    See the field comments for each knob's semantics; the module
+    docstring describes how they interact in one step.
+    """
+
     n_lanes: int
     token_budget: int = 0    # 0 = n_lanes * chunk_tokens
     chunk_tokens: int = 1    # per-request tokens per step cap; 0 = unlimited
@@ -113,6 +130,12 @@ class SchedulerConfig:
 
 @dataclasses.dataclass
 class StepDecision:
+    """One step's scheduling outcome: who runs, with how many tokens.
+
+    The engine turns this into a :class:`~repro.serving.batch.RaggedBatch`
+    (or a rectangular batch) — one segment per scheduled request.
+    """
+
     scheduled: List[Request]
     # request_id -> tokens scheduled this step (>= 1 for every scheduled
     # request; decode lanes get 1 + their draft count)
@@ -142,7 +165,15 @@ class StepDecision:
 
 
 class Scheduler:
+    """Token-budgeted continuous-batching scheduler (see module docstring).
+
+    Owns the waiting queue and the lane assignments; consults the
+    :class:`~repro.serving.blocks.KVCacheManager` for admission planning
+    and preemption decisions but never touches device state itself.
+    """
+
     def __init__(self, cfg: SchedulerConfig, kv: KVCacheManager) -> None:
+        """Bind the scheduler to its config and the KV block manager."""
         self.cfg = cfg
         self.kv = kv
         self.waiting: Deque[Request] = deque()
@@ -157,9 +188,11 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def add(self, req: Request) -> None:
+        """Queue a new request for admission (FIFO)."""
         self.waiting.append(req)
 
     def has_work(self) -> bool:
+        """True while any request is waiting or running."""
         return bool(self.waiting or self.running)
 
     def _chunk(self) -> int:
@@ -349,6 +382,7 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def finish(self, req: Request) -> None:
+        """Retire a completed request: free its KV blocks and its lane."""
         req.state = RequestState.FINISHED
         req.done = True
         self.kv.free(req.request_id)

@@ -37,6 +37,7 @@ class Proposer:
     """
 
     def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        """Return up to ``k`` draft token ids extending ``tokens``."""
         raise NotImplementedError
 
 
@@ -57,6 +58,7 @@ class NgramProposer(Proposer):
 
     def __init__(self, max_ngram: int = 3, min_ngram: int = 1,
                  lookback: int = 1024) -> None:
+        """Set the n-gram match range and the history scan window."""
         if not 1 <= min_ngram <= max_ngram:
             raise ValueError(
                 f"need 1 <= min_ngram <= max_ngram, got "
@@ -68,6 +70,7 @@ class NgramProposer(Proposer):
         self.lookback = lookback
 
     def propose(self, tokens: Sequence[int], k: int) -> List[int]:
+        """Prompt-lookup: propose what followed the last matching n-gram."""
         toks = [int(t) for t in tokens[-self.lookback:]]
         n_hist = len(toks)
         if k <= 0 or n_hist < self.min_ngram + 1:

@@ -1,0 +1,378 @@
+"""KV-block wire format + disaggregated serving: the transfer test wall.
+
+Three layers:
+
+  * **Wire format** — pure-host tests over synthetic payloads: exact
+    serialize/deserialize roundtrips (full + partial blocks), dedup
+    stripping, chain-digest stability across *separate processes*, and
+    rejection of every corruption mode (flipped payload bytes, tampered
+    token history, truncation, stripped-but-unknown blocks, bad magic).
+  * **Token identity** — the differential wall extended across the WAN:
+    DC-prefill -> shipment -> edge-decode must produce exactly the tokens
+    the single ragged engine produces, including prefix hits, CoW forks
+    (fully-matched prompts), speculative decode on the decode side, and a
+    decode pool too small to hold every imported block.
+  * **Persistence** — the wire format doubles as the prefix-cache
+    snapshot format: a restarted engine reloads the snapshot and serves
+    warm prompts with cache hits and unchanged tokens.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import (DisaggregatedEngine, PagedDecodeEngine,
+                               KVBlockRecord, KVShipment,
+                               TransferIntegrityError, chain_digest,
+                               payload_checksum)
+    HAVE_JAX = True
+except ImportError:                                    # pragma: no cover
+    HAVE_JAX = False
+
+pytestmark = pytest.mark.skipif(not HAVE_JAX, reason="jax not available")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("gemma-7b").smoke_variant()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+COMMON = dict(cache_len=64, cache_dtype=jnp.float32,
+              compute_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# wire format (synthetic payloads, no model needed)
+# ---------------------------------------------------------------------------
+def _fake_shipment(n_blocks=2, block_size=4, partial=(7, 8), seed=0):
+    rng = np.random.default_rng(seed)
+    blocks, parent = [], ""
+    for i in range(n_blocks):
+        tokens = [int(t) for t in rng.integers(0, 100, block_size)]
+        digest = chain_digest(parent, tokens)
+        payload = {"scan": {
+            "k": rng.standard_normal((2, block_size, 1, 3)).astype(
+                np.float32),
+            "v": rng.standard_normal((2, block_size, 1, 3)).astype(
+                np.float32)}}
+        blocks.append(KVBlockRecord(digest=digest, parent=parent,
+                                    tokens=tokens, payload=payload,
+                                    checksum=payload_checksum(payload)))
+        parent = digest
+    return KVShipment(block_size=block_size, blocks=blocks,
+                      partial_tokens=list(partial))
+
+
+def test_roundtrip_full_and_partial_blocks():
+    ship = _fake_shipment(n_blocks=3, partial=(42, 43, 44))
+    back = KVShipment.deserialize(ship.serialize())
+    assert back.block_size == ship.block_size
+    assert back.partial_tokens == [42, 43, 44]
+    assert back.n_blocks == 3 and back.n_payloads == 3
+    for a, b in zip(ship.blocks, back.blocks):
+        assert (a.digest, a.parent, a.tokens, a.checksum) \
+            == (b.digest, b.parent, b.tokens, b.checksum)
+        for part in a.payload:
+            for kv in ("k", "v"):
+                np.testing.assert_array_equal(a.payload[part][kv],
+                                              b.payload[part][kv])
+    # canonical bytes: re-serializing the roundtripped shipment is stable
+    assert back.serialize() == ship.serialize()
+
+
+def test_roundtrip_empty_and_payload_free():
+    empty = KVShipment(block_size=4, blocks=[], partial_tokens=[1, 2])
+    assert KVShipment.deserialize(empty.serialize()).partial_tokens == [1, 2]
+    stripped = _fake_shipment().drop_payloads(
+        {b.digest for b in _fake_shipment().blocks})
+    assert stripped.n_payloads == 0 and stripped.payload_nbytes == 0
+    back = KVShipment.deserialize(stripped.serialize())
+    assert back.n_blocks == 2 and back.n_payloads == 0
+    assert [b.checksum for b in back.blocks] \
+        == [b.checksum for b in stripped.blocks]
+
+
+def test_drop_payloads_is_selective():
+    ship = _fake_shipment(n_blocks=3)
+    keep = ship.blocks[1].digest
+    deduped = ship.drop_payloads({b.digest for b in ship.blocks
+                                  if b.digest != keep})
+    assert deduped.n_payloads == 1
+    assert deduped.blocks[1].payload is not None
+    assert deduped.blocks[0].payload is None
+    assert len(deduped.serialize()) < len(ship.serialize())
+
+
+def test_digest_stability_across_processes():
+    """Chain digests and serialized bytes are pure functions of content:
+    a separate interpreter reproduces them bit-for-bit."""
+    ship = _fake_shipment(n_blocks=2, seed=123)
+    prog = (
+        "import numpy as np\n"
+        "from repro.serving import chain_digest, KVShipment, KVBlockRecord,"
+        " payload_checksum\n"
+        "rng = np.random.default_rng(123)\n"
+        "blocks, parent = [], ''\n"
+        "for i in range(2):\n"
+        "    tokens = [int(t) for t in rng.integers(0, 100, 4)]\n"
+        "    digest = chain_digest(parent, tokens)\n"
+        "    payload = {'scan': {\n"
+        "        'k': rng.standard_normal((2, 4, 1, 3)).astype(np.float32),\n"
+        "        'v': rng.standard_normal((2, 4, 1, 3)).astype(np.float32)}}\n"
+        "    blocks.append(KVBlockRecord(digest=digest, parent=parent,\n"
+        "        tokens=tokens, payload=payload,\n"
+        "        checksum=payload_checksum(payload)))\n"
+        "    parent = digest\n"
+        "ship = KVShipment(block_size=4, blocks=blocks,\n"
+        "                  partial_tokens=[7, 8])\n"
+        "print(blocks[-1].digest)\n"
+        "import hashlib; print(hashlib.sha256(ship.serialize())"
+        ".hexdigest())\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, check=True)
+    other_digest, other_sha = out.stdout.split()
+    assert other_digest == ship.blocks[-1].digest
+    import hashlib
+    assert other_sha == hashlib.sha256(ship.serialize()).hexdigest()
+
+
+def test_corrupt_payload_rejected():
+    data = bytearray(_fake_shipment().serialize())
+    data[-5] ^= 0xFF                       # flip a byte inside KV payload
+    with pytest.raises(TransferIntegrityError, match="checksum"):
+        KVShipment.deserialize(bytes(data))
+
+
+def test_tampered_token_history_rejected():
+    ship = _fake_shipment()
+    ship.blocks[0].tokens[0] ^= 1          # token no longer matches digest
+    with pytest.raises(TransferIntegrityError, match="digest"):
+        KVShipment.deserialize(ship.serialize())
+
+
+def test_truncated_and_garbage_shipments_rejected():
+    data = _fake_shipment().serialize()
+    with pytest.raises(TransferIntegrityError):
+        KVShipment.deserialize(data[:len(data) // 2])
+    with pytest.raises(TransferIntegrityError, match="magic"):
+        KVShipment.deserialize(b"not a shipment at all")
+
+
+# ---------------------------------------------------------------------------
+# engine export / import (real KV)
+# ---------------------------------------------------------------------------
+def _prefill(engine, prompt):
+    engine.submit(np.asarray(prompt, np.int32), 1)
+    return engine.run_until_drained()
+
+
+def test_export_import_roundtrip_real_kv(model):
+    """Exported device KV reimports bit-identically, and the importing
+    engine then prefix-hits the prompt like it prefilled it locally."""
+    cfg, api, params = model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 37).astype(np.int32)
+    src = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    _prefill(src, prompt)
+    ship = src.export_kv_prefix(prompt)
+    assert ship.n_blocks == 37 // src.block_size
+    assert len(ship.partial_tokens) == 37 % src.block_size
+    back = KVShipment.deserialize(ship.serialize())
+
+    dst = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    stats = dst.import_kv_shipment(back)
+    assert stats["imported"] == ship.n_blocks
+    assert stats["dedup_skipped"] == 0
+    assert dst.cached_digests() == {b.digest for b in ship.blocks}
+    # imported pool rows == exported pool rows, bit for bit
+    for rec in ship.blocks:
+        blk = dst.kv._cached[rec.digest]
+        got = dst._read_block_payload(blk)
+        for part in rec.payload:
+            for kv in ("k", "v"):
+                np.testing.assert_array_equal(got[part][kv],
+                                              rec.payload[part][kv])
+    # re-import is a pure dedup skip
+    again = dst.import_kv_shipment(back)
+    assert again["imported"] == 0
+    assert again["dedup_skipped"] == ship.n_blocks
+
+
+def test_import_rejects_stripped_unknown_block(model):
+    cfg, api, params = model
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+    src = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    _prefill(src, prompt)
+    ship = src.export_kv_prefix(prompt)
+    stripped = ship.drop_payloads({b.digest for b in ship.blocks})
+    dst = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    with pytest.raises(TransferIntegrityError, match="does not hold"):
+        dst.import_kv_shipment(stripped)
+
+
+# ---------------------------------------------------------------------------
+# disaggregated serving: the differential wall across the WAN
+# ---------------------------------------------------------------------------
+def _fleet(cfg, seed=7):
+    """Prefix-heavy fleet: 4 prompts sharing a 40-token preamble (prefix
+    hits downstream), one short prompt (no full block), and one exact
+    duplicate.  The first prompt is exactly 3 blocks long (48 tokens), so
+    its shipped chain covers the *whole* feed — the decode-side cursor cap
+    forces a write into the shared tail block, i.e. a CoW fork."""
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    prompts = [np.concatenate([pre, rng.integers(
+        0, cfg.vocab_size, n).astype(np.int32)])
+        for n in (8, *(int(x) for x in rng.integers(3, 9, size=3)))]
+    prompts.append(rng.integers(0, cfg.vocab_size, 7).astype(np.int32))
+    prompts.append(prompts[0].copy())
+    return prompts
+
+
+def _run_disaggregated(api, params, prompts, max_new=8, **decode_kw):
+    pf = PagedDecodeEngine(api, params, n_slots=4, **COMMON)
+    de = PagedDecodeEngine(api, params, n_slots=4, **COMMON, **decode_kw)
+    dis = DisaggregatedEngine(pf, de, dc_speedup=8.0)
+    for p in prompts:
+        dis.submit(p, max_new)
+    done = {r.request_id: r.generated for r in dis.run_until_drained()}
+    return dis, done
+
+
+def test_disaggregated_token_identity_vs_single_engine(model):
+    """The acceptance gate: prefill->transfer->decode output is exactly
+    the single ragged engine's, with spec decode live on the decode side
+    and prefix hits / CoW forks in the fleet."""
+    cfg, api, params = model
+    prompts = _fleet(cfg)
+    one = PagedDecodeEngine(api, params, n_slots=4, **COMMON)
+    for p in prompts:
+        one.submit(p, 8)
+    ref = {r.request_id: r.generated for r in one.run_until_drained()}
+
+    dis, done = _run_disaggregated(api, params, prompts)
+    assert done == ref
+    s = dis.stats()
+    assert s["handoff_checks"] == len(prompts)
+    # the decode side really attached shipped blocks as prefix hits
+    assert dis.decode.kv.prefix_hits >= 4
+    assert dis.decode.kv.cow_copies >= 1          # duplicate prompt forks
+    assert dis.decode.spec                        # speculation stayed on
+    # content-addressed dedup: the shared preamble crossed the WAN once
+    assert s["bytes_shipped"] < s["bytes_naive"]
+    assert s["blocks_dedup_skipped"] > 0
+
+
+def test_disaggregated_token_identity_without_spec(model):
+    """Identity also holds with speculation pinned off at the edge (the
+    plain one-token decode path)."""
+    cfg, api, params = model
+    prompts = _fleet(cfg, seed=11)[:4]
+    one = PagedDecodeEngine(api, params, n_slots=4, spec=False, **COMMON)
+    for p in prompts:
+        one.submit(p, 6)
+    ref = {r.request_id: r.generated for r in one.run_until_drained()}
+    _, done = _run_disaggregated(api, params, prompts, max_new=6,
+                                 spec=False)
+    assert done == ref
+
+
+def test_disaggregated_token_identity_under_pool_pressure(model):
+    """A decode pool too small to keep every imported block still serves
+    token-identically: imports drop (counted), the tail recomputes."""
+    cfg, api, params = model
+    prompts = _fleet(cfg, seed=13)
+    one = PagedDecodeEngine(api, params, n_slots=4, **COMMON)
+    for p in prompts:
+        one.submit(p, 8)
+    ref = {r.request_id: r.generated for r in one.run_until_drained()}
+    # 18 non-null blocks: enough for ~2 live 48-token seqs, not the cache
+    _, done = _run_disaggregated(api, params, prompts, num_blocks=19)
+    assert done == ref
+
+
+def test_disaggregated_charges_the_cost_model(model):
+    """Transfer rides the §4.1 model on the shared SimClock: sim seconds
+    grow with shipped bytes, and pricing at a slower link costs more."""
+    cfg, api, params = model
+    dis, _ = _run_disaggregated(api, params, _fleet(cfg, seed=17))
+    bd = dis.clock.breakdown()
+    assert bd["sim"] > 0 and bd["modeled"] > 0 and bd["real"] > 0
+    assert bd["sim"] == pytest.approx(
+        sum(r.duration for r in dis.transfer.records))
+    slow = dis.priced_turnaround(1e6)["transfer"]
+    fast = dis.priced_turnaround(1e10)["transfer"]
+    assert slow > fast
+    # crossover: monotone transfer => bandwidth above it wins, below loses
+    base = dis.prefill_wall + dis.decode_wall
+    bw = dis.crossover_bandwidth(base)
+    if bw is not None:
+        assert dis.priced_turnaround(bw * 2)["total"] <= base
+        assert dis.priced_turnaround(bw / 2)["total"] > base
+
+
+def test_disaggregated_rejects_mismatched_engines(model):
+    cfg, api, params = model
+    a = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    b = PagedDecodeEngine(api, params, n_slots=2, block_size=8, **COMMON)
+    with pytest.raises(ValueError, match="block_size"):
+        DisaggregatedEngine(a, b)
+    c = PagedDecodeEngine(api, params, n_slots=2, prefix_cache=False,
+                          **COMMON)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        DisaggregatedEngine(a, c)
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache persistence across restarts
+# ---------------------------------------------------------------------------
+def test_prefix_cache_persists_across_restart(model, tmp_path):
+    """Snapshot -> new engine -> reload: warm prompts prefix-hit and the
+    generated tokens match the pre-restart engine exactly."""
+    cfg, api, params = model
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, 44).astype(np.int32)
+    eng = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    eng.submit(prompt, 8)
+    ref = eng.run_until_drained()[0].generated
+    path = str(tmp_path / "prefix_cache.kvship")
+    nbytes = eng.save_prefix_cache(path)
+    assert nbytes == os.path.getsize(path) > 0
+
+    fresh = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    stats = fresh.load_prefix_cache(path)
+    assert stats["imported"] >= 44 // fresh.block_size
+    fresh.submit(prompt, 8)
+    assert fresh.run_until_drained()[0].generated == ref
+    assert fresh.kv.prefix_hits >= 1
+    assert fresh.kv.prefix_tokens_reused >= (44 // fresh.block_size - 1) \
+        * fresh.block_size
+
+
+def test_persisted_snapshot_corruption_detected(model, tmp_path):
+    cfg, api, params = model
+    rng = np.random.default_rng(29)
+    eng = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    _prefill(eng, rng.integers(0, cfg.vocab_size, 33).astype(np.int32))
+    path = str(tmp_path / "c.kvship")
+    eng.save_prefix_cache(path)
+    data = bytearray(open(path, "rb").read())
+    data[-3] ^= 0x10
+    open(path, "wb").write(bytes(data))
+    fresh = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    with pytest.raises(TransferIntegrityError):
+        fresh.load_prefix_cache(path)
