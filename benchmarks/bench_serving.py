@@ -42,6 +42,19 @@ Four scenario families, all at **equal physical KV budget**:
                        shipped bytes < naive bytes) and the crossover
                        link bandwidth where the split starts winning,
                        plus a turnaround-vs-bandwidth sweep.
+  * ``weak_scaling`` — the mesh front: the SAME per-device load on one
+                       engine (1 device) vs a 4-slice sharded fleet
+                       (one full engine per slice, steps overlapped
+                       from a thread pool); headline metric is
+                       aggregate decode throughput.  Runs in its own
+                       subprocess with a 4-virtual-device XLA client so
+                       the other scenarios keep the 1-device client
+                       their tracked rows were measured under.  CI
+                       gates fleet >= single-device on its own fresh
+                       multi-core run (the slices genuinely overlap
+                       there; a single-core host serializes them and
+                       pays the per-slice host scheduling on top, so a
+                       locally-committed ratio can sit below 1.0).
 
 All scenarios except ``decode_heavy`` pin ``spec=False`` so their tracked
 rows stay comparable with earlier PRs.
@@ -55,6 +68,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 from typing import Dict, List
 
@@ -101,6 +117,14 @@ DRAFT_K = 4
 DISAGG_DC_SPEEDUP = 8.0
 DISAGG_BW_SWEEP = (1e6, 1e7, 1e8, 1.25e9, 1e10)
 
+# weak-scaling scenario: requests PER DEVICE (the fleet run submits
+# n_devices x this, round-robin landing the identical list on each
+# slice); prompts long enough that per-step device compute dominates the
+# per-slice host scheduling the fleet pays serially on few-core hosts
+WEAK_SCALE_REQUESTS = 8
+WEAK_SCALE_PROMPT_LO, WEAK_SCALE_PROMPT_HI = 24, 44
+WEAK_SCALE_NEW = 16
+
 
 def _requests(vocab: int):
     rng = np.random.default_rng(0)
@@ -139,8 +163,8 @@ def _drive(engine, reqs, rate: int):
 
 
 def _has_work(engine) -> bool:
-    if hasattr(engine, "scheduler"):
-        return engine.scheduler.has_work()
+    if hasattr(engine, "has_work"):
+        return engine.has_work()
     return bool(engine.queue or any(a is not None for a in engine.active))
 
 
@@ -426,6 +450,94 @@ def _scenario_disaggregated(api, params, vocab: int, quick: bool):
     }
 
 
+def _scenario_weak_scaling(quick: bool):
+    """Weak scaling of the sharded front, run in a SUBPROCESS with 4
+    virtual CPU devices: every other scenario keeps this process's plain
+    1-device client (a multi-device client adds per-dispatch overhead —
+    measured ~20% on the host-call-heavy spec path — which would break
+    row comparability with earlier PRs)."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+    cmd = [sys.executable, os.path.abspath(__file__), "--weak-scaling-only"]
+    if quick:
+        cmd.append("--quick")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         check=True)
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def _weak_scaling_body(quick: bool):
+    """Hold the PER-DEVICE load fixed and compare one engine on one
+    device against a fleet of one engine per device
+    (:class:`ShardedDecodeEngine` over the full host mesh, pure data
+    parallelism).  The fleet submission order is arranged so round-robin
+    routing lands the *identical* request list on every slice; ideal
+    weak scaling is aggregate throughput = n_devices x the
+    single-device line, and the CI floor is >= 1.0x (a fleet must never
+    serve slower than one of its slices).  Best-of-N drains on both
+    sides, same rule as every other timed scenario."""
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.serving import PagedDecodeEngine, ShardedDecodeEngine
+    ndev = len(jax.devices())
+    assert ndev >= 4, (
+        "weak_scaling needs >= 4 devices; run through bench_serving.py "
+        "(which spawns this with XLA_FLAGS="
+        "--xla_force_host_platform_device_count=4)")
+    cfg = get_config("gemma-7b").smoke_variant()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    vocab = cfg.vocab_size
+    rng = np.random.default_rng(6)
+    per = 4 if quick else WEAK_SCALE_REQUESTS
+    per_dev = [(rng.integers(0, vocab,
+                             int(rng.integers(WEAK_SCALE_PROMPT_LO,
+                                              WEAK_SCALE_PROMPT_HI)))
+                .astype(np.int32), WEAK_SCALE_NEW) for _ in range(per)]
+    # fleet[k] routes to slice k % ndev -> slice s sees per_dev in order
+    fleet_reqs = [per_dev[k // ndev] for k in range(per * ndev)]
+    lanes = 4
+    kw = dict(n_slots=lanes, cache_len=CACHE_LEN, block_size=BLOCK_SIZE,
+              chunk_tokens=CHUNK_TOKENS, prefix_cache=False, spec=False)
+
+    single = PagedDecodeEngine(api, params, **kw)
+    fleet = ShardedDecodeEngine(api, params, mesh=make_host_mesh(), **kw)
+    _warm(single, WEAK_SCALE_PROMPT_HI, vocab)
+    for e in fleet.engines:
+        _warm(e, WEAK_SCALE_PROMPT_HI, vocab)
+
+    reps = 3 if quick else 5
+    best_s, best_f = None, None
+    for _ in range(reps):
+        _reset_counters(single)
+        r = _drain_timed(single, per_dev)
+        if best_s is None or r["tok_s"] > best_s["tok_s"]:
+            best_s = r
+        for e in fleet.engines:
+            _reset_counters(e)
+        r = _drain_timed(fleet, fleet_reqs)
+        if best_f is None or r["tok_s"] > best_f["tok_s"]:
+            best_f = r
+    s = fleet.stats()
+    best_f["tokens_decoded_per_slice"] = s["tokens_decoded_per_slice"]
+    ratio = best_f["tok_s"] / max(best_s["tok_s"], 1e-9)
+    return {
+        "devices": ndev,
+        "slices": fleet.n_slices,
+        "per_device_requests": per,
+        "reps": reps,
+        "single": best_s,
+        "fleet": best_f,
+        # aggregate fleet decode throughput over the single-device line;
+        # n_devices x is ideal, >= 1.0 is the CI floor
+        "aggregate_ratio": ratio,
+    }
+
+
 def _scenario_long_prompt(api, params, vocab: int, quick: bool):
     rng = np.random.default_rng(1)
     n = max(4, LONG_REQUESTS // (2 if quick else 1))
@@ -525,6 +637,7 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
     all_prefill = _scenario_all_prefill(api, params, cfg.vocab_size, quick)
     decode_heavy = _scenario_decode_heavy(api, params, cfg.vocab_size, quick)
     disagg = _scenario_disaggregated(api, params, cfg.vocab_size, quick)
+    weak = _scenario_weak_scaling(quick)
     ttft_speedup = (long_prompt["pr1"]["ttft_mean_s"]
                     / max(long_prompt["unified"]["ttft_mean_s"], 1e-9))
     tput_speedup = (prefix_heavy["unified"]["tok_s"]
@@ -573,6 +686,13 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
         f"bytes_naive={disagg['bytes_naive']};"
         f"dedup_savings={disagg['dedup_savings']:.2f};"
         f"crossover_nic_bps={'none' if xo is None else f'{xo:.3g}'}")
+    rows.append(
+        f"serving/weak_scaling,0,"
+        f"devices={weak['devices']};slices={weak['slices']};"
+        f"single_tok_s={weak['single']['tok_s']:.1f};"
+        f"fleet_tok_s={weak['fleet']['tok_s']:.1f};"
+        f"aggregate_ratio={weak['aggregate_ratio']:.2f}x;"
+        f"per_slice_tokens={weak['fleet']['tokens_decoded_per_slice']}")
     # scenario-aggregate padding efficiency (total real / total padded
     # across every arrival rate)
     pad_eff_ragged = pad_tokens["ragged"][0] / max(pad_tokens["ragged"][1], 1)
@@ -595,12 +715,14 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
                           "prefix_heavy": prefix_heavy,
                           "all_prefill": all_prefill,
                           "decode_heavy": decode_heavy,
-                          "disaggregated": disagg},
+                          "disaggregated": disagg,
+                          "weak_scaling": weak},
             "speedups": {"ttft_long_prompt": ttft_speedup,
                          "throughput_prefix_heavy": tput_speedup,
                          "all_prefill_tiled_vs_rect": ap_tiled_vs_rect,
                          "all_prefill_tiled_vs_pertok": ap_tiled_vs_pertok,
-                         "decode_heavy_spec_vs_nonspec": spec_speedup},
+                         "decode_heavy_spec_vs_nonspec": spec_speedup,
+                         "weak_scaling_aggregate": weak["aggregate_ratio"]},
             "padding_efficiency": {"mixed_ragged": pad_eff_ragged,
                                    "mixed_rect": pad_eff_rect},
         })
@@ -613,7 +735,14 @@ def main() -> None:
                     help="write machine-readable results (BENCH_serving.json)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweep (CI-sized)")
+    ap.add_argument("--weak-scaling-only", action="store_true",
+                    help="internal: run just the weak_scaling body and "
+                         "print its JSON (spawned by the main run with a "
+                         "4-virtual-device XLA client)")
     args = ap.parse_args()
+    if args.weak_scaling_only:
+        print(json.dumps(_weak_scaling_body(args.quick), sort_keys=True))
+        return
     results: Dict = {}
     for row in run(quick=args.quick, results=results):
         print(row)

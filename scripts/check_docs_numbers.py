@@ -64,6 +64,9 @@ CHECKS = [
     ("README.md", "disaggregated dedup savings",
      r"dedup saves ~(\d+)% of\s+shipped bytes",
      "100 * d['scenarios']['disaggregated']['dedup_savings']", 0.10),
+    ("README.md", "weak_scaling single-core aggregate ratio",
+     r"its ratio\s+\(~(\d+\.\d+)x\) is the host-overhead floor",
+     "d['scenarios']['weak_scaling']['aggregate_ratio']", 0.10),
     ("docs/ARCHITECTURE.md", "mixed padding efficiency (ragged)",
      r"at\s+~(\d+\.\d+) ragged vs",
      "d['padding_efficiency']['mixed_ragged']", 0.05),

@@ -6,6 +6,14 @@ to Mosaic.  ``KERNEL_INTERPRET`` auto-detects the backend; pass
 ``interpret=`` explicitly to override.
 
 Each wrapper handles padding/layout so callers can use model-native shapes.
+
+Mesh-sharded serving note: the paged-attention wrappers take
+``use_kernel`` so the engine can pin the jnp reference path on >1-device
+meshes — a Pallas call is opaque to GSPMD and cannot be partitioned,
+while the reference path's gathers/einsums partition along the
+kv-head-sharded pool with replicated (T,)-stream metadata (see
+``docs/ARCHITECTURE.md`` §7).  On a 1-device mesh the kernel dispatch is
+unchanged.
 """
 from __future__ import annotations
 

@@ -29,7 +29,11 @@ Schedule:
 
 Validated in interpret mode against ``ref.paged_attention_*reference``
 (tests/test_kernels_paged_attention.py); the pure-JAX reference is also the
-production CPU path (kernels/ops.py dispatches on backend).
+production CPU path (kernels/ops.py dispatches on backend), and the
+serving path on >1-device meshes — a Pallas call is opaque to GSPMD, so
+mesh-sharded engines pin ``use_kernel=False`` until these kernels grow a
+shard_map wrapper (each shard would run the identical grid over its
+kv-head slice of the pool; see ``docs/ARCHITECTURE.md`` §7).
 """
 from __future__ import annotations
 

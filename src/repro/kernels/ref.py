@@ -2,6 +2,14 @@
 
 Each function is the mathematical specification the kernel must match
 (asserted with ``assert_allclose`` over shape/dtype sweeps in tests/).
+
+The paged-attention references double as the *serving* path on CPU and
+on multi-device meshes (where a Pallas call cannot be partitioned by
+GSPMD): being ordinary gathers/einsums, they shard transparently when
+the KV pools arrive split over kv_heads on a mesh's "model" axis with
+everything else replicated — no reference function takes a sharding
+argument, placement is entirely the caller's contract
+(``docs/ARCHITECTURE.md`` §7).
 """
 from __future__ import annotations
 

@@ -40,6 +40,24 @@ def mesh_axis_sizes(mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def mesh_slices(mesh):
+    """Split a mesh into per-data-slice tensor-parallel sub-meshes.
+
+    A ``(data..., model)`` mesh of dp * tp devices becomes ``dp`` meshes
+    of shape ``("data", "model") = (1, tp)`` — one per engine slice of a
+    data-parallel serving front.  Each slice keeps the "data" axis (size
+    1) so the sharding rule tables resolve identically on a slice and on
+    the full mesh.  A mesh with no "model" axis yields pure data slices
+    (tp = 1).
+    """
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    devs = mesh.devices.reshape(-1, tp)
+    from jax.sharding import Mesh
+    return [Mesh(devs[i].reshape(1, tp), ("data", "model"))
+            for i in range(devs.shape[0])]
+
+
 def data_axes_of(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -18,8 +18,49 @@ from repro.models import build_model
 from repro.serving import DecodeEngine
 
 
+EPILOG = """\
+mesh serving (CPU smoke — 4 virtual devices, 2 data slices x 2-way
+tensor parallel; on real hardware drop XLA_FLAGS and size the mesh to
+the accelerators):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      python -m repro.launch.serve --arch gemma-7b --mesh-shape 2,2
+
+  # pure tensor parallelism over every visible device
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      python -m repro.launch.serve --arch gemma-7b --tp 4
+"""
+
+
+def _build_mesh(mesh_shape: str, tp: int):
+    """Mesh from --mesh-shape "dp,tp" (first dp*tp devices) or --tp N
+    (all devices, model_parallel=N); None when neither is set."""
+    if mesh_shape:
+        from jax.sharding import Mesh
+        dp, tp_ = (int(x) for x in mesh_shape.split(","))
+        devs = jax.devices()
+        if dp * tp_ > len(devs):
+            raise SystemExit(
+                f"--mesh-shape {dp},{tp_} needs {dp * tp_} devices, "
+                f"found {len(devs)} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={dp * tp_} "
+                "for a CPU smoke)")
+        grid = np.array(devs[:dp * tp_]).reshape(dp, tp_)
+        return Mesh(grid, ("data", "model"))
+    if tp:
+        from repro.launch.mesh import make_host_mesh
+        if len(jax.devices()) % tp:
+            raise SystemExit(
+                f"--tp {tp} does not divide the {len(jax.devices())} "
+                "visible devices")
+        return make_host_mesh(model_parallel=tp)
+    return None
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
@@ -64,8 +105,19 @@ def main() -> None:
     ap.add_argument("--engine", choices=["auto", "paged", "slot"],
                     default="auto",
                     help="paged block-pool engine vs dense-slot reference")
+    ap.add_argument("--mesh-shape", default="",
+                    help='"dp,tp" device mesh: dp data-parallel engine '
+                         "slices x tp-way tensor-parallel shards each "
+                         "(see the epilog for a CPU smoke)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="shortcut: tensor-parallel degree over ALL "
+                         "visible devices (dp = n_devices / tp)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+
+    if args.mesh_shape and args.tp:
+        raise SystemExit("--mesh-shape and --tp are exclusive")
+    mesh = _build_mesh(args.mesh_shape, args.tp)
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -88,6 +140,8 @@ def main() -> None:
               "tile": args.tile,
               "spec": args.spec and api.supports_spec,
               "draft_k": args.draft_k}
+    if mesh is not None:
+        kw["mesh"] = mesh
     eng = DecodeEngine(api, params, paged=paged, n_slots=args.slots,
                        cache_len=args.cache_len, window=window, **kw)
     rng = np.random.default_rng(0)

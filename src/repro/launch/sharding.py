@@ -130,6 +130,11 @@ def spec_for_leaf(path: str, shape: Tuple[int, ...],
             names = cand if isinstance(cand, tuple) else (cand,)
             if any(n in used for n in names):
                 continue
+            # an axis the mesh doesn't carry can't be assigned (e.g. a
+            # serving mesh restricted to {"model": tp} skips every "data"
+            # alternative instead of KeyError-ing)
+            if any(n not in mesh_axes for n in names):
+                continue
             if shape[dim] % _axis_size(mesh_axes, cand) == 0:
                 spec[dim] = cand
                 used.update(names)
@@ -194,6 +199,51 @@ def param_specs(tree: PyTree, mesh_axes: Dict[str, int],
                              policy)
 
     return jax.tree_util.tree_map_with_path(per_leaf, tree)
+
+
+def serving_param_specs(tree: PyTree, mesh_axes: Dict[str, int]) -> PyTree:
+    """Tensor-parallel-only parameter specs for the serving engines.
+
+    Decode batches are a handful of lanes, so the FSDP/batch ("data",
+    "pod") placements the training rules prefer would gather weights every
+    step for nothing.  Restricting the visible mesh to ``{"model": tp}``
+    makes :func:`spec_for_leaf` skip every data alternative (missing axes
+    are never assigned) while keeping the full rule table — including the
+    GQA degradation that replicates wk/wv whose kv heads don't divide the
+    model axis.
+    """
+    tp_axes = {"model": mesh_axes.get("model", 1)}
+    return param_specs(tree, tp_axes, data_axes=())
+
+
+def paged_pool_specs(cache: PyTree, mesh_axes: Dict[str, int]) -> PyTree:
+    """Specs for a paged-KV serving cache (engine ``init_paged_cache``).
+
+    The 5-D K/V pools ``(layers, num_blocks, block_size, Hkv, D)`` shard
+    their kv-head dim over "model" — the block axis must stay whole on
+    every shard so block tables, CoW copies, and transfer import/export
+    address the same physical block ids everywhere (the per-shard pool
+    invariant).  When Hkv doesn't divide the axis (GQA), the pool
+    replicates — matching the wk/wv degradation so the scattered K/V and
+    the pool agree.  Everything else (block tables, per-token metadata)
+    replicates: it is tiny host-built bookkeeping every shard must see
+    whole.
+
+    The generic :func:`cache_specs` is wrong here on purpose-built
+    grounds: it targets dense ``(L, B, S, Hkv, D)`` slabs and would shard
+    the block_size dim of a paged pool.
+    """
+    m = mesh_axes.get("model", 1)
+
+    def per_leaf(leaf):
+        shape = tuple(leaf.shape)
+        spec: List[AxisChoice] = [None] * len(shape)
+        if (len(shape) == 5 and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and shape[-2] % m == 0 and shape[-2] >= m):
+            spec[-2] = "model"
+        return P(*spec)
+
+    return jax.tree.map(per_leaf, cache)
 
 
 # ---------------------------------------------------------------------------

@@ -82,6 +82,15 @@ def apply_moe(p: Dict, x: jax.Array, cfg: ArchConfig,
     B is the group axis (G = B).  All shapes static; capacity-dropped tokens
     fall back to the shared experts / residual only.  Dispatch strategy is
     ``cfg.moe.impl``: "gshard" (einsum baseline) or "gather" (§Perf-1).
+
+    Expert parallelism needs no serving-specific code: the ragged engine
+    feeds the flat token stream as one (1, T) group, the expert stacks
+    ``experts_w_*`` arrive sharded over "model" on their leading E axis
+    (launch/sharding.py rule table), and the dispatch/combine einsums
+    partition along the contraction's E dim by GSPMD propagation — each
+    shard computes its local experts' capacity slabs and the combine
+    all-reduces over "model".  When an explicit mesh context is active the
+    shard_map combine below replaces the einsum combine.
     """
     mo = cfg.moe
     assert mo is not None
@@ -282,8 +291,14 @@ def _expert_parallel_combine(ye, idx, slot_c, w):
         return common.optimization_barrier(jax.lax.psum(ypart, "model"))
 
     gspec = P(bspec, None, None)
-    return jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P("model", bspec, None, None), gspec, gspec, gspec),
-        out_specs=gspec, check_vma=False,
-    )(ye, idx, slot_c, w)
+    in_specs = (P("model", bspec, None, None), gspec, gspec, gspec)
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=gspec,
+                  check_vma=False)(ye, idx, slot_c, w)
+    # jax < 0.5: the experimental module spells the replication check
+    # differently; without this the explicit combine path would crash the
+    # moment a mesh context exists
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(body, mesh=mesh, in_specs=in_specs, out_specs=gspec,
+                  check_rep=False)(ye, idx, slot_c, w)

@@ -103,7 +103,9 @@ def _apply_block(bp: Dict, x: jax.Array, positions: jax.Array,
 def _apply_block_paged(bp: Dict, x: jax.Array, cache_l: Dict,
                        block_tables: jax.Array, pos: jax.Array,
                        q_lens: Optional[jax.Array], cfg: ArchConfig, *,
-                       window: int) -> Tuple[jax.Array, Dict]:
+                       window: int,
+                       use_kernel: Optional[bool] = None
+                       ) -> Tuple[jax.Array, Dict]:
     """Process a chunk of C tokens per lane through one block against the
     paged KV pool — the unified prefill/decode path (C = 1 is plain
     decode).
@@ -133,7 +135,8 @@ def _apply_block_paged(bp: Dict, x: jax.Array, cache_l: Dict,
     new_k = cache_l["k"].at[blk, off].set(k.astype(cache_l["k"].dtype))
     new_v = cache_l["v"].at[blk, off].set(v.astype(cache_l["v"].dtype))
     attn = kernel_ops.paged_attention_chunk(q, new_k, new_v, block_tables,
-                                            pos, q_lens, window=window)
+                                            pos, q_lens, window=window,
+                                            use_kernel=use_kernel)
     attn = layers.project_out(bp["attn"], attn, cfg)
 
     if cfg.parallel_block:
@@ -153,7 +156,9 @@ def _apply_block_ragged(bp: Dict, x: jax.Array, cache_l: Dict,
                         token_tables: Optional[jax.Array],
                         token_pos: jax.Array, slot_mapping: jax.Array,
                         tile_spec, cfg: ArchConfig, *,
-                        window: int) -> Tuple[jax.Array, Dict]:
+                        window: int,
+                        use_kernel: Optional[bool] = None
+                        ) -> Tuple[jax.Array, Dict]:
     """Process one flat stream of T tokens (mixed prefill chunks and
     decodes from many lanes, no per-lane rectangle) through one block
     against the paged KV pool.
@@ -183,11 +188,12 @@ def _apply_block_ragged(bp: Dict, x: jax.Array, cache_l: Dict,
         tables, tile_meta, row_tile, tile = tile_spec
         attn = kernel_ops.paged_attention_ragged_tiled(
             q[0], new_k, new_v, tables, tile_meta, row_tile, tile=tile,
-            window=window)
+            window=window, use_kernel=use_kernel)
     else:
         attn = kernel_ops.paged_attention_ragged(q[0], new_k, new_v,
                                                  token_tables, token_pos,
-                                                 window=window)
+                                                 window=window,
+                                                 use_kernel=use_kernel)
     attn = layers.project_out(bp["attn"], attn[None], cfg)
 
     if cfg.parallel_block:
@@ -385,11 +391,16 @@ def init_paged_cache(cfg: ArchConfig, n_lanes: int, *, num_blocks: int,
 
 def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
                cfg: ArchConfig, *, window: int = 0,
-               compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+               compute_dtype=jnp.bfloat16,
+               use_kernel: Optional[bool] = None) -> Tuple[jax.Array, Dict]:
     """tokens (B,C) -> (logits (B,C,V), new cache) — the unified
     prefill/decode step over the paged KV pool.  A lane's chunk can be a
     multi-token prefill slice, a single decode token (C = 1), or padding;
     prefill and decode therefore share one compiled path per chunk width.
+
+    ``use_kernel`` pins the attention dispatch (None = per-backend
+    default); a mesh-sharded engine passes False so the step lowers to
+    the GSPMD-partitionable reference read on every shard.
 
     ``cache["pos"]`` is the per-lane position of the chunk's first token
     (== tokens already in that lane's KV) and anchors RoPE;
@@ -410,13 +421,13 @@ def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
     for i, bp in enumerate(params.get("head_blocks", [])):
         cl = {"k": cache["head"]["k"][i], "v": cache["head"]["v"][i]}
         x, ncl = _apply_block_paged(bp, x, cl, tables, pos, q_lens, cfg,
-                                    window=window)
+                                    window=window, use_kernel=use_kernel)
         new_head.append(ncl)
 
     def layer_step(x, inp):
         bp, cl = inp
         x, ncl = _apply_block_paged(bp, x, cl, tables, pos, q_lens, cfg,
-                                    window=window)
+                                    window=window, use_kernel=use_kernel)
         return x, ncl
 
     x, new_scan = jax.lax.scan(layer_step, x,
@@ -442,7 +453,8 @@ def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
 
 def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
                 cfg: ArchConfig, *, window: int = 0, tile: int = 16,
-                compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+                compute_dtype=jnp.bfloat16,
+                use_kernel: Optional[bool] = None) -> Tuple[jax.Array, Dict]:
     """tokens (T,) -> (logits (T, V), new cache) — the ragged flat-token
     serving step.  T is one pow2-bucketed stream of *all* scheduled tokens
     this engine iteration (multi-token prefill chunks and single decode
@@ -476,6 +488,13 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
     next-token distribution after the stream's token t, so a decode
     segment carrying drafted tokens at consecutive positions yields the
     model's own greedy continuation at every draft slot in one step.
+
+    Under a mesh-sharded engine nothing here changes: the metadata above
+    arrives replicated, the KV pools arrive kv-head-sharded, and GSPMD
+    partitions the step from those input shardings (``use_kernel=False``
+    keeps the attention read on the partitionable reference path).  The
+    flat stream stays replicated — per-token work is head/expert
+    parallel, not token-parallel.
     """
     token_pos = cache["token_pos"]
     token_lane = cache["token_lane"]
@@ -496,14 +515,14 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
         cl = {"k": cache["head"]["k"][i], "v": cache["head"]["v"][i]}
         x, ncl = _apply_block_ragged(bp, x, cl, token_tables, token_pos,
                                      slot_mapping, tile_spec, cfg,
-                                     window=window)
+                                     window=window, use_kernel=use_kernel)
         new_head.append(ncl)
 
     def layer_step(x, inp):
         bp, cl = inp
         x, ncl = _apply_block_ragged(bp, x, cl, token_tables, token_pos,
                                      slot_mapping, tile_spec, cfg,
-                                     window=window)
+                                     window=window, use_kernel=use_kernel)
         return x, ncl
 
     x, new_scan = jax.lax.scan(layer_step, x,

@@ -87,17 +87,18 @@ def init_paged_cache(cfg: ArchConfig, n_lanes: int, **kw) -> Dict:
 
 def paged_step(params: Dict, cache: Dict, tokens: jax.Array,
                cfg: ArchConfig, *, window: int = 0,
-               compute_dtype=jnp.bfloat16):
+               compute_dtype=jnp.bfloat16, use_kernel=None):
     # image patches enter during prefill; the unified chunked step serves
     # the text backbone (prefill chunks and decode share one compiled path)
     return transformer.paged_step(params["lm"], cache, tokens, cfg,
                                   window=window,
-                                  compute_dtype=compute_dtype)
+                                  compute_dtype=compute_dtype,
+                                  use_kernel=use_kernel)
 
 
 def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
                 cfg: ArchConfig, *, window: int = 0, tile: int = 16,
-                compute_dtype=jnp.bfloat16):
+                compute_dtype=jnp.bfloat16, use_kernel=None):
     # the flat-token serving step sees text tokens only (patches entered
     # during prefill); the LM backbone consumes the ragged stream directly,
     # segment-tiled whenever the engine ships tile_meta/row_tile in the
@@ -107,7 +108,8 @@ def ragged_step(params: Dict, cache: Dict, tokens: jax.Array,
     # through the VLM path unchanged.
     return transformer.ragged_step(params["lm"], cache, tokens, cfg,
                                    window=window, tile=tile,
-                                   compute_dtype=compute_dtype)
+                                   compute_dtype=compute_dtype,
+                                   use_kernel=use_kernel)
 
 
 def paged_decode_step(params: Dict, cache: Dict, tokens: jax.Array,

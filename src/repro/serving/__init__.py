@@ -8,7 +8,7 @@ from repro.serving.batch import (BatchEngine, BatchStats,  # noqa: F401
 from repro.serving.blocks import (BlockAllocator, KVCacheManager,  # noqa: F401
                                   NULL_BLOCK, chain_digest)
 from repro.serving.engine import (DecodeEngine, PagedDecodeEngine,  # noqa: F401
-                                  SlotDecodeEngine)
+                                  ShardedDecodeEngine, SlotDecodeEngine)
 from repro.serving.scheduler import (Request, RequestState,  # noqa: F401
                                      Scheduler, SchedulerConfig,
                                      StepDecision)

@@ -18,6 +18,12 @@ Three kinds live here:
   * :class:`BatchEngine` — stateless batched inference (BraggNN /
     CookieNetAE at the edge): dynamic micro-batching with a latency budget,
     padded to fixed compiled batch sizes.
+
+Every array a RaggedBatch/TileMap carries is host-built per-step metadata;
+under mesh-sharded serving the engine commits them fully *replicated* (the
+replicated-metadata contract, ``docs/ARCHITECTURE.md`` §7): the flat token
+stream is never cut across devices — only weight- and KV-touching tensors
+shard — so nothing in this module is mesh-aware.
 """
 from __future__ import annotations
 

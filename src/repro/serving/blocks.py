@@ -19,6 +19,14 @@ Physical block 0 is reserved as the *null block*: idle engine lanes point
 their table at it so the jitted scatter always has a legal target, and no
 live sequence is ever given block 0.
 
+All bookkeeping here is in terms of *global* block ids, and that is a
+load-bearing contract for mesh-sharded serving: a sharded engine cuts
+only the ``kv_heads`` axis of the device pools, never the block axis, so
+every shard holds its head slice of **every** block and this module's
+tables/refcounts/digests describe all shards at once (the per-shard pool
+invariant, ``docs/ARCHITECTURE.md`` §7).  Data-parallel slices each own
+a full private allocator — nothing here is shared between slices.
+
 Prefix sharing (``enable_prefix_cache=True``): every *full* block is
 content-hashed over its token ids chained to its prefix
 (``digest = H(parent_digest, block_tokens)``), and the manager keeps one

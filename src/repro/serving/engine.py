@@ -24,11 +24,13 @@ dense-slot engine otherwise — the public surface (``submit`` /
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.serving.batch import RaggedBatch, padded_pow2
 from repro.serving.blocks import KVCacheManager
@@ -39,12 +41,40 @@ from repro.serving.spec import NgramProposer, Proposer
 PyTree = Any
 
 
+def _mesh_dp_tp(mesh):
+    """(data-parallel degree, tensor-parallel degree) of a serving mesh:
+    tp is the "model" axis, dp the product of everything else."""
+    from repro.launch.mesh import mesh_axis_sizes
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    dp = 1
+    for name, n in sizes.items():
+        if name != "model":
+            dp *= n
+    return dp, tp
+
+
 def DecodeEngine(model_api, params: PyTree, *, paged: Optional[bool] = None,
-                 **kw):
+                 mesh=None, **kw):
     """Facade: the paged engine when the model family supports it, the
-    dense-slot engine otherwise.  ``paged=True/False`` forces the choice."""
+    dense-slot engine otherwise.  ``paged=True/False`` forces the choice.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) serves across every device it
+    holds: the "model" axis shards one engine tensor-parallel, while any
+    data axis > 1 routes to :class:`ShardedDecodeEngine` — one full paged
+    engine per data slice.  Mesh serving requires the paged path.
+    """
     if paged is None:
         paged = getattr(model_api, "supports_paged", False)
+    if mesh is not None:
+        if not paged:
+            raise ValueError(
+                f"{model_api.cfg.family} models have no paged-KV decode "
+                "path; mesh serving shards the paged engine only")
+        dp, _ = _mesh_dp_tp(mesh)
+        if dp > 1:
+            return ShardedDecodeEngine(model_api, params, mesh=mesh, **kw)
+        return PagedDecodeEngine(model_api, params, mesh=mesh, **kw)
     cls = PagedDecodeEngine if paged else SlotDecodeEngine
     return cls(model_api, params, **kw)
 
@@ -101,13 +131,24 @@ class PagedDecodeEngine:
                  tiled: Optional[bool] = None, tile: int = 16,
                  spec: bool = True, draft_k: int = 4,
                  proposer: Optional[Proposer] = None,
-                 cache_dtype=None, compute_dtype=None) -> None:
+                 mesh=None, cache_dtype=None, compute_dtype=None) -> None:
         """Build the paged engine: block pool, scheduler, jitted steps.
 
         ``ragged``/``tiled`` default to on where supported; ``spec=True``
         wires the speculative path with an :class:`NgramProposer` unless
         ``proposer`` overrides it.  ``num_blocks`` defaults to the pool
         that matches ``n_slots * cache_len`` tokens.
+
+        ``mesh`` (a ``jax.sharding.Mesh`` whose data axes are size 1)
+        runs this one engine tensor-parallel over the mesh's "model"
+        axis: parameters take the serving rule table
+        (:func:`repro.launch.sharding.serving_param_specs`), the KV pools
+        shard their kv-head dim (:func:`paged_pool_specs` — replicating
+        when GQA heads don't divide), and every host-built metadata array
+        is committed replicated, so the compiled step partitions by GSPMD
+        propagation alone.  Scheduler, block pool, CoW, speculation, and
+        transfer logic are untouched — they address logical block ids,
+        which are identical on every shard.
         """
         if not getattr(model_api, "supports_paged", False):
             raise ValueError(
@@ -115,6 +156,18 @@ class PagedDecodeEngine:
                 "path; use DecodeEngine (it falls back to dense slots)")
         self.api = model_api
         self.params = params
+        self.mesh = mesh
+        self.tp = 1
+        self._repl = None               # replicated sharding for metadata
+        self._pool_shardings = None     # canonical NamedShardings per pool
+        if mesh is not None:
+            dp, self.tp = _mesh_dp_tp(mesh)
+            if dp > 1:
+                raise ValueError(
+                    f"mesh has a data-parallel extent of {dp}; "
+                    "PagedDecodeEngine shards ONE engine tensor-parallel — "
+                    "use ShardedDecodeEngine (or DecodeEngine(mesh=...)) "
+                    "for data-parallel slices")
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.eos = eos_token
@@ -182,11 +235,32 @@ class PagedDecodeEngine:
             # drop it now so the first step's cache signature matches every
             # later one (a lingering key = one pointless retrace per bucket)
             self.cache.pop("pos", None)
+        self.kv_heads_sharded = False
+        if mesh is not None:
+            from repro.launch import sharding as shlib
+            from repro.launch.mesh import mesh_axis_sizes
+            axes = mesh_axis_sizes(mesh)
+            pspecs = shlib.serving_param_specs(params, axes)
+            self.params = jax.device_put(params,
+                                         shlib.to_named(pspecs, mesh))
+            cspecs = shlib.paged_pool_specs(self.cache, axes)
+            self._pool_shardings = shlib.to_named(cspecs, mesh)
+            self.cache = jax.device_put(self.cache, self._pool_shardings)
+            self._repl = NamedSharding(mesh, P())
+            self.kv_heads_sharded = any(
+                "model" in s for s in jax.tree.leaves(
+                    cspecs, is_leaf=lambda x: isinstance(x, P)))
         step_kw = {"window": window}
         if self.ragged and self.tiled:
             step_kw["tile"] = tile     # static TileMap q-window rows
         if compute_dtype is not None:
             step_kw["compute_dtype"] = compute_dtype
+        if mesh is not None and mesh.devices.size > 1:
+            # shard-local dispatch: the partitioned step must lower to the
+            # GSPMD-partitionable jnp reference attention on every shard —
+            # the Pallas kernel is a single-device lowering (its scalar
+            # prefetch and pool indexing assume the whole pool is local)
+            step_kw["use_kernel"] = False
         # donate the cache: the KV pool is updated in place rather than
         # double-buffered (decisive for pool size = device memory on TPU).
         # Rectangular: one jitted step per pow2 chunk width (O(log
@@ -222,6 +296,35 @@ class PagedDecodeEngine:
         self.draft_tokens_accepted = 0
         self.spec_verifications = 0       # decode emissions that had drafts
         self.spec_tokens_emitted = 0      # tokens those emissions produced
+        # mesh accounting: collectives in ONE compiled step (counted from
+        # the first bucket's optimized HLO, lazily) and their running total
+        self._collectives_per_step: Optional[int] = None
+        self.collective_ops = 0
+
+    # ------------------------------------------------------------------
+    def _put(self, x):
+        """Commit a host-built array to the device — replicated across the
+        mesh in mesh mode, so GSPMD partitions the step from the sharded
+        params/pools alone (the replicated-metadata contract: block
+        tables, per-token lane/pos/slot metadata, and tile maps are
+        identical bytes on every shard)."""
+        x = jnp.asarray(x)
+        if self._repl is None:
+            return x
+        return jax.device_put(x, self._repl)
+
+    def _count_collectives(self, tokens) -> int:
+        """Collectives per compiled step, from the optimized HLO of the
+        current bucket (counted once; -1 when the backend can't report)."""
+        try:
+            txt = self._step.lower(self.params, self.cache,
+                                   tokens).compile().as_text()
+        except Exception:
+            return -1
+        import re
+        return len(re.findall(
+            r"\b(?:all-reduce|all-gather|reduce-scatter"
+            r"|collective-permute|all-to-all)(?:-start)?\(", txt))
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
@@ -277,11 +380,14 @@ class PagedDecodeEngine:
                 n = decision.num_scheduled[r.request_id]
                 q_lens[r.lane] = n
                 tokens[r.lane, :n] = decision.segment_tokens(r)
-        self.cache["block_tables"] = jnp.asarray(tables)
-        self.cache["pos"] = jnp.asarray(pos)
-        self.cache["q_lens"] = jnp.asarray(q_lens)
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(tokens))
+        self.cache["block_tables"] = self._put(tables)
+        self.cache["pos"] = self._put(pos)
+        self.cache["q_lens"] = self._put(q_lens)
+        dev_tokens = self._put(tokens)
+        if self.mesh is not None and self._collectives_per_step is None:
+            self._collectives_per_step = self._count_collectives(dev_tokens)
+        logits, self.cache = self._step(self.params, self.cache, dev_tokens)
+        self.collective_ops += max(self._collectives_per_step or 0, 0)
         self.scheduled_tokens += int(q_lens.sum())
         self.padded_tokens += self.n_slots * width
         if decision.drafts:
@@ -329,19 +435,22 @@ class PagedDecodeEngine:
         tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
         for r in self.scheduler.running:
             tables[r.lane] = self.kv.padded_table(r.request_id)
-        self.cache["block_tables"] = jnp.asarray(tables)
-        self.cache["token_lane"] = jnp.asarray(batch.token_lane)
-        self.cache["token_pos"] = jnp.asarray(batch.token_pos)
-        self.cache["slot_mapping"] = jnp.asarray(batch.slot_mapping)
+        self.cache["block_tables"] = self._put(tables)
+        self.cache["token_lane"] = self._put(batch.token_lane)
+        self.cache["token_pos"] = self._put(batch.token_pos)
+        self.cache["slot_mapping"] = self._put(batch.slot_mapping)
         if self.tiled:
             # segment-tile the stream: tile capacity is a pure function of
             # the pow2 bucket (windows + n_slots), so the jitted step still
             # retraces per bucket only
             tiles = batch.tiles(self.n_slots, self.tile)
-            self.cache["tile_meta"] = jnp.asarray(tiles.meta)
-            self.cache["row_tile"] = jnp.asarray(tiles.row_tile)
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(batch.tokens))
+            self.cache["tile_meta"] = self._put(tiles.meta)
+            self.cache["row_tile"] = self._put(tiles.row_tile)
+        dev_tokens = self._put(batch.tokens)
+        if self.mesh is not None and self._collectives_per_step is None:
+            self._collectives_per_step = self._count_collectives(dev_tokens)
+        logits, self.cache = self._step(self.params, self.cache, dev_tokens)
+        self.collective_ops += max(self._collectives_per_step or 0, 0)
         self.scheduled_tokens += batch.total_tokens
         self.padded_tokens += batch.padded_tokens
         if decision.drafts:
@@ -377,8 +486,8 @@ class PagedDecodeEngine:
             dst = np.zeros((n,), np.int32)
             for i, (s, d) in enumerate(copies):
                 src[i], dst[i] = s, d
-            self.cache = self._cow(self.cache, jnp.asarray(src),
-                                   jnp.asarray(dst))
+            self.cache = self._cow(self.cache, self._put(src),
+                                   self._put(dst))
             self.cow_block_copies += len(copies)
 
         greedy = (self._run_ragged(decision) if self.ragged
@@ -435,6 +544,11 @@ class PagedDecodeEngine:
                 # matches the accepted sequence exactly
                 self.kv.rewind(r.request_id, r.cursor)
         return decision
+
+    def has_work(self) -> bool:
+        """True while requests are queued or running (uniform across the
+        engine classes, incl. the sharded front)."""
+        return self.scheduler.has_work()
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
         """Step until no work remains; returns (and hands off) the requests
@@ -539,7 +653,7 @@ class PagedDecodeEngine:
                 imported.append(blk)
                 payloads.append(rec.payload)
         if imported:
-            idx = jnp.asarray(np.asarray(imported, np.int32))
+            idx = self._put(np.asarray(imported, np.int32))
             for part in ("scan", "head"):
                 if part not in self.cache:
                     continue
@@ -552,13 +666,21 @@ class PagedDecodeEngine:
                             f"got {p[part]['k'].shape if part in p else None}"
                             f", engine pool expects {want}")
                 # stack along the block axis: (layers, n_new, bs, Hkv, D)
-                new_k = jnp.asarray(np.stack([p[part]["k"]
-                                              for p in payloads], axis=1))
-                new_v = jnp.asarray(np.stack([p[part]["v"]
-                                              for p in payloads], axis=1))
+                new_k = self._put(np.stack([p[part]["k"]
+                                            for p in payloads], axis=1))
+                new_v = self._put(np.stack([p[part]["v"]
+                                            for p in payloads], axis=1))
                 self.cache[part] = {
                     "k": k.at[:, idx].set(new_k.astype(k.dtype)),
                     "v": v.at[:, idx].set(new_v.astype(v.dtype))}
+            if self._pool_shardings is not None:
+                # the eager scatter above mixes replicated payloads into
+                # head-sharded pools; re-commit the canonical sharding so
+                # the per-shard pool invariant survives the import
+                for part in ("scan", "head"):
+                    if part in self.cache:
+                        self.cache[part] = jax.device_put(
+                            self.cache[part], self._pool_shardings[part])
         return {"imported": len(imported), "dedup_skipped": skipped,
                 "dropped_no_space": dropped,
                 "tokens_attachable": (len(imported) + skipped)
@@ -625,7 +747,180 @@ class PagedDecodeEngine:
                                        / max(self.spec_verifications, 1)),
             "draft_acceptance_rate": (self.draft_tokens_accepted
                                       / max(self.tokens_drafted, 1)),
+            # mesh / tensor-parallel accounting (tp=1, zeros off-mesh)
+            "tp": self.tp,
+            "kv_heads_sharded": int(self.kv_heads_sharded),
+            "collectives_per_step": max(self._collectives_per_step or 0, 0),
+            "collective_ops": self.collective_ops,
         }
+
+
+# ---------------------------------------------------------------------------
+class ShardedDecodeEngine:
+    """Data-parallel serving front: one full paged engine per mesh slice.
+
+    The mesh's data axes are cut into ``dp`` slices of ``tp`` devices
+    (:func:`repro.launch.mesh.mesh_slices`); each slice runs a complete
+    :class:`PagedDecodeEngine` — scheduler, block pool, prefix cache,
+    CoW, speculation, transfer — tensor-parallel over its own "model"
+    axis.  Requests are routed round-robin in submission order, so the
+    global output is a deterministic function of the submission sequence
+    (greedy decode per request is schedule-independent — the same
+    property the single-device differential harness relies on).  Slices
+    share no device state; with more than one slice their steps are
+    dispatched from a thread pool, overlapping per-slice XLA executions.
+
+    ``n_slots`` (and the pool size derived from it) is PER SLICE — the
+    front scales capacity with the mesh rather than splitting a fixed
+    budget.
+    """
+
+    def __init__(self, model_api, params: PyTree, *, mesh=None,
+                 **engine_kw) -> None:
+        """Split ``mesh`` (default: all devices, pure data-parallel) into
+        slices and build one :class:`PagedDecodeEngine` per slice;
+        ``engine_kw`` is forwarded to every slice unchanged."""
+        from repro.launch.mesh import make_host_mesh, mesh_slices
+        if mesh is None:
+            mesh = make_host_mesh()
+        self.mesh = mesh
+        slices = mesh_slices(mesh)
+        self.engines = [PagedDecodeEngine(model_api, params, mesh=m,
+                                          **engine_kw)
+                        for m in slices]
+        self.api = model_api
+        self.n_slices = len(self.engines)
+        # global request id -> (slice index, slice-local id); slice-local
+        # finished requests are handed back under their global id
+        self._route: Dict[int, tuple] = {}
+        self._gid_of: Dict[tuple, int] = {}
+        self._next_id = 0
+        self._finished: List[Request] = []
+        self._pool = (ThreadPoolExecutor(max_workers=self.n_slices)
+                      if self.n_slices > 1 else None)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        """Queue a request on the next slice (round-robin by submission
+        order); returns its global id."""
+        gid = self._next_id
+        i = gid % self.n_slices
+        local = self.engines[i].submit(prompt, max_new_tokens)
+        self._next_id += 1
+        self._route[gid] = (i, local)
+        self._gid_of[(i, local)] = gid
+        return gid
+
+    def _collect(self) -> None:
+        """Move every slice's finished requests into the global list,
+        rewriting their ids back to the global namespace."""
+        for i, eng in enumerate(self.engines):
+            done, eng._finished = eng._finished, []
+            for r in done:
+                r.request_id = self._gid_of[(i, r.request_id)]
+                self._finished.append(r)
+
+    def has_work(self) -> bool:
+        """True while any slice still holds queued or running requests."""
+        return any(e.scheduler.has_work() for e in self.engines)
+
+    def step(self) -> None:
+        """One iteration of every slice that has work — concurrently when
+        there is more than one (each slice's XLA execution releases the
+        GIL, so slices genuinely overlap on CPU and on real meshes)."""
+        active = [e for e in self.engines if e.scheduler.has_work()]
+        if self._pool is not None and len(active) > 1:
+            list(self._pool.map(lambda e: e.step(), active))
+        else:
+            for e in active:
+                e.step()
+        self._collect()
+
+    def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
+        """Step all slices until no work remains; returns (and hands off)
+        the requests finished since the last call, under global ids."""
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            self.step()
+        self._collect()
+        out, self._finished = self._finished, []
+        return out
+
+    # aggregate counters, so callers written against one engine (the
+    # launcher's summary line, bench helpers) read the fleet totals
+    @property
+    def steps(self) -> int:
+        """Max per-slice step count (slices step concurrently)."""
+        return max((e.steps for e in self.engines), default=0)
+
+    @property
+    def tokens_decoded(self) -> int:
+        """Total decoded tokens across all slices."""
+        return sum(e.tokens_decoded for e in self.engines)
+
+    @property
+    def tokens_prefilled(self) -> int:
+        """Total prefilled tokens across all slices."""
+        return sum(e.tokens_prefilled for e in self.engines)
+
+    # ------------------------------------------------------------------
+    # KV transfer / persistence across the slice set
+    # ------------------------------------------------------------------
+    def cached_digests(self) -> frozenset:
+        """Digests EVERY slice holds — the safe dedup set: a sender may
+        strip exactly the blocks no possible receiving slice would miss."""
+        out = None
+        for e in self.engines:
+            d = e.cached_digests()
+            out = d if out is None else (out & d)
+        return out if out is not None else frozenset()
+
+    def export_kv_prefix(self, feed: np.ndarray):
+        """Export ``feed``'s cached prefix from the slice covering the
+        most of it (slices cache independently; round-robin routing means
+        any one slice may hold the longest chain)."""
+        best = max(self.engines,
+                   key=lambda e: len(e.kv.export_chain(feed)))
+        return best.export_kv_prefix(feed)
+
+    def import_kv_shipment(self, shipment) -> Dict[str, int]:
+        """Broadcast a shipment into every slice (each has its own pool),
+        summing the per-slice stats — so a warmed prefix is a hit no
+        matter which slice later serves the matching prompt."""
+        total: Dict[str, int] = {}
+        for e in self.engines:
+            for k, v in e.import_kv_shipment(shipment).items():
+                total[k] = total.get(k, 0) + v
+        return total
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Aggregated counters plus the per-slice/per-shard breakdown the
+        bench and SLO work read imbalance from."""
+        per = [e.stats() for e in self.engines]
+        agg: Dict[str, Any] = {
+            "slices": self.n_slices,
+            "tp": per[0]["tp"] if per else 1,
+            "steps": max((p["steps"] for p in per), default=0),
+            "tokens_decoded": sum(p["tokens_decoded"] for p in per),
+            "tokens_prefilled": sum(p["tokens_prefilled"] for p in per),
+            "active": sum(p["active"] for p in per),
+            "waiting": sum(p["waiting"] for p in per),
+            "preemptions": sum(p["preemptions"] for p in per),
+            "collective_ops": sum(p["collective_ops"] for p in per),
+            "collectives_per_step": (per[0]["collectives_per_step"]
+                                     if per else 0),
+            "padding_efficiency": (
+                sum(e.scheduled_tokens for e in self.engines)
+                / max(sum(e.padded_tokens for e in self.engines), 1)),
+            "tokens_decoded_per_slice": [p["tokens_decoded"] for p in per],
+            "tokens_prefilled_per_slice": [p["tokens_prefilled"]
+                                           for p in per],
+            "collective_ops_per_slice": [p["collective_ops"] for p in per],
+            "per_slice": per,
+        }
+        return agg
 
 
 # ---------------------------------------------------------------------------
@@ -732,6 +1027,10 @@ class SlotDecodeEngine:
                     req.done = True
                     self.active[slot] = None
                     self._finished.append(req)
+
+    def has_work(self) -> bool:
+        """True while requests are queued or occupy a slot."""
+        return bool(self.queue) or any(a is not None for a in self.active)
 
     def run_until_drained(self, max_steps: int = 100_000) -> List[Request]:
         """Step until no work remains; returns (and hands off) the requests

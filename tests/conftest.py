@@ -1,7 +1,14 @@
 import os
 
-# keep tests on 1 device — the dry-run (and ONLY the dry-run) forces 512
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# 4 virtual CPU devices so the mesh-sharded serving tests run in tier-1
+# (single-device code is unaffected: unsharded arrays live on device 0).
+# An explicit device-count flag in the environment wins — the dry-run
+# forces 512 in its own process the same way.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
 
 import jax
 import pytest

@@ -181,14 +181,18 @@ def test_ragged_padding_efficiency_beats_rect_on_mixed_load(model):
 # ---------------------------------------------------------------------------
 def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
-                        tiled=True, tile=8, spec=False, draft_k=4):
+                        tiled=True, tile=8, spec=False, draft_k=4,
+                        mesh=False, tp=1):
     """One randomized workload through ragged-paged vs dense-slot engines,
     asserting token identity end-to-end (shared by the hypothesis fuzz and
     the pinned no-hypothesis cases).  ``tiled`` selects the attention
     grid: the segment-tiled sweep (default) or the per-token baseline;
     ``spec``/``draft_k`` turn on speculative multi-token decode (n-gram
     drafts + verification + KV rewind), which must never change a single
-    output token."""
+    output token.  ``mesh`` serves the paged side across every virtual
+    device (``tp``-way tensor parallel, the rest data-parallel slices —
+    a :class:`ShardedDecodeEngine` whenever more than one slice results);
+    outputs must STILL match the single-device dense oracle exactly."""
     cfg, api, params = model
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
@@ -207,18 +211,26 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     max_blocks = -(-COMMON["cache_len"] // bs)
     need = -(-worst // bs)
     pool = (need + 2) if tight_pool else None
-    re = PagedDecodeEngine(api, params, n_slots=n_slots, block_size=bs,
-                           chunk_tokens=chunk_tokens,
-                           token_budget=token_budget, num_blocks=pool,
-                           prefix_cache=prefix, tiled=tiled, tile=tile,
-                           spec=spec, draft_k=draft_k,
-                           **COMMON)
-    assert re.ragged and re.tiled == tiled and re.spec == spec
+    ekw = dict(n_slots=n_slots, block_size=bs, chunk_tokens=chunk_tokens,
+               token_budget=token_budget, num_blocks=pool,
+               prefix_cache=prefix, tiled=tiled, tile=tile,
+               spec=spec, draft_k=draft_k, **COMMON)
+    if mesh:
+        from repro.launch.mesh import make_host_mesh
+        ndev = len(jax.devices())
+        tp_eff = tp if ndev % tp == 0 else 1
+        re = DecodeEngine(api, params, paged=True,
+                          mesh=make_host_mesh(model_parallel=tp_eff), **ekw)
+        first = re.engines[0] if hasattr(re, "engines") else re
+    else:
+        re = PagedDecodeEngine(api, params, **ekw)
+        first = re
+    assert first.ragged and first.tiled == tiled and first.spec == spec
     se = SlotDecodeEngine(api, params, n_slots=n_slots, **COMMON)
-    assert re.max_blocks == max_blocks
+    assert first.max_blocks == max_blocks
     pending = list(zip(prompts, max_new))
     step = 0
-    while pending or re.scheduler.has_work():
+    while pending or re.has_work():
         if pending and step % arrival_every == 0:
             p, m = pending.pop(0)
             re.submit(p, m)
@@ -246,20 +258,24 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     tile=st.sampled_from([4, 8, 16]),
     spec=st.booleans(),
     draft_k=st.sampled_from([1, 2, 4]),
+    mesh=st.booleans(),
+    tp=st.sampled_from([1, 2]),
 )
 def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
                                              n_slots, chunk_tokens,
                                              token_budget, tight_pool,
                                              prefix, arrival_every,
-                                             tiled, tile, spec, draft_k):
+                                             tiled, tile, spec, draft_k,
+                                             mesh, tp):
     """Differential fuzz: random arrival times / prompt lengths / budgets /
     preemption pressure / attention grid (segment-tiled vs per-token) /
-    speculative decode (spec + draft_k) driven through the ragged-paged
-    engine vs the dense-slot oracle, asserting token identity
-    end-to-end."""
+    speculative decode (spec + draft_k) / mesh sharding (tp-way tensor
+    parallel, data-parallel slicing across the rest of the virtual
+    devices) driven through the ragged-paged engine vs the dense-slot
+    oracle, asserting token identity end-to-end."""
     _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
-                        tiled, tile, spec, draft_k)
+                        tiled, tile, spec, draft_k, mesh, tp)
 
 
 @pytest.mark.parametrize("case", [
@@ -275,6 +291,10 @@ def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
     (7, 5, 3, 8, 0, False, True, 1, True, 16, True, 2),  # spec + prefix CoW
     (5, 4, 2, 8, 7, True, True, 2, True, 8, True, 4),    # spec + budget 7
     (9, 4, 2, 6, 0, False, False, 1, False, 8, True, 1), # spec, per-token
+    # mesh-sharded serving: same oracle, + mesh/tp tail
+    (3, 4, 2, 3, 5, True, False, 2, True, 4, False, 4, True, 2),   # dp x tp
+    (7, 5, 3, 8, 0, False, True, 1, True, 16, True, 2, True, 4),   # pure tp
+    (5, 4, 2, 8, 7, True, True, 2, True, 8, True, 4, True, 1),     # pure dp
 ])
 def test_differential_pinned_cases_token_identity(model, case):
     """The fuzz harness's named corners, runnable without hypothesis (the

@@ -1,0 +1,288 @@
+"""Mesh-sharded serving: the token-identity wall across devices.
+
+Four layers, all on a CPU mesh of >= 4 virtual devices (conftest forces
+``--xla_force_host_platform_device_count=4``):
+
+  * **Tensor parallelism** — a single engine whose KV pool is sharded
+    over ``kv_heads`` on the mesh's "model" axis must emit exactly the
+    single-device tokens, while actually communicating (collectives in
+    the compiled step).  When kv heads don't divide the axis (GQA), the
+    pool replicates cleanly instead of crashing — same degradation rule
+    as the training-side param specs.
+  * **Data parallelism** — the :class:`ShardedDecodeEngine` front routes
+    requests round-robin across full per-slice engines; for dense models
+    the fleet output equals the single-device output request-for-request.
+  * **MoE caveat, pinned as an invariant** — expert-choice capacity makes
+    MoE logits depend on batch composition, so a DP fleet is NOT
+    token-identical to one whole-fleet engine.  The invariant that DOES
+    hold (and is asserted): the sharded front equals plain single-device
+    engines fed the same per-slice request subsets — slicing, not
+    sharding, is the semantic change.
+  * **Transfer** — KV blocks exported from a tensor-parallel engine
+    import bit-identically into a single-device engine (and back), and
+    the importer prefix-hits like it prefilled locally: the wire format
+    is sharding-agnostic because payloads are gathered to host.
+"""
+import numpy as np
+import pytest
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import (DecodeEngine, KVShipment, PagedDecodeEngine,
+                               ShardedDecodeEngine)
+    from repro.launch.mesh import make_host_mesh
+    HAVE_JAX = True
+except ImportError:                                    # pragma: no cover
+    HAVE_JAX = False
+
+pytestmark = [
+    pytest.mark.skipif(not HAVE_JAX, reason="jax not available"),
+    pytest.mark.skipif(
+        HAVE_JAX and len(jax.devices()) < 4,
+        reason="needs >=4 devices (conftest forces 4 virtual CPU devices; "
+               "set XLA_FLAGS=--xla_force_host_platform_device_count=4)"),
+]
+
+COMMON = dict(cache_len=64, cache_dtype=jnp.float32,
+              compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("gemma-7b").smoke_variant()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    cfg = get_config("qwen3-moe-235b-a22b").smoke_variant()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _tp_mesh(tp):
+    """Single-slice mesh: 1 data slice x tp-way tensor parallel."""
+    devs = np.array(jax.devices()[:tp]).reshape(1, tp)
+    return Mesh(devs, ("data", "model"))
+
+
+def _drain(eng, prompts, max_new=6, arrival_every=1):
+    """Submit with optional staggering, run to empty, return {id: tokens}."""
+    pending = list(prompts)
+    step = 0
+    while pending or eng.has_work():
+        if pending and step % arrival_every == 0:
+            eng.submit(pending.pop(0), max_new)
+        eng.step()
+        step += 1
+        assert step < 2000, "engine did not drain"
+    return {r.request_id: r.generated for r in eng.run_until_drained()}
+
+
+def _prompts(cfg, n, seed=0, lo=4, hi=20):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# tensor parallelism: one engine, sharded KV pool
+# ---------------------------------------------------------------------------
+def test_tp_engine_token_identical_and_actually_sharded(model):
+    """tp=2 engine == single-device engine token-for-token, with the KV
+    pool genuinely cut over kv_heads and collectives in the step."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 4, seed=1)
+    ref = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    tp = PagedDecodeEngine(api, params, n_slots=2, mesh=_tp_mesh(2),
+                           **COMMON)
+    assert tp.tp == 2 and tp.kv_heads_sharded    # gemma smoke: 4 kv heads
+    got_ref = _drain(ref, prompts)
+    got_tp = _drain(tp, prompts)
+    assert got_tp == got_ref
+    s = tp.stats()
+    assert s["collectives_per_step"] > 0         # TP really communicates
+    assert s["collective_ops"] >= s["collectives_per_step"]
+
+
+def test_tp4_token_identical_over_all_devices(model):
+    """Full-width tensor parallelism (tp = all 4 devices) through the
+    DecodeEngine factory stays a single (non-fleet) engine and matches."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 3, seed=2)
+    ref = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    tp = DecodeEngine(api, params, paged=True, n_slots=2,
+                      mesh=make_host_mesh(model_parallel=4), **COMMON)
+    assert isinstance(tp, PagedDecodeEngine) and tp.tp == 4
+    assert _drain(tp, prompts) == _drain(ref, prompts)
+
+
+def test_gqa_nondividing_kv_replicates_token_identical(moe_model):
+    """qwen3-moe smoke has a single kv head: 1 % 2 != 0, so the pool must
+    degrade to replication (kv_heads_sharded == 0) — and still produce
+    the single-device tokens with the MLP/MoE shards live."""
+    cfg, api, params = moe_model
+    prompts = _prompts(cfg, 3, seed=3)
+    ref = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    tp = PagedDecodeEngine(api, params, n_slots=2, mesh=_tp_mesh(2),
+                           **COMMON)
+    assert tp.tp == 2 and not tp.kv_heads_sharded
+    assert _drain(tp, prompts) == _drain(ref, prompts)
+    assert tp.stats()["collectives_per_step"] > 0
+
+
+# ---------------------------------------------------------------------------
+# data parallelism: the sharded front
+# ---------------------------------------------------------------------------
+def test_dp_front_token_identical_to_single_engine(model):
+    """Dense model, 4 slices, staggered arrivals: the fleet's outputs
+    match the single-device engine request-for-request (greedy decode is
+    schedule-independent, so routing can't change tokens)."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, seed=4)
+    ref = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    dp = DecodeEngine(api, params, paged=True, n_slots=2,
+                      mesh=make_host_mesh(), **COMMON)
+    assert isinstance(dp, ShardedDecodeEngine) and dp.n_slices == 4
+    assert _drain(dp, prompts, arrival_every=2) == \
+        _drain(ref, prompts, arrival_every=2)
+
+
+def test_dp_tp_front_token_identical(model):
+    """2 slices x 2-way TP (the full mesh shape) against the oracle."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 5, seed=5)
+    ref = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    dptp = ShardedDecodeEngine(api, params,
+                               mesh=make_host_mesh(model_parallel=2),
+                               n_slots=2, **COMMON)
+    assert dptp.n_slices == 2 and dptp.engines[0].tp == 2
+    assert _drain(dptp, prompts) == _drain(ref, prompts)
+
+
+def test_moe_dp_front_token_identity_per_slice(moe_model):
+    """MoE + DP: capacity dropping makes logits depend on which requests
+    share a batch, so the fleet need not match one whole-fleet engine.
+    The sharded front must instead equal plain single-device engines fed
+    the same per-slice subsets — proving the mesh machinery adds nothing
+    beyond the (inherent, documented) batch-composition effect."""
+    cfg, api, params = moe_model
+    prompts = _prompts(cfg, 6, seed=6)
+    dp = ShardedDecodeEngine(api, params, mesh=make_host_mesh(),
+                             n_slots=2, **COMMON)
+    n = dp.n_slices
+    got = _drain(dp, prompts)
+    for i in range(n):
+        solo = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+        mine = _drain(solo, prompts[i::n])
+        for local, gid in enumerate(range(i, len(prompts), n)):
+            assert got[gid] == mine[local], (
+                f"slice {i} diverged from its single-device twin")
+
+
+# ---------------------------------------------------------------------------
+# transfer across sharding boundaries
+# ---------------------------------------------------------------------------
+def test_sharded_export_import_roundtrip_token_identical(model):
+    """KV prefill exported from a tp=2 engine imports bit-identically
+    into a single-device engine (and the reverse), and the importer
+    serves the warm prompt with a prefix hit and unchanged tokens."""
+    cfg, api, params = model
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 37).astype(np.int32)
+
+    src = PagedDecodeEngine(api, params, n_slots=2, mesh=_tp_mesh(2),
+                            **COMMON)
+    src.submit(prompt, 1)
+    src.run_until_drained()
+    ship = src.export_kv_prefix(prompt)
+    assert ship.n_blocks == 37 // src.block_size
+    back = KVShipment.deserialize(ship.serialize())
+
+    # sharded -> single-device: bit identity in the importer's pool
+    dst = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    stats = dst.import_kv_shipment(back)
+    assert stats["imported"] == ship.n_blocks
+    for rec in ship.blocks:
+        blk = dst.kv._cached[rec.digest]
+        got = dst._read_block_payload(blk)
+        for part in rec.payload:
+            for kv in ("k", "v"):
+                np.testing.assert_array_equal(got[part][kv],
+                                              rec.payload[part][kv])
+    # the warmed importer prefix-hits and emits the cold engine's tokens
+    cold = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    assert _drain(dst, [prompt]) == _drain(cold, [prompt])
+    assert dst.kv.prefix_hits > 0
+
+    # single-device -> sharded: the mirror direction also lands clean
+    plain = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    plain.submit(prompt, 1)
+    plain.run_until_drained()
+    ship2 = plain.export_kv_prefix(prompt)
+    dst2 = PagedDecodeEngine(api, params, n_slots=2, mesh=_tp_mesh(2),
+                             **COMMON)
+    s2 = dst2.import_kv_shipment(KVShipment.deserialize(ship2.serialize()))
+    assert s2["imported"] == ship2.n_blocks
+    cold2 = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    assert _drain(dst2, [prompt]) == _drain(cold2, [prompt])
+    assert dst2.kv.prefix_hits > 0
+
+
+def test_sharded_front_import_is_fleet_wide(model):
+    """A shipment imported through the front lands on EVERY slice (each
+    has its own pool), so any route serves the prefix warm; the digests
+    every slice holds form the safe dedup set."""
+    cfg, api, params = model
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    src = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    src.submit(prompt, 1)
+    src.run_until_drained()
+    ship = src.export_kv_prefix(prompt)
+
+    dp = ShardedDecodeEngine(api, params, mesh=make_host_mesh(),
+                             n_slots=2, **COMMON)
+    stats = dp.import_kv_shipment(ship)
+    assert stats["imported"] == ship.n_blocks * dp.n_slices
+    assert dp.cached_digests() == {b.digest for b in ship.blocks}
+    # every route decodes the warm prompt to the cold engine's tokens
+    cold = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    want = _drain(cold, [prompt] * dp.n_slices)
+    assert _drain(dp, [prompt] * dp.n_slices) == want
+    assert all(e.kv.prefix_hits > 0 for e in dp.engines)
+
+
+# ---------------------------------------------------------------------------
+# stats contract
+# ---------------------------------------------------------------------------
+def test_sharded_stats_report_per_slice_and_collectives(model):
+    """stats() exposes the per-slice/per-shard breakdown the bench and
+    SLO work read imbalance from, and the lists sum to the aggregates."""
+    cfg, api, params = model
+    dp = ShardedDecodeEngine(api, params,
+                             mesh=make_host_mesh(model_parallel=2),
+                             n_slots=2, **COMMON)
+    _drain(dp, _prompts(cfg, 4, seed=9))
+    s = dp.stats()
+    assert s["slices"] == 2 and s["tp"] == 2
+    assert s["tokens_decoded"] == sum(s["tokens_decoded_per_slice"])
+    assert s["tokens_prefilled"] == sum(s["tokens_prefilled_per_slice"])
+    assert s["collective_ops"] == sum(s["collective_ops_per_slice"])
+    assert all(t > 0 for t in s["tokens_decoded_per_slice"])
+    assert len(s["per_slice"]) == 2
+    assert all(p["tp"] == 2 for p in s["per_slice"])
+    # single-engine mesh stats carry the same accounting keys
+    tp = PagedDecodeEngine(api, params, n_slots=2, mesh=_tp_mesh(2),
+                           **COMMON)
+    for k in ("tp", "kv_heads_sharded", "collectives_per_step",
+              "collective_ops"):
+        assert k in tp.stats()
