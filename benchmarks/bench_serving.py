@@ -42,6 +42,16 @@ Four scenario families, all at **equal physical KV budget**:
                        shipped bytes < naive bytes) and the crossover
                        link bandwidth where the split starts winning,
                        plus a turnaround-vs-bandwidth sweep.
+  * ``oversubscribed`` — the tiered-KV regime: the block pool is sized
+                       to roughly HALF the concurrent working set, so the
+                       scheduler must continuously preempt to keep its
+                       slot guarantee.  host_swap=True (preempted /
+                       evicted blocks parked in the host tier and
+                       swapped back on re-admission) vs host_swap=False
+                       (every preemption recomputes the victim's prefill
+                       from scratch), both token-identical to a
+                       free-running engine with a full pool.  CI gates
+                       swap >= recompute throughput and token identity.
   * ``weak_scaling`` — the mesh front: the SAME per-device load on one
                        engine (1 device) vs a 4-slice sharded fleet
                        (one full engine per slice, steps overlapped
@@ -116,6 +126,13 @@ DRAFT_K = 4
 # link bandwidths (bytes/s) the turnaround sweep prices the shipments at
 DISAGG_DC_SPEEDUP = 8.0
 DISAGG_BW_SWEEP = (1e6, 1e7, 1e8, 1.25e9, 1e10)
+
+# oversubscribed scenario: prompts long enough that a recompute-from-
+# scratch preemption costs several real prefill chunks, at a pool sized
+# ~half the concurrent working set (must sit BELOW n_slots x per-seq
+# blocks or the slot-guarantee loop never preempts and nothing swaps)
+OVERSUB_PROMPT_LO, OVERSUB_PROMPT_HI = 24, 40
+OVERSUB_REQUESTS = 16
 
 # weak-scaling scenario: requests PER DEVICE (the fleet run submits
 # n_devices x this, round-robin landing the identical list on each
@@ -222,6 +239,12 @@ def _reset_counters(engine) -> None:
                  "spec_verifications", "spec_tokens_emitted"):
         if hasattr(engine, attr):
             setattr(engine, attr, 0)
+    for attr in ("host_swap_outs", "host_swap_ins", "host_swap_drops"):
+        if hasattr(engine, attr):
+            setattr(engine, attr, 0)
+    sched = getattr(engine, "scheduler", None)
+    if sched is not None and hasattr(sched, "total_swap_outs"):
+        sched.total_swap_outs = 0
     if getattr(engine, "kv", None) is not None:
         engine.kv.prefix_hits = 0
         engine.kv.prefix_tokens_reused = 0
@@ -230,6 +253,8 @@ def _reset_counters(engine) -> None:
         engine.kv.rewinds = 0
         engine.kv.tokens_rewound = 0
         engine.kv.blocks_rewound = 0
+        if hasattr(engine.kv, "swapped_in_tokens"):
+            engine.kv.swapped_in_tokens = 0
 
 
 def _drain_timed(engine, reqs) -> Dict[str, float]:
@@ -450,6 +475,71 @@ def _scenario_disaggregated(api, params, vocab: int, quick: bool):
     }
 
 
+def _scenario_oversubscribed(api, params, vocab: int, quick: bool):
+    """The tiered-KV regime: pool at ~half the concurrent working set,
+    so the scheduler's slot guarantee must keep preempting someone.  With
+    ``host_swap=False`` every victim recomputes its prefill from scratch
+    on re-admission; with ``host_swap=True`` the victim's full blocks are
+    parked in the host tier at preemption time and swapped back in (one
+    host->device copy) instead.  Both engines — and the free-running
+    full-pool reference — must emit token-identical outputs; the tracked
+    figure is the swap-vs-recompute throughput ratio (CI floor 1.0)."""
+    from repro.serving import PagedDecodeEngine
+    rng = np.random.default_rng(8)
+    n = 8 if quick else OVERSUB_REQUESTS
+    reqs = [(rng.integers(0, vocab,
+                          int(rng.integers(OVERSUB_PROMPT_LO,
+                                           OVERSUB_PROMPT_HI)))
+             .astype(np.int32), MAX_NEW) for _ in range(n)]
+    lanes = 4 if quick else 8
+    # blocks one sequence needs at its longest (prompt + generation)
+    need = -(-(OVERSUB_PROMPT_HI + MAX_NEW) // BLOCK_SIZE)
+    full_pool = lanes * (CACHE_LEN // BLOCK_SIZE) + 1
+    tight_pool = max(need + 1, (lanes * need) // 2)
+
+    def make(num_blocks, host_swap):
+        return PagedDecodeEngine(api, params, n_slots=lanes,
+                                 cache_len=CACHE_LEN,
+                                 block_size=BLOCK_SIZE,
+                                 num_blocks=num_blocks,
+                                 chunk_tokens=CHUNK_TOKENS,
+                                 prefix_cache=True, spec=False,
+                                 host_swap=host_swap)
+
+    free = make(full_pool, False)
+    _warm(free, OVERSUB_PROMPT_HI, vocab)
+    ids = [free.submit(p, m) for p, m in reqs]
+    ref = {r.request_id: r.generated for r in free.run_until_drained()}
+
+    reps = 3 if quick else 5
+    out = {"requests": n, "pool_blocks": tight_pool,
+           "working_set_blocks": lanes * need, "reps": reps}
+    for name, host_swap in (("recompute", False), ("swap", True)):
+        eng = make(tight_pool, host_swap)
+        _warm(eng, OVERSUB_PROMPT_HI, vocab)
+        # identity drain first (untimed): thrash must not change tokens
+        dids = [eng.submit(p, m) for p, m in reqs]
+        got = {r.request_id: r.generated for r in eng.run_until_drained()}
+        assert [got[i] for i in dids] == [ref[i] for i in ids], \
+            f"oversubscribed {name} output diverged from full-pool serving"
+        best = None
+        for _ in range(reps):
+            _reset_counters(eng)
+            r = _drain_timed(eng, reqs)
+            s = eng.stats()
+            r["swap_outs"] = int(s.get("swap_outs", 0))
+            r["swap_ins"] = int(s.get("swap_ins", 0))
+            r["preempt_swap_outs"] = int(s.get("preempt_swap_outs", 0))
+            r["swapped_in_tokens"] = int(s.get("swapped_in_tokens", 0))
+            if best is None or r["tok_s"] > best["tok_s"]:
+                best = r
+        out[name] = best
+    out["token_identical"] = True
+    out["swap_vs_recompute"] = (out["swap"]["tok_s"]
+                                / max(out["recompute"]["tok_s"], 1e-9))
+    return out
+
+
 def _scenario_weak_scaling(quick: bool):
     """Weak scaling of the sharded front, run in a SUBPROCESS with 4
     virtual CPU devices: every other scenario keeps this process's plain
@@ -637,6 +727,7 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
     all_prefill = _scenario_all_prefill(api, params, cfg.vocab_size, quick)
     decode_heavy = _scenario_decode_heavy(api, params, cfg.vocab_size, quick)
     disagg = _scenario_disaggregated(api, params, cfg.vocab_size, quick)
+    oversub = _scenario_oversubscribed(api, params, cfg.vocab_size, quick)
     weak = _scenario_weak_scaling(quick)
     ttft_speedup = (long_prompt["pr1"]["ttft_mean_s"]
                     / max(long_prompt["unified"]["ttft_mean_s"], 1e-9))
@@ -687,6 +778,17 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
         f"dedup_savings={disagg['dedup_savings']:.2f};"
         f"crossover_nic_bps={'none' if xo is None else f'{xo:.3g}'}")
     rows.append(
+        f"serving/oversubscribed,0,"
+        f"swap_tok_s={oversub['swap']['tok_s']:.1f};"
+        f"recompute_tok_s={oversub['recompute']['tok_s']:.1f};"
+        f"swap_vs_recompute={oversub['swap_vs_recompute']:.2f}x;"
+        f"pool={oversub['pool_blocks']};"
+        f"working_set={oversub['working_set_blocks']};"
+        f"preempt={oversub['swap']['preemptions']};"
+        f"swap_outs={oversub['swap']['swap_outs']};"
+        f"swap_ins={oversub['swap']['swap_ins']};"
+        f"preempt_swap_outs={oversub['swap']['preempt_swap_outs']}")
+    rows.append(
         f"serving/weak_scaling,0,"
         f"devices={weak['devices']};slices={weak['slices']};"
         f"single_tok_s={weak['single']['tok_s']:.1f};"
@@ -716,12 +818,15 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
                           "all_prefill": all_prefill,
                           "decode_heavy": decode_heavy,
                           "disaggregated": disagg,
+                          "oversubscribed": oversub,
                           "weak_scaling": weak},
             "speedups": {"ttft_long_prompt": ttft_speedup,
                          "throughput_prefix_heavy": tput_speedup,
                          "all_prefill_tiled_vs_rect": ap_tiled_vs_rect,
                          "all_prefill_tiled_vs_pertok": ap_tiled_vs_pertok,
                          "decode_heavy_spec_vs_nonspec": spec_speedup,
+                         "oversubscribed_swap_vs_recompute":
+                             oversub["swap_vs_recompute"],
                          "weak_scaling_aggregate": weak["aggregate_ratio"]},
             "padding_efficiency": {"mixed_ragged": pad_eff_ragged,
                                    "mixed_rect": pad_eff_rect},

@@ -64,9 +64,15 @@ CHECKS = [
     ("README.md", "disaggregated dedup savings",
      r"dedup saves ~(\d+)% of\s+shipped bytes",
      "100 * d['scenarios']['disaggregated']['dedup_savings']", 0.10),
+    ("README.md", "oversubscribed swap-vs-recompute speedup",
+     r"swap serves ~(\d+(?:\.\d+)?)x the recompute",
+     "d['speedups']['oversubscribed_swap_vs_recompute']", 0.15),
     ("README.md", "weak_scaling single-core aggregate ratio",
      r"its ratio\s+\(~(\d+\.\d+)x\) is the host-overhead floor",
      "d['scenarios']['weak_scaling']['aggregate_ratio']", 0.10),
+    ("docs/ARCHITECTURE.md", "oversubscribed swap-vs-recompute speedup",
+     r"\*\*~(\d+(?:\.\d+)?)x\s+decode throughput\*\*",
+     "d['speedups']['oversubscribed_swap_vs_recompute']", 0.15),
     ("docs/ARCHITECTURE.md", "mixed padding efficiency (ragged)",
      r"at\s+~(\d+\.\d+) ragged vs",
      "d['padding_efficiency']['mixed_ragged']", 0.05),

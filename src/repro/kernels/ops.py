@@ -67,9 +67,13 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, ctx_lens: jax.Array, *,
                     window: int = 0,
                     use_kernel: Optional[bool] = None,
-                    interpret: Optional[bool] = None) -> jax.Array:
+                    interpret: Optional[bool] = None,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Decode-time paged attention read: q (B, 1, H, D) or (B, H, D)
     against KV pools (num_blocks, bs, Hkv, D) via per-lane block tables.
+    With int8 pools, ``k_scale``/``v_scale`` carry the per-(block, slot,
+    kv-head) dequantization scales ((num_blocks, bs, Hkv) float32).
 
     Backend dispatch: on TPU the Pallas kernel gathers blocks through its
     scalar-prefetched index maps; on CPU the pure-JAX reference (an XLA
@@ -91,12 +95,15 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         qg = q.reshape(B, Hkv, H // Hkv, D)
         out = _pa.paged_attention(qg, k_pool, v_pool, block_tables,
                                   ctx_lens, window=window,
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  k_scale=k_scale, v_scale=v_scale)
         out = out.reshape(B, H, D)
     else:
         out = _ref.paged_attention_reference(q, k_pool, v_pool,
                                              block_tables, ctx_lens,
-                                             window=window)
+                                             window=window,
+                                             k_scale=k_scale,
+                                             v_scale=v_scale)
     return out[:, None] if squeeze else out
 
 
@@ -105,7 +112,9 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array,
                           q_starts: jax.Array, q_lens: jax.Array, *,
                           window: int = 0,
                           use_kernel: Optional[bool] = None,
-                          interpret: Optional[bool] = None) -> jax.Array:
+                          interpret: Optional[bool] = None,
+                          k_scale: Optional[jax.Array] = None,
+                          v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Chunked paged attention read: q (B, C, H, D) — C query tokens per
     lane starting at absolute position ``q_starts[b]``, of which
     ``q_lens[b]`` are real (padded rows compute garbage the caller
@@ -129,18 +138,23 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array,
                            (0, 2, 1, 3, 4))
         out = _pa.paged_attention_chunk(q5, k_pool, v_pool, block_tables,
                                         q_starts, q_starts + q_lens,
-                                        window=window, interpret=interpret)
+                                        window=window, interpret=interpret,
+                                        k_scale=k_scale, v_scale=v_scale)
         return jnp.transpose(out, (0, 2, 1, 3, 4)).reshape(B, C, H, D)
     return _ref.paged_attention_chunk_reference(q, k_pool, v_pool,
                                                 block_tables, q_starts,
-                                                window=window)
+                                                window=window,
+                                                k_scale=k_scale,
+                                                v_scale=v_scale)
 
 
 def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, token_tables: jax.Array,
                            token_pos: jax.Array, *, window: int = 0,
                            use_kernel: Optional[bool] = None,
-                           interpret: Optional[bool] = None) -> jax.Array:
+                           interpret: Optional[bool] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Flat-token-stream paged attention read: q (T, H, D) — one 1-D batch
     of T tokens freely mixing prefill chunks and decodes from many lanes —
     against KV pools (num_blocks, bs, Hkv, D).  ``token_tables`` (T,
@@ -164,11 +178,14 @@ def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
         qg = q.reshape(T, Hkv, H // Hkv, D)
         out = _pa.paged_attention_ragged(qg, k_pool, v_pool, token_tables,
                                          token_pos, window=window,
-                                         interpret=interpret)
+                                         interpret=interpret,
+                                         k_scale=k_scale, v_scale=v_scale)
         return out.reshape(T, H, D)
     return _ref.paged_attention_ragged_reference(q, k_pool, v_pool,
                                                  token_tables, token_pos,
-                                                 window=window)
+                                                 window=window,
+                                                 k_scale=k_scale,
+                                                 v_scale=v_scale)
 
 
 def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
@@ -176,7 +193,9 @@ def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
                                  tile_meta: jax.Array, row_tile: jax.Array,
                                  *, tile: int, window: int = 0,
                                  use_kernel: Optional[bool] = None,
-                                 interpret: Optional[bool] = None
+                                 interpret: Optional[bool] = None,
+                                 k_scale: Optional[jax.Array] = None,
+                                 v_scale: Optional[jax.Array] = None
                                  ) -> jax.Array:
     """Segment-tiled flat-stream paged attention read: the same q (T, H, D)
     stream as :func:`paged_attention_ragged`, attended through the tile
@@ -205,11 +224,13 @@ def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
                                                block_tables, tile_meta,
                                                row_tile, tile=tile,
                                                window=window,
-                                               interpret=interpret)
+                                               interpret=interpret,
+                                               k_scale=k_scale,
+                                               v_scale=v_scale)
         return out.reshape(T, H, D)
     return _ref.paged_attention_ragged_tiled_reference(
         q, k_pool, v_pool, block_tables, tile_meta, row_tile, tile=tile,
-        window=window)
+        window=window, k_scale=k_scale, v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------

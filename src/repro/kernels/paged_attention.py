@@ -51,8 +51,12 @@ NEG_INF = -1e30
 
 
 def _paged_attn_kernel(tables_ref, ctx_ref, start_ref, q_ref, k_ref, v_ref,
-                       o_ref, m_scr, l_scr, acc_scr, *, block_size: int,
-                       window: int, scale: float, group: int):
+                       *rest, block_size: int, window: int, scale: float,
+                       group: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)          # logical block index within lane b
     nblk = pl.num_programs(2)
@@ -71,6 +75,9 @@ def _paged_attn_kernel(tables_ref, ctx_ref, start_ref, q_ref, k_ref, v_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale      # (C*G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
         v = v_ref[0, :, 0]                               # (bs, D)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)           # (C*G, bs)
@@ -102,30 +109,44 @@ def _paged_attn_kernel(tables_ref, ctx_ref, start_ref, q_ref, k_ref, v_ref,
 def _paged_attention_rows(q_rows: jax.Array, k_pool: jax.Array,
                           v_pool: jax.Array, block_tables: jax.Array,
                           ctx_lens: jax.Array, q_starts: jax.Array, *,
-                          group: int, window: int,
-                          interpret: bool) -> jax.Array:
+                          group: int, window: int, interpret: bool,
+                          k_scale=None, v_scale=None) -> jax.Array:
     """Shared launcher: q_rows (B, Hkv, R, D) with R = C * group rows."""
     B, Hkv, R, D = q_rows.shape
     num_blocks, bs, Hkv_p, _ = k_pool.shape
     assert Hkv_p == Hkv, (Hkv_p, Hkv)
     max_blocks = block_tables.shape[1]
     scale = 1.0 / (D ** 0.5)
+    quantized = k_scale is not None
 
     kernel = functools.partial(_paged_attn_kernel, block_size=bs,
-                               window=window, scale=scale, group=group)
+                               window=window, scale=scale, group=group,
+                               quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, R, D),
+                     lambda b, h, j, tables, ctx, starts: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, D),
+                     lambda b, h, j, tables, ctx, starts:
+                     (tables[b, j], 0, h, 0)),
+        pl.BlockSpec((1, bs, 1, D),
+                     lambda b, h, j, tables, ctx, starts:
+                     (tables[b, j], 0, h, 0)),
+    ]
+    operands = [q_rows, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, j, tables, ctx, starts:
+                         (tables[b, j], 0, h)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, j, tables, ctx, starts:
+                         (tables[b, j], 0, h)),
+        ]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, Hkv, max_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, R, D),
-                         lambda b, h, j, tables, ctx, starts: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, tables, ctx, starts:
-                         (tables[b, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, j, tables, ctx, starts:
-                         (tables[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, R, D),
                                lambda b, h, j, tables, ctx, starts:
                                (b, h, 0, 0)),
@@ -141,27 +162,36 @@ def _paged_attention_rows(q_rows: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q_rows.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
-      q_starts.astype(jnp.int32), q_rows, k_pool, v_pool)
+      q_starts.astype(jnp.int32), *operands)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, ctx_lens: jax.Array, *,
-                    window: int = 0, interpret: bool = False) -> jax.Array:
+                    window: int = 0, interpret: bool = False,
+                    k_scale: jax.Array = None,
+                    v_scale: jax.Array = None) -> jax.Array:
     """Decode (q_len = 1): q (B, Hkv, G, D) at position ``ctx_lens - 1``;
     pools: (num_blocks, bs, Hkv, D); block_tables: (B, max_blocks) int32
     physical ids (null block = 0 for unallocated logical blocks);
-    ctx_lens: (B,) int32.  Returns (B, Hkv, G, D)."""
+    ctx_lens: (B,) int32.  With int8 pools, ``k_scale``/``v_scale``
+    ((num_blocks, bs, Hkv) float32) ride the same table-indexed DMAs and
+    dequantize each block tile in VMEM.  Returns (B, Hkv, G, D)."""
     B, Hkv, G, D = q.shape
     out = _paged_attention_rows(q, k_pool, v_pool, block_tables, ctx_lens,
                                 ctx_lens - 1, group=G, window=window,
-                                interpret=interpret)
+                                interpret=interpret, k_scale=k_scale,
+                                v_scale=v_scale)
     return out
 
 
-def _ragged_attn_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                        m_scr, l_scr, acc_scr, *, block_size: int,
-                        window: int, scale: float):
+def _ragged_attn_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                        block_size: int, window: int, scale: float,
+                        quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     t = pl.program_id(0)          # flat token index
     j = pl.program_id(2)          # logical block index within the token's lane
     nblk = pl.num_programs(2)
@@ -179,6 +209,9 @@ def _ragged_attn_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
         v = v_ref[0, :, 0]                               # (bs, D)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)           # (G, bs)
@@ -209,7 +242,9 @@ def _ragged_attn_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, token_tables: jax.Array,
                            token_pos: jax.Array, *, window: int = 0,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: bool = False,
+                           k_scale: jax.Array = None,
+                           v_scale: jax.Array = None) -> jax.Array:
     """Flat-token-stream paged attention: q (T, Hkv, G, D) — one mixed
     batch of T tokens from many lanes with NO per-lane rectangle.  Token t
     attends causally over its own lane's blocks (``token_tables[t]``, the
@@ -227,21 +262,35 @@ def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
     max_blocks = token_tables.shape[1]
     scale = 1.0 / (D ** 0.5)
 
+    quantized = k_scale is not None
     kernel = functools.partial(_ragged_attn_kernel, block_size=bs,
-                               window=window, scale=scale)
+                               window=window, scale=scale,
+                               quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D),
+                     lambda t, h, j, tables, pos: (t, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, D),
+                     lambda t, h, j, tables, pos:
+                     (tables[t, j], 0, h, 0)),
+        pl.BlockSpec((1, bs, 1, D),
+                     lambda t, h, j, tables, pos:
+                     (tables[t, j], 0, h, 0)),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1),
+                         lambda t, h, j, tables, pos:
+                         (tables[t, j], 0, h)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda t, h, j, tables, pos:
+                         (tables[t, j], 0, h)),
+        ]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(T, Hkv, max_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda t, h, j, tables, pos: (t, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda t, h, j, tables, pos:
-                         (tables[t, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda t, h, j, tables, pos:
-                         (tables[t, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda t, h, j, tables, pos: (t, h, 0, 0)),
         scratch_shapes=[
@@ -256,13 +305,17 @@ def paged_attention_ragged(q: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((T, Hkv, G, D), q.dtype),
         interpret=interpret,
     )(token_tables.astype(jnp.int32), token_pos.astype(jnp.int32),
-      q, k_pool, v_pool)
+      *operands)
 
 
 def _tiled_ragged_attn_kernel(meta_ref, tables_ref, q_ref, k_ref, v_ref,
-                              o_ref, m_scr, l_scr, acc_scr, *,
-                              block_size: int, tile: int, window: int,
-                              scale: float, group: int):
+                              *rest, block_size: int, tile: int,
+                              window: int, scale: float, group: int,
+                              quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     t = pl.program_id(0)          # tile = one (q-window, segment) pair
     j = pl.program_id(2)          # logical block index within the tile's lane
     nblk = pl.num_programs(2)
@@ -284,6 +337,9 @@ def _tiled_ragged_attn_kernel(meta_ref, tables_ref, q_ref, k_ref, v_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale      # (tile*G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
         v = v_ref[0, :, 0]                               # (bs, D)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)           # (tile*G, bs)
@@ -318,7 +374,9 @@ def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
                                  v_pool: jax.Array, block_tables: jax.Array,
                                  tile_meta: jax.Array, row_tile: jax.Array,
                                  *, tile: int, window: int = 0,
-                                 interpret: bool = False) -> jax.Array:
+                                 interpret: bool = False,
+                                 k_scale: jax.Array = None,
+                                 v_scale: jax.Array = None) -> jax.Array:
     """Segment-tiled flat-stream paged attention: q (T, Hkv, G, D), the
     same mixed 1-D token batch as :func:`paged_attention_ragged`, but tiled
     so each lane's KV blocks are DMA'd once per *q-tile* instead of once
@@ -351,23 +409,36 @@ def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
     qw = qw.reshape(n_windows, tile, Hkv, G, D).transpose(0, 2, 1, 3, 4)
     qw = qw.reshape(n_windows, Hkv, tile * G, D)
 
+    quantized = k_scale is not None
     kernel = functools.partial(_tiled_ragged_attn_kernel, block_size=bs,
                                tile=tile, window=window, scale=scale,
-                               group=G)
+                               group=G, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, tile * G, D),
+                     lambda t, h, j, meta, tables:
+                     (meta[TILE_WINDOW, t], h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, D),
+                     lambda t, h, j, meta, tables:
+                     (tables[meta[TILE_LANE, t], j], 0, h, 0)),
+        pl.BlockSpec((1, bs, 1, D),
+                     lambda t, h, j, meta, tables:
+                     (tables[meta[TILE_LANE, t], j], 0, h, 0)),
+    ]
+    operands = [qw, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1),
+                         lambda t, h, j, meta, tables:
+                         (tables[meta[TILE_LANE, t], j], 0, h)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda t, h, j, meta, tables:
+                         (tables[meta[TILE_LANE, t], j], 0, h)),
+        ]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_tiles, Hkv, max_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, tile * G, D),
-                         lambda t, h, j, meta, tables:
-                         (meta[TILE_WINDOW, t], h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda t, h, j, meta, tables:
-                         (tables[meta[TILE_LANE, t], j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda t, h, j, meta, tables:
-                         (tables[meta[TILE_LANE, t], j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, tile * G, D),
                                lambda t, h, j, meta, tables: (t, h, 0, 0)),
         scratch_shapes=[
@@ -382,7 +453,7 @@ def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n_tiles, Hkv, tile * G, D), q.dtype),
         interpret=interpret,
     )(tile_meta.astype(jnp.int32), block_tables.astype(jnp.int32),
-      qw, k_pool, v_pool)
+      *operands)
 
     # gather every real row's (Hkv, G, D) slab back from its owning tile
     t_idx = row_tile[:T].astype(jnp.int32)
@@ -396,8 +467,9 @@ def paged_attention_ragged_tiled(q: jax.Array, k_pool: jax.Array,
 def paged_attention_chunk(q: jax.Array, k_pool: jax.Array,
                           v_pool: jax.Array, block_tables: jax.Array,
                           q_starts: jax.Array, ctx_lens: jax.Array, *,
-                          window: int = 0,
-                          interpret: bool = False) -> jax.Array:
+                          window: int = 0, interpret: bool = False,
+                          k_scale: jax.Array = None,
+                          v_scale: jax.Array = None) -> jax.Array:
     """Chunked prefill/decode: q (B, Hkv, C, G, D) — C query tokens per
     lane, token c at absolute position ``q_starts[b] + c``, causally masked
     inside the chunk.  ``ctx_lens`` (B,) is each lane's total valid kv
@@ -407,5 +479,6 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array,
     q_rows = q.reshape(B, Hkv, C * G, D)
     out = _paged_attention_rows(q_rows, k_pool, v_pool, block_tables,
                                 ctx_lens, q_starts, group=G, window=window,
-                                interpret=interpret)
+                                interpret=interpret, k_scale=k_scale,
+                                v_scale=v_scale)
     return out.reshape(B, Hkv, C, G, D)

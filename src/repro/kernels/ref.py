@@ -54,12 +54,29 @@ def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # tokens, query c of lane b sits at absolute position q_starts[b] + c and
 # attends causally *inside* the chunk (kpos <= qpos).  Single-token decode
 # is the C = 1 special case with q_starts = ctx_lens - 1.
+#
+# int8 pools: when the engine stores quantized blocks, every reference
+# takes the per-(block, slot, kv-head) scale pools ((num_blocks, bs, Hkv)
+# float32) as ``k_scale``/``v_scale`` and dequantizes the gathered spans to
+# float32 *before* the score einsum — the same contract the Pallas kernels
+# honour in VMEM.
 # ---------------------------------------------------------------------------
+def _apply_block_scales(spans: jax.Array, scale_pool: jax.Array,
+                        tables: jax.Array) -> jax.Array:
+    """Dequantize gathered int8 KV spans (rows, S, Hkv, D) with the scale
+    spans gathered through the same block tables."""
+    rows = tables.shape[0]
+    sc = scale_pool[tables].reshape(rows, -1, scale_pool.shape[2])
+    return spans.astype(jnp.float32) * sc[..., None]
+
+
 def paged_attention_chunk_reference(q: jax.Array, k_pool: jax.Array,
                                     v_pool: jax.Array,
                                     block_tables: jax.Array,
                                     q_starts: jax.Array, *,
-                                    window: int = 0) -> jax.Array:
+                                    window: int = 0,
+                                    k_scale: jax.Array = None,
+                                    v_scale: jax.Array = None) -> jax.Array:
     """q: (B, C, H, D) a chunk of C query tokens per lane; pools:
     (num_blocks, bs, Hkv, D); block_tables: (B, max_blocks) int32;
     q_starts: (B,) absolute position of each lane's first chunk token.
@@ -77,6 +94,9 @@ def paged_attention_chunk_reference(q: jax.Array, k_pool: jax.Array,
     G = H // Hkv
     k = k_pool[block_tables].reshape(B, max_blocks * bs, Hkv, D)
     v = v_pool[block_tables].reshape(B, max_blocks * bs, Hkv, D)
+    if k_scale is not None:
+        k = _apply_block_scales(k, k_scale, block_tables)
+        v = _apply_block_scales(v, v_scale, block_tables)
     qg = q.reshape(B, C, Hkv, G, D)
     s = jnp.einsum("bckgd,bskd->bckgs", qg, k).astype(jnp.float32)
     s = s / (D ** 0.5)
@@ -95,7 +115,9 @@ def paged_attention_ragged_reference(q: jax.Array, k_pool: jax.Array,
                                      v_pool: jax.Array,
                                      token_tables: jax.Array,
                                      token_pos: jax.Array, *,
-                                     window: int = 0) -> jax.Array:
+                                     window: int = 0,
+                                     k_scale: jax.Array = None,
+                                     v_scale: jax.Array = None) -> jax.Array:
     """q: (T, H, D) — one flattened stream of query tokens drawn from many
     lanes (mixed prefill chunks and decodes, no per-lane rectangle);
     pools: (num_blocks, bs, Hkv, D); token_tables: (T, max_blocks) int32 —
@@ -118,6 +140,9 @@ def paged_attention_ragged_reference(q: jax.Array, k_pool: jax.Array,
     # one span gather PER TOKEN — the traffic the tiled oracle below kills
     k = _gather_block_spans(k_pool, token_tables)
     v = _gather_block_spans(v_pool, token_tables)
+    if k_scale is not None:
+        k = _apply_block_scales(k, k_scale, token_tables)
+        v = _apply_block_scales(v, v_scale, token_tables)
     qg = q.reshape(T, Hkv, G, D)
     s = jnp.einsum("tkgd,tskd->tkgs", qg, k).astype(jnp.float32)
     s = s / (D ** 0.5)
@@ -169,7 +194,8 @@ def _gather_block_spans(pool: jax.Array, tables: jax.Array) -> jax.Array:
 def paged_attention_ragged_tiled_reference(
         q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         tables: jax.Array, tile_meta: jax.Array, row_tile: jax.Array, *,
-        tile: int, window: int = 0) -> jax.Array:
+        tile: int, window: int = 0, k_scale: jax.Array = None,
+        v_scale: jax.Array = None) -> jax.Array:
     """q: (T, H, D) — the same flat stream as
     :func:`paged_attention_ragged_reference`, but attended through the
     segment-tiled metadata: ``tables`` (n_lanes, max_blocks) per-lane block
@@ -194,6 +220,9 @@ def paged_attention_ragged_tiled_reference(
     qw = qw.reshape(n_windows, tile, Hkv, G, D)
     k_lanes = _gather_block_spans(k_pool, tables)      # (n_lanes, S, Hkv, D)
     v_lanes = _gather_block_spans(v_pool, tables)
+    if k_scale is not None:
+        k_lanes = _apply_block_scales(k_lanes, k_scale, tables)
+        v_lanes = _apply_block_scales(v_lanes, v_scale, tables)
     win, lo, hi = tile_meta[TILE_WINDOW], tile_meta[TILE_LO], \
         tile_meta[TILE_HI]
     pos0, lane = tile_meta[TILE_POS0], tile_meta[TILE_LANE]
@@ -221,13 +250,15 @@ def paged_attention_ragged_tiled_reference(
 def paged_attention_reference(q: jax.Array, k_pool: jax.Array,
                               v_pool: jax.Array, block_tables: jax.Array,
                               ctx_lens: jax.Array, *,
-                              window: int = 0) -> jax.Array:
+                              window: int = 0,
+                              k_scale: jax.Array = None,
+                              v_scale: jax.Array = None) -> jax.Array:
     """q: (B, H, D) one query token per lane at position ``ctx_lens - 1``;
     the decode special case of :func:`paged_attention_chunk_reference`.
     Returns (B, H, D)."""
     out = paged_attention_chunk_reference(
         q[:, None], k_pool, v_pool, block_tables, ctx_lens - 1,
-        window=window)
+        window=window, k_scale=k_scale, v_scale=v_scale)
     return out[:, 0]
 
 

@@ -197,13 +197,57 @@ class KVCacheManager:
         # can_admit -> begin_seq handoff: the admission plan for one feed,
         # so back-to-back check+admit hashes the prompt once, not twice
         self._plan_cache = None
+        # tiered-KV hooks, installed by the engine when the host swap tier
+        # is on: ``host_has(digest) -> bool`` says a full block's payload is
+        # resident in the host pool (so admission can swap it in instead of
+        # recomputing); ``on_swap_out(digest, blk, parent, tokens)`` fires
+        # just before an eviction drops a registered block, while its
+        # device payload is still addressable
+        self.host_has = None
+        self.on_swap_out = None
+        self._swap_in_ops: List[Tuple[str, int]] = []
+        self.swap_ins = 0
+        self.swapped_in_tokens = 0
 
     # ------------------------------------------------------------------
+    def _protected_blocks(self) -> frozenset:
+        """Device blocks a still-valid admission plan counted as prefix
+        hits.  Evicting one silently converts the planned cache hit into a
+        recompute, so the accounting below shields them while the plan is
+        live (a stale plan — cache_version moved on — protects nothing)."""
+        plan = self._plan_cache
+        if plan is None or plan[1] != self.cache_version:
+            return frozenset()
+        return frozenset(b for b in plan[3] if b is not None)
+
+    def free_blocks(self, protect: frozenset = frozenset(), *,
+                    planned: bool = True) -> int:
+        """THE free-block accounting rule: free-list blocks plus cache-only
+        (LRU) blocks, excluding ``protect`` and — unless ``planned=False``
+        — blocks shielded by a live admission plan.  ``num_free_blocks``,
+        ``can_admit``/``_plan_admission`` and the scheduler's slot-guarantee
+        loop all route through here, so "how many blocks can I still draw"
+        has exactly one answer everywhere."""
+        guard = frozenset(protect) | \
+            (self._protected_blocks() if planned else frozenset())
+        if not guard:
+            return self.allocator.num_free + len(self._lru)
+        return self.allocator.num_free + sum(
+            1 for b in self._lru if b not in guard)
+
+    def drop_plan_protection(self) -> None:
+        """Surrender the cached admission plan (and the eviction shield on
+        its prefix hits).  The scheduler calls this when every reclaimable
+        block is a planned hit and the alternative is preempting live work
+        — the plan's owner re-plans on its next admission attempt."""
+        self._plan_cache = None
+
     @property
     def num_free_blocks(self) -> int:
         """Blocks available for new allocations: the free list plus cached
-        blocks no live sequence references (evicted on demand)."""
-        return self.allocator.num_free + len(self._lru)
+        blocks no live sequence references (evicted on demand), minus any
+        blocks a live admission plan counted as prefix hits."""
+        return self.free_blocks()
 
     def n_tokens(self, seq_id: int) -> int:
         """Current logical length of sequence ``seq_id`` in tokens."""
@@ -229,19 +273,33 @@ class KVCacheManager:
     # ------------------------------------------------------------------
     # internal pool plumbing (eviction-aware)
     # ------------------------------------------------------------------
-    def _evict_one(self) -> None:
-        """Reclaim the least-recently-registered cache-only block."""
-        blk, _ = self._lru.popitem(last=False)
+    def _evict_one(self, protect: frozenset = frozenset()) -> bool:
+        """Reclaim the coldest cache-only block that is neither in
+        ``protect`` nor shielded by a live admission plan.  When the swap
+        hook is installed the block's payload is offered to the host tier
+        first (its device bytes are still addressable here — eviction only
+        ever reclaims blocks whose content landed in an earlier step).
+        Returns False when every LRU block is protected."""
+        guard = frozenset(protect) | self._protected_blocks()
+        blk = next((b for b in self._lru if b not in guard), None)
+        if blk is None:
+            return False
+        self._lru.pop(blk)
         digest = self._block_digest.pop(blk)
+        if self.on_swap_out is not None:
+            parent, tokens = self._cached_meta.get(digest, ("", ()))
+            if tokens:
+                self.on_swap_out(digest, blk, parent, tokens)
         del self._cached[digest]
         self._cached_meta.pop(digest, None)
         self.allocator.decref(blk)          # drop the cache's hold -> free
         self.evictions += 1
         self.cache_version += 1
+        return True
 
-    def _alloc_block(self) -> int:
+    def _alloc_block(self, protect: frozenset = frozenset()) -> int:
         if self.allocator.num_free == 0 and self._lru:
-            self._evict_one()
+            self._evict_one(protect)
         return self.allocator.allocate()
 
     def _attach(self, blk: int) -> None:
@@ -275,21 +333,27 @@ class KVCacheManager:
         self.cache_version += 1
 
     def _match_prefix(self, feed: Sequence[int]
-                      ) -> Tuple[List[str], List[int]]:
-        """Longest chain of cached *full* blocks covering a prefix of feed."""
+                      ) -> Tuple[List[str], List[Optional[int]]]:
+        """Longest chain of *full* blocks covering a prefix of feed.
+
+        Each source is a device block id for a device-resident hit, or
+        ``None`` for a host-tier hit (the payload lives in the engine's
+        host pool and must be swapped into a fresh device block — cheaper
+        than recomputing it, but it does consume a pool block)."""
         digests: List[str] = []
-        blocks: List[int] = []
+        sources: List[Optional[int]] = []
         parent = ""
         bs = self.block_size
         for i in range(0, len(feed) - len(feed) % bs, bs):
             d = _digest(parent, feed[i:i + bs])
             blk = self._cached.get(d)
-            if blk is None:
+            if blk is None and (self.host_has is None
+                                or not self.host_has(d)):
                 break
             digests.append(d)
-            blocks.append(blk)
+            sources.append(blk)
             parent = d
-        return digests, blocks
+        return digests, sources
 
     # ------------------------------------------------------------------
     def lookup_prefix(self, feed: Sequence[int]) -> int:
@@ -297,8 +361,8 @@ class KVCacheManager:
         multiple of ``block_size`` — partially-filled blocks never match)."""
         if not self.enable_prefix_cache:
             return 0
-        _, blocks = self._match_prefix([int(t) for t in feed])
-        return len(blocks) * self.block_size
+        _, sources = self._match_prefix([int(t) for t in feed])
+        return len(sources) * self.block_size
 
     # ------------------------------------------------------------------
     # transfer / persistence hooks (see repro.serving.transfer)
@@ -398,29 +462,33 @@ class KVCacheManager:
         return blk
 
     def _plan_admission(self, feed: Sequence[int]
-                        ) -> Tuple[List[str], List[int], int]:
+                        ) -> Tuple[List[str], List[Optional[int]], int]:
         """Choose the cached prefix blocks a new sequence would attach.
-        Returns (digests, blocks, num_computed).  A full-feed match forces
-        the capped last token's write into the shared tail block (a
-        copy-on-write fork needing one extra block); when the pool cannot
-        afford that fork the last matched block is dropped from the plan,
-        so the tail recomputes into a fresh/evicted block instead."""
-        digests, blocks = self._match_prefix(feed)
-        matched = len(blocks) * self.block_size
+        Returns (digests, sources, num_computed); sources holds device
+        block ids, with ``None`` marking host-tier hits that swap in.  A
+        full-feed match forces the capped last token's write into the
+        shared tail block (a copy-on-write fork needing one extra block);
+        when the pool cannot afford that fork — or the tail hit is
+        host-resident, where a swap-in PLUS a fork costs more than just
+        recomputing one block — the last matched block is dropped from the
+        plan, so the tail recomputes into a fresh/evicted block instead."""
+        digests, sources = self._match_prefix(feed)
+        matched = len(sources) * self.block_size
         num_computed = min(matched, len(feed) - 1)
         if num_computed < matched:       # full match -> CoW on first write
-            shared = set(blocks)
-            avail = self.allocator.num_free + sum(
-                1 for b in self._lru if b not in shared)
-            if avail < 1:
-                digests, blocks = digests[:-1], blocks[:-1]
-                num_computed = len(blocks) * self.block_size
-        return digests, blocks, num_computed
+            shared = frozenset(s for s in sources if s is not None)
+            avail = self.free_blocks(protect=shared, planned=False)
+            if sources[-1] is None or avail < 1:
+                digests, sources = digests[:-1], sources[:-1]
+                num_computed = len(sources) * self.block_size
+        return digests, sources, num_computed
 
     def can_admit(self, feed: Sequence[int]) -> bool:
         """Prefix-aware admission check: can the pool cover ``feed`` given
         the full blocks a prefix match would share (plus the copy-on-write
-        fork a fully-matched prompt needs)?"""
+        fork a fully-matched prompt needs)?  Host-tier hits save compute
+        but still draw a device block each, so they count as allocations
+        here."""
         need = self.blocks_needed(len(feed))
         if need > self.max_blocks_per_seq:
             raise ValueError(
@@ -430,14 +498,14 @@ class KVCacheManager:
             # fast path also skips re-hashing a blocked prompt every step
             return need <= self.num_free_blocks
         feed = [int(t) for t in feed]
-        digests, blocks, num_computed = self._plan_admission(feed)
+        digests, sources, num_computed = self._plan_admission(feed)
         self._plan_cache = (feed, self.cache_version,
-                            digests, blocks, num_computed)
-        extra = 1 if num_computed < len(blocks) * self.block_size else 0
-        shared = set(blocks)
-        evictable = sum(1 for b in self._lru if b not in shared)
-        return need - len(blocks) + extra \
-            <= self.allocator.num_free + evictable
+                            digests, sources, num_computed)
+        extra = 1 if num_computed < len(sources) * self.block_size else 0
+        n_device = sum(1 for s in sources if s is not None)
+        shared = frozenset(s for s in sources if s is not None)
+        return need - n_device + extra \
+            <= self.free_blocks(protect=shared, planned=False)
 
     def begin_seq(self, seq_id: int, feed: Sequence[int]) -> int:
         """Register a sequence, sharing the longest cached prefix of its
@@ -455,23 +523,71 @@ class KVCacheManager:
         cached = self._plan_cache
         self._plan_cache = None
         if cached and cached[0] == feed and cached[1] == self.cache_version:
-            digests, blocks, num_computed = cached[2:]
+            digests, sources, num_computed = cached[2:]
         else:
-            digests, blocks, num_computed = self._plan_admission(feed)
+            digests, sources, num_computed = self._plan_admission(feed)
         n_attach = self.blocks_needed(num_computed)
-        table = blocks[:n_attach]
-        for blk in table:
-            self._attach(blk)
-        n_full = num_computed // self.block_size
-        seq = SeqBlocks(table=list(table), n_tokens=num_computed,
+        sources = sources[:n_attach]
+        shared = frozenset(s for s in sources if s is not None)
+        bs = self.block_size
+        table: List[int] = []
+        for i, src in enumerate(sources):
+            if src is not None:
+                self._attach(src)
+                table.append(src)
+                continue
+            # host-tier hit: draw a fresh device block (never evicting a
+            # device hit of this same plan) and register it under the
+            # chain digest exactly as if a local sequence had completed
+            # it; the engine writes the host payload into the block
+            # before the next step reads it (take_swap_ins)
+            blk = self._alloc_block(protect=shared)
+            self._cached[digests[i]] = blk
+            self._block_digest[blk] = digests[i]
+            self._cached_meta[digests[i]] = (
+                digests[i - 1] if i else "",
+                tuple(feed[i * bs:(i + 1) * bs]))
+            self.allocator.incref(blk)      # the cache's own hold
+            self._swap_in_ops.append((digests[i], blk))
+            self.swap_ins += 1
+            self.swapped_in_tokens += bs
+            self.cache_version += 1
+            table.append(blk)
+        n_full = num_computed // bs
+        seq = SeqBlocks(table=table, n_tokens=num_computed,
                         digests=digests[:n_full],
-                        pending=feed[n_full * self.block_size:num_computed],
+                        pending=feed[n_full * bs:num_computed],
                         history=feed[:num_computed])
         self._seqs[seq_id] = seq
         if num_computed:
             self.prefix_hits += 1
             self.prefix_tokens_reused += num_computed
         return num_computed
+
+    def take_swap_ins(self) -> List[Tuple[str, int]]:
+        """Drain queued host->device swap-ins as ``(digest, block)`` pairs.
+        The engine must write each digest's host payload into the device
+        pools before its next step (and before applying CoW copies — a
+        stale swap-in target that was recycled as a CoW destination must
+        end up holding the copy, not the host bytes)."""
+        ops, self._swap_in_ops = self._swap_in_ops, []
+        return ops
+
+    def digest_block(self, digest: str) -> Optional[int]:
+        """Device block currently registered under ``digest`` (None when
+        evicted) — lets the engine drop swap-in writes whose target block
+        was reclaimed before the payload landed."""
+        return self._cached.get(digest)
+
+    def seq_swap_preserved(self, seq_id: int) -> int:
+        """Full blocks of ``seq_id`` whose contents survive a ``free()``:
+        they are registered in the prefix cache, so with the host swap
+        tier installed a preemption degrades to a swap-out (re-admission
+        swaps them back in) instead of a recompute."""
+        seq = self._seqs.get(seq_id)
+        if seq is None or seq.pending is None:
+            return 0
+        return sum(1 for d in seq.digests if d in self._cached)
 
     def take_copy_ops(self) -> List[Tuple[int, int]]:
         """Drain queued copy-on-write ``(src, dst)`` block copies.  The

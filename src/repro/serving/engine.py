@@ -24,8 +24,9 @@ dense-slot engine otherwise — the public surface (``submit`` /
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,6 +132,8 @@ class PagedDecodeEngine:
                  tiled: Optional[bool] = None, tile: int = 16,
                  spec: bool = True, draft_k: int = 4,
                  proposer: Optional[Proposer] = None,
+                 host_swap: bool = True,
+                 host_swap_blocks: Optional[int] = None,
                  mesh=None, cache_dtype=None, compute_dtype=None) -> None:
         """Build the paged engine: block pool, scheduler, jitted steps.
 
@@ -138,6 +141,19 @@ class PagedDecodeEngine:
         wires the speculative path with an :class:`NgramProposer` unless
         ``proposer`` overrides it.  ``num_blocks`` defaults to the pool
         that matches ``n_slots * cache_len`` tokens.
+
+        ``host_swap`` (on wherever the prefix cache is) backs the device
+        pool with a host-side block tier: a registered block evicted from
+        the device — a preempted sequence's prefix, or a cold cached
+        chain — parks its payload in host memory instead of being lost,
+        and a later admission swaps it back into a fresh device block
+        rather than recomputing it.  ``host_swap_blocks`` caps the tier
+        (LRU-dropped beyond it; default unbounded).
+
+        ``cache_dtype=jnp.int8`` stores the paged KV pools quantized
+        (per-(block, slot, kv-head) symmetric scales ride in parallel
+        ``k_scale``/``v_scale`` pools) — half/quarter the pool bytes, with
+        dequantization fused into the attention read.
 
         ``mesh`` (a ``jax.sharding.Mesh`` whose data axes are size 1)
         runs this one engine tensor-parallel over the mesh's "model"
@@ -219,6 +235,22 @@ class PagedDecodeEngine:
         self.kv = KVCacheManager(num_blocks, block_size,
                                  max_blocks_per_seq=self.max_blocks,
                                  enable_prefix_cache=prefix_cache)
+        # device->host swap tier: digest -> {"parent", "tokens", "payload"},
+        # LRU-ordered.  Installed as the manager's host_has/on_swap_out
+        # hooks so eviction parks payloads here and admission plans
+        # swap-ins against it.
+        self.host_swap = bool(host_swap) and prefix_cache
+        self.host_swap_blocks = host_swap_blocks
+        self._host_tier: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        # digests mid-import whose device payload write has not landed yet:
+        # the swap-out hook must not capture their (garbage) device bytes
+        self._swap_quarantine: set = set()
+        self.host_swap_outs = 0
+        self.host_swap_ins = 0
+        self.host_swap_drops = 0
+        if self.host_swap:
+            self.kv.host_has = self._host_tier.__contains__
+            self.kv.on_swap_out = self._swap_out_block
         self.scheduler = Scheduler(
             SchedulerConfig(n_lanes=n_slots, token_budget=token_budget,
                             chunk_tokens=self.chunk_tokens,
@@ -349,14 +381,14 @@ class PagedDecodeEngine:
     @staticmethod
     def _apply_copies(cache: Dict, src: jax.Array, dst: jax.Array) -> Dict:
         """Copy-on-write block copies: pool[dst] = pool[src] for every
-        layer's K and V pool (padding pairs are (0, 0) — a null-block
-        self-copy no-op)."""
+        pool leaf — K and V, plus the scale planes of quantized pools
+        (every leaf carries the block axis at dim 1; padding pairs are
+        (0, 0) — a null-block self-copy no-op)."""
         out = dict(cache)
         for part in ("scan", "head"):
             if part in cache:
-                k, v = cache[part]["k"], cache[part]["v"]
-                out[part] = {"k": k.at[:, dst].set(k[:, src]),
-                             "v": v.at[:, dst].set(v[:, src])}
+                out[part] = {name: arr.at[:, dst].set(arr[:, src])
+                             for name, arr in cache[part].items()}
         return out
 
     def _run_rect(self, decision: StepDecision):
@@ -477,6 +509,20 @@ class PagedDecodeEngine:
         KV cache is rewound past the rejected draft slots so the next
         step's appends land where the accepted sequence actually ends."""
         decision = self.scheduler.schedule()
+        # host->device swap-ins FIRST: a swapped-in block must hold its
+        # payload before a CoW copy reads it (a fully-matched prompt can
+        # fork a block this very admission just swapped in) and before
+        # the step attends over it
+        if self.host_swap:
+            swapins = self.kv.take_swap_ins()
+            if swapins:
+                self._apply_swap_ins(swapins)
+            if self.host_swap_blocks is not None:
+                # trim AFTER the swap-ins land: a queued swap-in's payload
+                # must never be dropped between planning and application
+                while len(self._host_tier) > self.host_swap_blocks:
+                    self._host_tier.popitem(last=False)
+                    self.host_swap_drops += 1
         # apply queued copy-on-write copies BEFORE this step's KV writes
         # land in the forked blocks
         copies = self.kv.take_copy_ops()
@@ -573,15 +619,105 @@ class PagedDecodeEngine:
         return self.kv.cached_digests()
 
     def _read_block_payload(self, blk: int) -> Dict:
-        """Read one physical block's K/V off the device pools, as host
-        arrays keyed ``part -> {"k", "v"}`` (the wire payload layout)."""
+        """Read one physical block's slice of every device pool leaf, as
+        host arrays keyed ``part -> {"k", "v", ...}`` (the wire payload
+        layout; int8 pools add their ``k_scale``/``v_scale`` planes)."""
         out: Dict[str, Dict[str, np.ndarray]] = {}
         for part in ("scan", "head"):
             if part in self.cache:
-                out[part] = {
-                    "k": np.asarray(self.cache[part]["k"][:, blk]),
-                    "v": np.asarray(self.cache[part]["v"][:, blk])}
+                out[part] = {name: np.asarray(arr[:, blk])
+                             for name, arr in self.cache[part].items()}
         return out
+
+    def _write_block_payloads(self, blocks: List[int],
+                              payloads: List[Dict]) -> None:
+        """Scatter host block payloads into the device pools at ``blocks``
+        (block axis 1 of every pool leaf), restoring the canonical pool
+        shardings afterwards in mesh mode."""
+        idx = self._put(np.asarray(blocks, np.int32))
+        for part in ("scan", "head"):
+            if part not in self.cache:
+                continue
+            pools = self.cache[part]
+            for p in payloads:
+                if part not in p or set(p[part]) != set(pools):
+                    raise ValueError(
+                        f"payload pool-name mismatch on '{part}': got "
+                        f"{sorted(p.get(part, {}))}, engine pools are "
+                        f"{sorted(pools)} (fp and int8 pools do not mix)")
+            new = {}
+            for name, arr in pools.items():
+                want = arr.shape[:1] + arr.shape[2:]
+                for p in payloads:
+                    if p[part][name].shape != want:
+                        raise ValueError(
+                            f"payload KV geometry mismatch on "
+                            f"'{part}/{name}': got {p[part][name].shape}, "
+                            f"engine pool expects {want}")
+                # stack along the block axis: (layers, n_new, ...)
+                stack = self._put(np.stack([p[part][name]
+                                            for p in payloads], axis=1))
+                new[name] = arr.at[:, idx].set(stack.astype(arr.dtype))
+            self.cache[part] = new
+        if self._pool_shardings is not None:
+            # the eager scatter above mixes replicated payloads into
+            # head-sharded pools; re-commit the canonical sharding so
+            # the per-shard pool invariant survives the write
+            for part in ("scan", "head"):
+                if part in self.cache:
+                    self.cache[part] = jax.device_put(
+                        self.cache[part], self._pool_shardings[part])
+
+    # ------------------------------------------------------------------
+    # device->host swap tier (tiered KV; see docs/ARCHITECTURE.md)
+    # ------------------------------------------------------------------
+    def _swap_out_block(self, digest: str, blk: int, parent: str,
+                        tokens) -> None:
+        """Eviction hook (``KVCacheManager.on_swap_out``): park an evicted
+        registered block's device payload in the host tier.
+
+        Skips digests the tier already holds — a swapped-in block being
+        re-evicted before its device write landed would capture garbage,
+        and the host copy is bit-identical anyway (full blocks are
+        immutable once registered) — and quarantined digests mid-import,
+        whose payload write is still pending."""
+        if digest in self._host_tier:
+            self._host_tier.move_to_end(digest)
+            return
+        if digest in self._swap_quarantine:
+            return
+        self._host_tier[digest] = {"parent": parent,
+                                   "tokens": tuple(int(t) for t in tokens),
+                                   "payload": self._read_block_payload(blk)}
+        self.host_swap_outs += 1
+
+    def _apply_swap_ins(self, ops: List[Tuple[str, int]]) -> None:
+        """Write queued host->device swap-ins into the KV pools.  Runs
+        before CoW copies and before the step's own writes; an op whose
+        target block was evicted (or re-registered to a different block)
+        between planning and application is dropped — the current
+        registration, if any, carries its own op."""
+        blocks: List[int] = []
+        payloads: List[Dict] = []
+        for digest, blk in ops:
+            if self.kv.digest_block(digest) != blk:
+                continue
+            ent = self._host_tier.get(digest)
+            if ent is None:
+                # the planner only swaps in digests host_has() confirmed,
+                # and the tier is never trimmed with an op in flight — a
+                # miss here would leave a garbage block attached to a
+                # live sequence, so fail loudly rather than serve it
+                raise RuntimeError(
+                    f"swap-in payload for block digest {digest[:12]} "
+                    "missing from the host tier")
+            self._host_tier.move_to_end(digest)
+            blocks.append(blk)
+            payloads.append(ent["payload"])
+        if not blocks:
+            return
+        self._write_block_payloads(blocks, payloads)
+        self.host_swap_ins += len(blocks)
 
     def export_kv_prefix(self, feed: np.ndarray):
         """Package the cached KV prefix of ``feed`` as a
@@ -629,58 +765,45 @@ class PagedDecodeEngine:
             raise ValueError(
                 f"shipment block_size {shipment.block_size} != engine "
                 f"block_size {self.block_size}")
-        imported: List[int] = []
+        imported: List[Tuple[str, int]] = []
         payloads: List[Dict] = []
         skipped = dropped = 0
-        for rec in shipment.blocks:
-            if self.kv.has_digest(rec.digest):
-                skipped += 1
-                continue
-            if rec.payload is None:
-                raise TransferIntegrityError(
-                    f"block {rec.digest[:12]} arrived without a payload "
-                    "but is not in this engine's cache — dedup stripped "
-                    "a block the receiver does not hold")
-            try:
-                blk = self.kv.import_block(rec.parent, rec.tokens,
-                                           digest=rec.digest)
-            except RuntimeError:
-                # pool full of live sequences: drop the chain's remainder
-                dropped = sum(1 for b in shipment.blocks
-                              if not self.kv.has_digest(b.digest))
-                break
-            if blk is not None:
-                imported.append(blk)
-                payloads.append(rec.payload)
-        if imported:
-            idx = self._put(np.asarray(imported, np.int32))
-            for part in ("scan", "head"):
-                if part not in self.cache:
+        try:
+            for rec in shipment.blocks:
+                if self.kv.has_digest(rec.digest):
+                    skipped += 1
                     continue
-                k, v = self.cache[part]["k"], self.cache[part]["v"]
-                want = k.shape[:1] + k.shape[2:]
-                for p in payloads:
-                    if part not in p or p[part]["k"].shape != want:
-                        raise ValueError(
-                            f"shipment KV geometry mismatch on '{part}': "
-                            f"got {p[part]['k'].shape if part in p else None}"
-                            f", engine pool expects {want}")
-                # stack along the block axis: (layers, n_new, bs, Hkv, D)
-                new_k = self._put(np.stack([p[part]["k"]
-                                            for p in payloads], axis=1))
-                new_v = self._put(np.stack([p[part]["v"]
-                                            for p in payloads], axis=1))
-                self.cache[part] = {
-                    "k": k.at[:, idx].set(new_k.astype(k.dtype)),
-                    "v": v.at[:, idx].set(new_v.astype(v.dtype))}
-            if self._pool_shardings is not None:
-                # the eager scatter above mixes replicated payloads into
-                # head-sharded pools; re-commit the canonical sharding so
-                # the per-shard pool invariant survives the import
-                for part in ("scan", "head"):
-                    if part in self.cache:
-                        self.cache[part] = jax.device_put(
-                            self.cache[part], self._pool_shardings[part])
+                if rec.payload is None:
+                    raise TransferIntegrityError(
+                        f"block {rec.digest[:12]} arrived without a payload "
+                        "but is not in this engine's cache — dedup stripped "
+                        "a block the receiver does not hold")
+                # quarantine until the payload write lands: a later
+                # import_block can LRU-evict this block, and the swap-out
+                # hook must not capture its still-unwritten device bytes
+                self._swap_quarantine.add(rec.digest)
+                try:
+                    blk = self.kv.import_block(rec.parent, rec.tokens,
+                                               digest=rec.digest)
+                except RuntimeError:
+                    # pool full of live sequences: drop the chain's tail
+                    dropped = sum(1 for b in shipment.blocks
+                                  if not self.kv.has_digest(b.digest))
+                    break
+                if blk is not None:
+                    imported.append((rec.digest, blk))
+                    payloads.append(rec.payload)
+            # importing can itself evict an earlier import of this very
+            # shipment (and recycle its block): write only payloads whose
+            # registration survived, into their still-registered blocks
+            live = [(b, p) for (d, b), p in zip(imported, payloads)
+                    if self.kv.digest_block(d) == b]
+            if live:
+                self._write_block_payloads([b for b, _ in live],
+                                           [p for _, p in live])
+        finally:
+            for rec in shipment.blocks:
+                self._swap_quarantine.discard(rec.digest)
         return {"imported": len(imported), "dedup_skipped": skipped,
                 "dropped_no_space": dropped,
                 "tokens_attachable": (len(imported) + skipped)
@@ -747,6 +870,14 @@ class PagedDecodeEngine:
                                        / max(self.spec_verifications, 1)),
             "draft_acceptance_rate": (self.draft_tokens_accepted
                                       / max(self.tokens_drafted, 1)),
+            # host swap tier (zeros when host_swap=False)
+            "host_swap": int(self.host_swap),
+            "swap_outs": self.host_swap_outs,
+            "swap_ins": self.host_swap_ins,
+            "swapped_in_tokens": self.kv.swapped_in_tokens,
+            "host_tier_blocks": len(self._host_tier),
+            "host_swap_drops": self.host_swap_drops,
+            "preempt_swap_outs": self.scheduler.total_swap_outs,
             # mesh / tensor-parallel accounting (tp=1, zeros off-mesh)
             "tp": self.tp,
             "kv_heads_sharded": int(self.kv_heads_sharded),

@@ -34,7 +34,11 @@ a ``num_scheduled_tokens`` count under one shared budget:
     part of its chunk, the chunk is truncated instead (mid-chunk
     preemption): partial progress is kept and the step proceeds.  Greedy
     decode is deterministic, so replays reproduce the identical
-    continuation.
+    continuation.  With the engine's host swap tier installed
+    (``KVCacheManager.on_swap_out``) preemption degrades to **swap-out**:
+    the victim's registered full blocks stay recoverable (device prefix
+    cache first, spilling to the host pool under pressure) and its
+    re-admission swaps them back in instead of recomputing them.
 """
 from __future__ import annotations
 
@@ -151,6 +155,11 @@ class StepDecision:
     n_draft_tokens: int = 0          # drafted tokens scheduled this step
     n_admitted: int = 0
     n_preempted: int = 0
+    # preemptions that degraded to swap-outs: the victim's registered full
+    # blocks stay recoverable (device prefix cache, spilling to the host
+    # tier under pressure), so its resume swaps KV back in instead of
+    # recomputing it.  Counted within n_preempted, not in addition to it.
+    n_swapped_out: int = 0
     prefix_cached_tokens: int = 0    # feed tokens skipped via prefix sharing
 
     def segment_tokens(self, req: Request) -> List[int]:
@@ -180,6 +189,7 @@ class Scheduler:
         self.running: List[Request] = []          # admission (priority) order
         self.lanes: List[Optional[Request]] = [None] * cfg.n_lanes
         self.total_preemptions = 0
+        self.total_swap_outs = 0
         self.total_admitted = 0
         # last admission refusal: (request, feed_len, free_blocks, version)
         # — while none of those change, re-asking (and re-hashing a long
@@ -235,6 +245,15 @@ class Scheduler:
 
     def _preempt(self, victim: Request, decision: StepDecision,
                  scheduled: List[Request]) -> None:
+        # with the host swap tier installed, a victim whose full blocks
+        # are registered is swapped out rather than recomputed: free()
+        # keeps those blocks recoverable through the prefix cache, the
+        # eviction hook spills them host-side under pressure, and the
+        # victim's re-admission swaps them back in
+        if (self.kv.on_swap_out is not None
+                and self.kv.seq_swap_preserved(victim.request_id) > 0):
+            decision.n_swapped_out += 1
+            self.total_swap_outs += 1
         self.kv.free(victim.request_id)
         self.lanes[victim.lane] = None
         victim.lane = None
@@ -339,8 +358,19 @@ class Scheduler:
             k = 0
             while k < n:
                 self_blocked = False
+                # num_free_blocks routes through KVCacheManager.free_blocks,
+                # so an LRU block that a live admission plan counted as a
+                # prefix hit is NOT treated as free here — evicting it would
+                # silently turn the planned hit into a recompute
                 while (self.kv.append_needs_block(req.request_id)
                        and self.kv.num_free_blocks == 0):
+                    if self.kv.free_blocks(planned=False) > 0:
+                        # every reclaimable block is shielding a planned
+                        # admission hit: surrender the plan (its owner
+                        # re-plans, worst case recomputing the prefix)
+                        # before preempting live work
+                        self.kv.drop_plan_protection()
+                        continue
                     victim = self.running[-1]
                     if victim is req:
                         self_blocked = True

@@ -60,7 +60,8 @@ from repro.core.simclock import SimClock
 from repro.core.transfer import DataStore, FileRef, TransferService
 from repro.serving.blocks import chain_digest
 
-# part -> {"k": ndarray, "v": ndarray}, each (n_layers, block_size, Hkv, D)
+# part -> {"k": ndarray, "v": ndarray}, each (n_layers, block_size, Hkv, D);
+# int8 pools add "k_scale"/"v_scale" scale planes (n_layers, block_size, Hkv)
 ArrayPayload = Dict[str, Dict[str, np.ndarray]]
 
 _MAGIC = b"KVSHIP01"
@@ -75,14 +76,15 @@ class TransferIntegrityError(RuntimeError):
 def payload_checksum(payload: ArrayPayload) -> str:
     """Sha256 over a block payload's canonical byte representation.
 
-    Canonical order is sorted part names, ``k`` then ``v`` within a part,
-    with each array's dtype and shape mixed into the hash before its raw
+    Canonical order is sorted part names, then sorted array names within a
+    part (``k``/``v``, plus ``k_scale``/``v_scale`` for int8 pools), with
+    each array's dtype and shape mixed into the hash before its raw
     bytes — so a payload that was reshaped, retyped, or bit-flipped in
     flight fails verification even at identical byte length.
     """
     h = hashlib.sha256()
     for part in sorted(payload):
-        for name in ("k", "v"):
+        for name in sorted(payload[part]):
             arr = np.ascontiguousarray(payload[part][name])
             h.update(f"{part}/{name}:{arr.dtype}:{arr.shape}".encode())
             h.update(arr.tobytes())
@@ -187,7 +189,7 @@ class KVShipment:
             if rec.payload is not None:
                 arrays = []
                 for part in sorted(rec.payload):
-                    for name in ("k", "v"):
+                    for name in sorted(rec.payload[part]):
                         arr = np.ascontiguousarray(rec.payload[part][name])
                         arrays.append({"part": part, "name": name,
                                        "dtype": str(arr.dtype),

@@ -141,6 +141,60 @@ def test_full_prefix_match_accounts_for_cow_block():
     t.free(1)
 
 
+def test_free_block_accounting_unified_and_plan_aware():
+    """Regression for the free-count drift that made preemption lie:
+    ``num_free_blocks``, the admission planner, and the raw allocator
+    count must all answer through one eviction-aware helper.  A plan
+    cached by ``can_admit`` shields its device-hit blocks — they are
+    neither counted free nor reclaimable — until the plan is consumed,
+    invalidated by a cache mutation, or explicitly dropped."""
+    bs = 2
+    m = KVCacheManager(8, bs, max_blocks_per_seq=4,
+                       enable_prefix_cache=True)
+    feed = [1, 2, 3, 4]
+    m.begin_seq(0, feed)
+    for t in feed[m.n_tokens(0):]:
+        m.append_token(0, t)
+    chain = list(m.block_table(0))
+    m.free(0)                        # B1,B2 now cache-only, on the LRU
+    m.begin_seq(1, [9, 8])           # one unrelated cold block X
+    for t in [9, 8][m.n_tokens(1):]:
+        m.append_token(1, t)
+    m.free(1)
+    assert len(m._lru) == 3
+    # eviction-aware: every cache-only block counts as reclaimable, so
+    # the scheduler and the planner see the same number
+    assert m.num_free_blocks == 7
+    assert m.free_blocks(planned=False) == 7
+    assert m.allocator.num_free == 4          # the raw list is smaller
+    m.allocate(2, 4 * bs)                     # drain the raw free list
+    assert m.num_free_blocks == 3             # cache-only blocks remain
+    # planning an admission that hits B1,B2 shields exactly those two
+    # (with the raw list empty the planner cannot take its fast path)
+    assert m.can_admit(feed)
+    assert m.num_free_blocks == 1
+    assert m.free_blocks(planned=False) == 3  # raw view stays plan-blind
+    m.drop_plan_protection()
+    assert m.num_free_blocks == 3             # shield released on demand
+    assert m.can_admit(feed)                  # re-arm the plan
+    m.allocate(3, bs)                         # forces one eviction
+    assert m.evictions == 1
+    assert m.lookup_prefix(feed) == 4         # planned hits survived
+    assert m.lookup_prefix([9, 8]) == 0       # the cold block was taken
+    # the surviving plan is still consumable: the admission attaches the
+    # protected chain instead of recomputing it
+    m.free(2)
+    assert m.begin_seq(4, feed) == 3          # full match, tail recompute
+    assert m.block_table(4)[:2] == chain
+    m.append_token(4, feed[3])                # CoW fork of the shared tail
+    assert m.cow_copies == 1
+    for sid in (3, 4):
+        m.free(sid)
+    m.take_copy_ops()
+    assert m.num_free_blocks == 7             # accounting closed the loop
+    assert m.allocator.num_allocated == len(m._lru)
+
+
 # ---------------------------------------------------------------------------
 # speculative-decode rewind
 # ---------------------------------------------------------------------------

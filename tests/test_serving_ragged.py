@@ -182,7 +182,8 @@ def test_ragged_padding_efficiency_beats_rect_on_mixed_load(model):
 def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
                         tiled=True, tile=8, spec=False, draft_k=4,
-                        mesh=False, tp=1):
+                        mesh=False, tp=1, quantized=False, swap=True,
+                        oversub=False):
     """One randomized workload through ragged-paged vs dense-slot engines,
     asserting token identity end-to-end (shared by the hypothesis fuzz and
     the pinned no-hypothesis cases).  ``tiled`` selects the attention
@@ -192,7 +193,15 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     output token.  ``mesh`` serves the paged side across every virtual
     device (``tp``-way tensor parallel, the rest data-parallel slices —
     a :class:`ShardedDecodeEngine` whenever more than one slice results);
-    outputs must STILL match the single-device dense oracle exactly."""
+    outputs must STILL match the single-device dense oracle exactly.
+
+    Tiered-KV dimensions: ``quantized`` stores KV blocks as int8 with
+    per-block scales (the oracle then becomes a roomy int8 paged engine
+    on the OTHER attention grid — same quantized storage, different
+    layout — because int8-vs-fp identity is empirical, not structural);
+    ``swap`` toggles the device→host swap tier (on by default, matching
+    the engine); ``oversub`` shrinks the pool to ~half the workload's
+    total block demand, so survival requires swap or recompute."""
     cfg, api, params = model
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
@@ -211,10 +220,16 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     max_blocks = -(-COMMON["cache_len"] // bs)
     need = -(-worst // bs)
     pool = (need + 2) if tight_pool else None
+    if oversub:
+        demand = sum(-(-(len(p) + m) // bs)
+                     for p, m in zip(prompts, max_new))
+        pool = max(need + 1, demand // 2)
     ekw = dict(n_slots=n_slots, block_size=bs, chunk_tokens=chunk_tokens,
                token_budget=token_budget, num_blocks=pool,
                prefix_cache=prefix, tiled=tiled, tile=tile,
-               spec=spec, draft_k=draft_k, **COMMON)
+               spec=spec, draft_k=draft_k, host_swap=swap, **COMMON)
+    if quantized:
+        ekw["cache_dtype"] = jnp.int8
     if mesh:
         from repro.launch.mesh import make_host_mesh
         ndev = len(jax.devices())
@@ -226,7 +241,16 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
         re = PagedDecodeEngine(api, params, **ekw)
         first = re
     assert first.ragged and first.tiled == tiled and first.spec == spec
-    se = SlotDecodeEngine(api, params, n_slots=n_slots, **COMMON)
+    assert first.host_swap == (swap and prefix)
+    if quantized:
+        okw = dict(COMMON, cache_dtype=jnp.int8)
+        se = PagedDecodeEngine(api, params, n_slots=n_slots, block_size=bs,
+                               chunk_tokens=chunk_tokens,
+                               prefix_cache=False, tiled=not tiled,
+                               tile=tile, spec=False, host_swap=False,
+                               **okw)
+    else:
+        se = SlotDecodeEngine(api, params, n_slots=n_slots, **COMMON)
     assert first.max_blocks == max_blocks
     pending = list(zip(prompts, max_new))
     step = 0
@@ -260,22 +284,28 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     draft_k=st.sampled_from([1, 2, 4]),
     mesh=st.booleans(),
     tp=st.sampled_from([1, 2]),
+    quantized=st.booleans(),
+    swap=st.booleans(),
+    oversub=st.booleans(),
 )
 def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
                                              n_slots, chunk_tokens,
                                              token_budget, tight_pool,
                                              prefix, arrival_every,
                                              tiled, tile, spec, draft_k,
-                                             mesh, tp):
+                                             mesh, tp, quantized, swap,
+                                             oversub):
     """Differential fuzz: random arrival times / prompt lengths / budgets /
     preemption pressure / attention grid (segment-tiled vs per-token) /
     speculative decode (spec + draft_k) / mesh sharding (tp-way tensor
     parallel, data-parallel slicing across the rest of the virtual
-    devices) driven through the ragged-paged engine vs the dense-slot
-    oracle, asserting token identity end-to-end."""
+    devices) / tiered KV (int8 block storage, host swap tier, pool
+    oversubscription) driven through the ragged-paged engine vs the
+    dense-slot oracle, asserting token identity end-to-end."""
     _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
-                        tiled, tile, spec, draft_k, mesh, tp)
+                        tiled, tile, spec, draft_k, mesh, tp, quantized,
+                        swap, oversub)
 
 
 @pytest.mark.parametrize("case", [
@@ -295,6 +325,18 @@ def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
     (3, 4, 2, 3, 5, True, False, 2, True, 4, False, 4, True, 2),   # dp x tp
     (7, 5, 3, 8, 0, False, True, 1, True, 16, True, 2, True, 4),   # pure tp
     (5, 4, 2, 8, 7, True, True, 2, True, 8, True, 4, True, 1),     # pure dp
+    # tiered KV: int8 storage / host swap tier / pool oversubscription
+    # (+ quantized, swap, oversub tail)
+    (3, 4, 2, 3, 5, True, False, 2, True, 4, False, 4, False, 1,
+     True),                                        # int8, tight pool
+    (7, 5, 3, 8, 0, False, True, 1, True, 16, True, 2, False, 1,
+     True, True),                                  # int8 + spec + swap
+    (5, 4, 2, 8, 7, False, True, 2, True, 8, False, 4, False, 1,
+     False, True, True),                           # swap under oversub
+    (9, 5, 2, 6, 0, False, True, 1, True, 8, True, 4, False, 1,
+     True, True, True),                            # int8 + swap + oversub
+    (11, 4, 2, 3, 0, False, True, 2, False, 8, False, 4, False, 1,
+     False, False, True),                          # oversub, recompute only
 ])
 def test_differential_pinned_cases_token_identity(model, case):
     """The fuzz harness's named corners, runnable without hypothesis (the
@@ -302,6 +344,184 @@ def test_differential_pinned_cases_token_identity(model, case):
     both attention grids and the speculative path ride through the same
     identity gate."""
     _drive_differential(model, *case)
+
+
+# ---------------------------------------------------------------------------
+# tiered KV: int8 block storage + device->host swap tier, pinned corners
+# ---------------------------------------------------------------------------
+def test_int8_engine_token_identical_to_fp_engine(model):
+    """The int8 acceptance gate: greedy outputs with int8 KV blocks (+
+    per-block scales dequantized inside the attention references/kernels)
+    exactly match the fp32-cache engine on this workload."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=4, hi=14, seed=5)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=6,
+              cache_len=64, compute_dtype=jnp.float32)
+    fp = PagedDecodeEngine(api, params, cache_dtype=jnp.float32, **kw)
+    q8 = PagedDecodeEngine(api, params, cache_dtype=jnp.int8, **kw)
+    for p in prompts:
+        fp.submit(p, 8)
+        q8.submit(p, 8)
+    done_f = {r.request_id: r.generated for r in fp.run_until_drained()}
+    done_q = {r.request_id: r.generated for r in q8.run_until_drained()}
+    assert done_q == done_f and len(done_q) == len(prompts)
+
+
+def test_int8_swap_roundtrip_bit_identical(model):
+    """Swap-out -> host tier -> swap-in must reproduce the device block
+    byte-for-byte: int8 planes AND their float32 scale planes survive the
+    round trip exactly (no requantization, no dtype laundering)."""
+    cfg, api, params = model
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    eng = PagedDecodeEngine(api, params, n_slots=1, block_size=4,
+                            chunk_tokens=8, prefix_cache=True,
+                            host_swap=True, cache_len=64,
+                            cache_dtype=jnp.int8,
+                            compute_dtype=jnp.float32)
+    eng.submit(prompt, 4)
+    ref = eng.run_until_drained()[0].generated
+    assert eng.kv._cached                  # finished chain sits on the LRU
+    snap = {d: eng._read_block_payload(b)
+            for d, b in eng.kv._cached.items()}
+    while eng.kv._cached:                  # evict everything -> swap out
+        assert eng.kv._evict_one()
+    for d, p0 in snap.items():
+        ent = eng._host_tier[d]["payload"]
+        for part in p0:
+            for name in p0[part]:
+                assert p0[part][name].dtype == ent[part][name].dtype
+                assert np.array_equal(p0[part][name], ent[part][name])
+    # resubmit: the prefix returns from the host tier, not from recompute
+    eng.submit(prompt, 4)
+    got = eng.run_until_drained()[0].generated
+    assert got == ref
+    assert eng.stats()["swap_ins"] > 0
+    for d, p0 in snap.items():
+        blk = eng.kv.digest_block(d)
+        if blk is None:
+            continue
+        p1 = eng._read_block_payload(blk)
+        for part in p0:
+            for name in p0[part]:
+                assert np.array_equal(p0[part][name], p1[part][name])
+
+
+def test_swap_oversubscribed_pool_token_identical(model):
+    """Pool at ~half the workload's total block demand: the swap tier
+    restores evicted/preempted blocks from the host instead of
+    recomputing, and both the swap and recompute engines still match the
+    free-running engine token-for-token."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 8, lo=8, hi=16, seed=37)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=8, prefix_cache=True,
+              **COMMON)
+    # pool well under the CONCURRENT working set (n_slots full seqs), so
+    # admissions preempt and preempted chains must come back from the host
+    need = max(-(-(len(p) + 8) // 4) for p in prompts)
+    pool = max(need + 1, (3 * need) // 2)
+    swap = PagedDecodeEngine(api, params, num_blocks=pool,
+                             host_swap=True, **kw)
+    reco = PagedDecodeEngine(api, params, num_blocks=pool,
+                             host_swap=False, **kw)
+    free_run = PagedDecodeEngine(api, params, **kw)
+    for p in prompts:
+        swap.submit(p, 8)
+        reco.submit(p, 8)
+        free_run.submit(p, 8)
+    ref = {r.request_id: r.generated for r in free_run.run_until_drained()}
+    got_s = {r.request_id: r.generated for r in swap.run_until_drained()}
+    got_r = {r.request_id: r.generated for r in reco.run_until_drained()}
+    assert got_s == ref and got_r == ref
+    s = swap.stats()
+    assert s["preemptions"] > 0            # the pool really was too small
+    assert s["swap_outs"] > 0 and s["swap_ins"] > 0
+    assert reco.stats()["swap_ins"] == 0
+
+
+def test_swap_thrash_during_cow_token_identical(model):
+    """A full-match re-admission whose chain HEAD sits on the host tier
+    while its tail block is still device-cached: the admission queues
+    swap-ins for the head blocks AND CoW-forks the shared tail block in
+    the same step, so the engine must land swap-in payloads before it
+    applies the copy ops — outputs must stay exact."""
+    cfg, api, params = model
+    rng = np.random.default_rng(33)
+    prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+    kw = dict(n_slots=2, block_size=4, chunk_tokens=6, **COMMON)
+    eng = PagedDecodeEngine(api, params, prefix_cache=True,
+                            host_swap=True, **kw)
+    eng.submit(prompt, 6)
+    first = eng.run_until_drained()[0].generated
+    # prompt + the first generated token = exactly three cached full
+    # blocks, so the resubmission below is a FULL match of the chain
+    p2 = np.concatenate([prompt, np.asarray(first[:1], np.int32)])
+    assert len(p2) % 4 == 0
+    for _ in range(2):            # push the chain head to the host tier
+        assert eng.kv._evict_one()
+    pre_cow = eng.kv.cow_copies
+    eng.submit(p2, 6)
+    got = eng.run_until_drained()[0].generated
+    assert eng.stats()["swap_ins"] >= 2   # the head came from the host
+    assert eng.kv.cow_copies > pre_cow    # the tail block was CoW-forked
+    # oracle: the same two requests through a cache-less engine
+    free_run = PagedDecodeEngine(api, params, prefix_cache=False, **kw)
+    free_run.submit(prompt, 6)
+    ref1 = free_run.run_until_drained()[0].generated
+    free_run.submit(p2, 6)
+    ref2 = free_run.run_until_drained()[0].generated
+    assert first == ref1 and got == ref2
+
+
+def test_swap_with_spec_rewind_token_identical(model):
+    """Speculative decode (drafts + KV rewind) over a thrashing pool with
+    the swap tier on: rewinds only ever drop draft tails, never a
+    swapped-in committed block, and the oracle outputs survive."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=6, hi=14, seed=35)
+    se = SlotDecodeEngine(api, params, n_slots=3, **COMMON)
+    for p in prompts:
+        se.submit(p, 10)
+    ref = {r.request_id: r.generated for r in se.run_until_drained()}
+    # scripted drafts with exactly one correct token per window guarantee
+    # a rewind on every verification (the n-gram proposer all-accepts on
+    # the smoke model, which would leave the rewind path untested here)
+    targets = [list(map(int, p)) + ref[i] for i, p in enumerate(prompts)]
+    tight = PagedDecodeEngine(
+        api, params, n_slots=3, block_size=4, chunk_tokens=6,
+        prefix_cache=True, spec=True, draft_k=4, num_blocks=10,
+        host_swap=True,
+        proposer=_ScriptedProposer(targets, wrong_from=1,
+                                   vocab=cfg.vocab_size),
+        **COMMON)
+    for p in prompts:
+        tight.submit(p, 10)
+    got = {r.request_id: r.generated for r in tight.run_until_drained()}
+    assert got == ref
+    s = tight.stats()
+    assert s["swap_ins"] > 0 and s["kv_rewinds"] > 0
+
+
+def test_swap_preemption_prefers_swap_over_recompute(model):
+    """When the pool forces a preemption, a victim whose blocks are
+    registered in the prefix cache is counted as swapped out (its blocks
+    survive on the host) rather than thrown away for recompute."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=6, hi=14, seed=9)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=6, prefix_cache=True,
+              **COMMON)
+    tight = PagedDecodeEngine(api, params, num_blocks=10, host_swap=True,
+                              **kw)
+    free_run = PagedDecodeEngine(api, params, **kw)
+    for p in prompts:
+        tight.submit(p, 8)
+        free_run.submit(p, 8)
+    ref = {r.request_id: r.generated for r in free_run.run_until_drained()}
+    got = {r.request_id: r.generated for r in tight.run_until_drained()}
+    assert got == ref
+    s = tight.stats()
+    assert s["preemptions"] > 0
+    assert s["preempt_swap_outs"] > 0
 
 
 # ---------------------------------------------------------------------------

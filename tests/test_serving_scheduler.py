@@ -604,6 +604,50 @@ def test_fill_to_bucket_tops_up_with_prefill_not_drafts():
     assert sum(d.num_scheduled.values()) == 16
 
 
+@pytest.mark.parametrize("num_blocks,want_k", [(4, 1), (5, 3), (6, 4)])
+def test_draft_tail_truncation_at_pool_keeps_segment_shape(num_blocks,
+                                                           want_k):
+    """Pinned: when the dry pool truncates a speculating decode lane's
+    1+k segment, the cut always lands inside the DRAFT tail — the feed
+    token survives, the drafts list shrinks to exactly the scheduled
+    remainder, and every surviving token holds a KV slot."""
+    sched, kv = make_spec(n_lanes=1, num_blocks=num_blocks, block_size=2,
+                          max_blocks=8, draft_k=4)
+    r = to_decode(sched, kv, plen=4)
+    d = sched.schedule()
+    n = d.num_scheduled[0]
+    k = len(d.drafts.get(0, []))
+    assert n == 1 + k                       # the feed token always rides
+    assert k == want_k
+    assert d.drafts[0] == [7, 8, 9, 7][:k]
+    assert d.n_draft_tokens == k
+    assert kv.n_tokens(0) == r.cursor + n   # slots match the truncation
+    assert d.n_preempted == 0 and r.lane is not None
+
+
+def test_draft_tail_truncation_at_budget_keeps_feed_token():
+    """Pinned: the token budget truncates the draft tail the same way the
+    pool does — mid-draft, never into the feed token."""
+    sched, kv = make_spec(n_lanes=1, token_budget=3, draft_k=8)
+    r = to_decode(sched, kv)
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 3
+    assert d.drafts[0] == [7, 8]
+    assert d.n_draft_tokens == 2
+    assert kv.n_tokens(0) == r.cursor + 3
+
+
+def test_draft_tail_truncated_to_bare_feed_token():
+    """Pinned: truncation all the way to the feed token degrades the lane
+    to plain decode — no drafts entry at all, not an empty one."""
+    sched, kv = make_spec(n_lanes=1, token_budget=1, draft_k=4)
+    r = to_decode(sched, kv)
+    d = sched.schedule()
+    assert d.num_scheduled[0] == 1
+    assert 0 not in d.drafts and d.n_draft_tokens == 0
+    assert kv.n_tokens(0) == r.cursor + 1
+
+
 def test_preempted_speculating_lane_drops_its_drafts():
     """When the pool dries up and the speculating decode lane itself is
     the victim's priority senior, draft slots are truncated before real

@@ -111,6 +111,13 @@ def test_tp_engine_token_identical_and_actually_sharded(model):
     s = tp.stats()
     assert s["collectives_per_step"] > 0         # TP really communicates
     assert s["collective_ops"] >= s["collectives_per_step"]
+    # regression pin for the frontend concat placement: committing the
+    # token/position feed to a replicated layout BEFORE the concat keeps
+    # XLA from re-replicating the batch mid-step — the dense smoke model
+    # compiles to exactly 3 collectives per decode step (one per fused
+    # attention/MLP reduce), and any placement slip shows up as extra
+    # all-gathers here
+    assert s["collectives_per_step"] <= 3
 
 
 def test_tp4_token_identical_over_all_devices(model):
