@@ -1,6 +1,6 @@
 """Serving benchmark: dense-slot vs paged-KV vs unified vs ragged step.
 
-Four scenario families, all at **equal physical KV budget**:
+Nine scenario families, all at **equal physical KV budget**:
 
   * ``mixed``        — the PR 1 sweep (dense slabs vs paged blocks at
                        several request-arrival rates), plus the padding-tax
@@ -52,6 +52,21 @@ Four scenario families, all at **equal physical KV budget**:
                        from scratch), both token-identical to a
                        free-running engine with a full pool.  CI gates
                        swap >= recompute throughput and token identity.
+  * ``open_loop``    — the async-frontend evaluation shape: seeded
+                       exponential (Poisson-process) arrivals at three
+                       offered loads — fractions of the engine's own
+                       calibrated closed-loop capacity — driven through
+                       :func:`repro.serving.run_open_loop` on a SimClock
+                       (idle gaps simulated, per-step compute measured),
+                       with SLO-aware admission on (TTFT/TPOT targets
+                       scaled off the calibrated step wall, so the same
+                       relative regime reproduces on any machine).
+                       Headline metric is goodput vs offered load — CI
+                       gates goodput_ratio >= 0.9 at the moderate load
+                       point — plus the cancel-everything leak probe on
+                       a fresh host_swap engine (CI gates leak_free:
+                       pool, prefix cache, host tier and swap-in queue
+                       all empty after cancelling every request).
   * ``weak_scaling`` — the mesh front: the SAME per-device load on one
                        engine (1 device) vs a 4-slice sharded fleet
                        (one full engine per slice, steps overlapped
@@ -133,6 +148,17 @@ DISAGG_BW_SWEEP = (1e6, 1e7, 1e8, 1.25e9, 1e10)
 # blocks or the slot-guarantee loop never preempts and nothing swaps)
 OVERSUB_PROMPT_LO, OVERSUB_PROMPT_HI = 24, 40
 OVERSUB_REQUESTS = 16
+
+# open-loop scenario: seeded exponential inter-arrivals at these offered
+# loads (x the calibrated closed-loop capacity); SLO targets are set as
+# multiples of the calibrated mean step wall so the same relative regime
+# reproduces across machines — TTFT generous enough that the moderate
+# point clears the CI goodput gate, tight enough that the overload point
+# sheds its queue tail
+OPEN_LOOP_REQUESTS = 24
+OPEN_LOOP_LOADS = (0.25, 0.5, 2.0)
+OPEN_LOOP_TTFT_STEPS = 12        # ttft_target = this x mean step wall
+OPEN_LOOP_TPOT_STEPS = 6         # tpot_target = this x mean step wall
 
 # weak-scaling scenario: requests PER DEVICE (the fleet run submits
 # n_devices x this, round-robin landing the identical list on each
@@ -588,7 +614,9 @@ def _weak_scaling_body(quick: bool):
                              int(rng.integers(WEAK_SCALE_PROMPT_LO,
                                               WEAK_SCALE_PROMPT_HI)))
                 .astype(np.int32), WEAK_SCALE_NEW) for _ in range(per)]
-    # fleet[k] routes to slice k % ndev -> slice s sees per_dev in order
+    # all submits land before any step, so least-loaded routing (lowest-
+    # index tie-break) spreads each group of ndev identical copies one
+    # per slice -> every slice still sees per_dev in order
     fleet_reqs = [per_dev[k // ndev] for k in range(per * ndev)]
     lanes = 4
     kw = dict(n_slots=lanes, cache_len=CACHE_LEN, block_size=BLOCK_SIZE,
@@ -656,6 +684,128 @@ def _scenario_prefix_heavy(api, params, vocab: int, quick: bool):
         _warm(eng, PREFIX_LEN + 6, vocab)
         out[name] = _drain_timed(eng, reqs)
     return out
+
+
+def _open_loop_leak_probe(api, params, vocab: int) -> Dict:
+    """Cancel-everything mid-flight on a FRESH (un-warmed: the prefix
+    cache must end empty) host_swap engine whose pool sits far below the
+    working set, so cancels land on running, preempted, and swapped-out
+    sequences alike.  Returns the post-cancel occupancy of every tier
+    plus the cancellation counters; ``leak_free`` gates in CI."""
+    from repro.serving import PagedDecodeEngine
+    rng = np.random.default_rng(13)
+    shared = rng.integers(0, vocab, BLOCK_SIZE).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.integers(0, vocab, 6).astype(np.int32)])
+        for _ in range(5)]
+    need = max(-(-(len(p) + 32) // BLOCK_SIZE) for p in prompts)
+    eng = PagedDecodeEngine(api, params, n_slots=3, cache_len=CACHE_LEN,
+                            block_size=BLOCK_SIZE,
+                            chunk_tokens=BLOCK_SIZE, prefix_cache=True,
+                            host_swap=True, num_blocks=need + 3)
+    for p in prompts:                 # max_new large: nothing finishes
+        eng.submit(p, 32)
+    for _ in range(6):                # mid-flight, preempting, swapping
+        eng.step()
+    for rid in range(len(prompts)):
+        eng.cancel(rid)
+    tiers = {
+        "blocks_allocated": int(eng.kv.allocator.num_allocated),
+        "prefix_cache_entries": len(eng.kv._cached),
+        "host_tier_entries": len(eng._host_tier),
+        "queued_swap_ins": len(eng.kv.take_swap_ins()),
+    }
+    s = eng.stats()
+    return {
+        "leak_free": (not eng.has_work()
+                      and all(v == 0 for v in tiers.values())),
+        **tiers,
+        "cancelled": s["cancelled"],
+        "released_seqs": s["released_seqs"],
+        "swap_ins_dropped": s["swap_ins_dropped"],
+        "host_purged": s["host_purged"],
+    }
+
+
+def _scenario_open_loop(api, params, vocab: int, quick: bool):
+    """Open-loop serving through :func:`repro.serving.run_open_loop`:
+    calibrate closed-loop capacity and mean step wall on a warmed
+    engine, then replay seeded exponential arrivals at the
+    ``OPEN_LOOP_LOADS`` multiples of that capacity on a SimClock with
+    SLO-aware admission enabled.  Reports goodput (SLO-met completions
+    over non-cancelled offered) per load point plus the
+    cancel-everything leak probe."""
+    from repro.core.simclock import SimClock
+    from repro.serving import OpenRequest, PagedDecodeEngine, \
+        run_open_loop
+
+    rng = np.random.default_rng(9)
+    n = max(8, OPEN_LOOP_REQUESTS // (2 if quick else 1))
+    prompts = [rng.integers(0, vocab,
+                            int(rng.integers(PROMPT_LO, PROMPT_HI)))
+               .astype(np.int32) for _ in range(n)]
+
+    def make():
+        return PagedDecodeEngine(api, params, n_slots=DENSE_LANES,
+                                 cache_len=CACHE_LEN,
+                                 block_size=BLOCK_SIZE,
+                                 chunk_tokens=CHUNK_TOKENS,
+                                 prefix_cache=True, spec=False)
+
+    # calibrate: a closed-loop drain of the same request list fixes the
+    # capacity the load points are fractions of, and the step wall the
+    # SLO targets scale off
+    eng = make()
+    _warm(eng, PROMPT_HI, vocab)
+    for p in prompts:
+        eng.submit(p, MAX_NEW)
+    t0 = time.perf_counter()
+    steps = 0
+    while eng.has_work():
+        eng.step()
+        steps += 1
+    wall = time.perf_counter() - t0
+    eng.take_finished()
+    capacity_rps = n / max(wall, 1e-9)
+    step_s = wall / max(steps, 1)
+    ttft_target = OPEN_LOOP_TTFT_STEPS * step_s
+    tpot_target = OPEN_LOOP_TPOT_STEPS * step_s
+
+    points = []
+    for load in OPEN_LOOP_LOADS:
+        e = make()
+        _warm(e, PROMPT_HI, vocab)
+        gaps = np.random.default_rng(11).exponential(
+            1.0 / (load * capacity_rps), n)
+        reqs = [OpenRequest(p, MAX_NEW, t_arrival=float(t))
+                for p, t in zip(prompts, np.cumsum(gaps))]
+        out = run_open_loop(e, reqs, clock=SimClock(),
+                            ttft_target=ttft_target,
+                            tpot_target=tpot_target)
+        points.append({
+            "load_x": load,
+            "offered_rps": out["offered_rps"],
+            "goodput_rps": out["goodput_rps"],
+            "goodput_ratio": out["goodput_ratio"],
+            "completed": out["completed"],
+            "met_slo": out["met_slo"],
+            "shed": out["shed"],
+            "cancelled": out["cancelled"],
+            "ttft_p50_s": out["ttft_p50"],
+            "ttft_p95_s": out["ttft_p95"],
+            "steps": out["steps"],
+            "makespan_s": out["makespan"],
+        })
+
+    return {
+        "requests": n,
+        "capacity_rps": capacity_rps,
+        "step_s": step_s,
+        "ttft_target_s": ttft_target,
+        "tpot_target_s": tpot_target,
+        "points": points,
+        "leak": _open_loop_leak_probe(api, params, vocab),
+    }
 
 
 def run(quick: bool = False, results: Dict = None) -> List[str]:
@@ -728,6 +878,7 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
     decode_heavy = _scenario_decode_heavy(api, params, cfg.vocab_size, quick)
     disagg = _scenario_disaggregated(api, params, cfg.vocab_size, quick)
     oversub = _scenario_oversubscribed(api, params, cfg.vocab_size, quick)
+    open_loop = _scenario_open_loop(api, params, cfg.vocab_size, quick)
     weak = _scenario_weak_scaling(quick)
     ttft_speedup = (long_prompt["pr1"]["ttft_mean_s"]
                     / max(long_prompt["unified"]["ttft_mean_s"], 1e-9))
@@ -788,6 +939,23 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
         f"swap_outs={oversub['swap']['swap_outs']};"
         f"swap_ins={oversub['swap']['swap_ins']};"
         f"preempt_swap_outs={oversub['swap']['preempt_swap_outs']}")
+    for pt in open_loop["points"]:
+        rows.append(
+            f"serving/open_loop_x{pt['load_x']:g},0,"
+            f"offered_rps={pt['offered_rps']:.2f};"
+            f"goodput_rps={pt['goodput_rps']:.2f};"
+            f"goodput_ratio={pt['goodput_ratio']:.2f};"
+            f"completed={pt['completed']};met={pt['met_slo']};"
+            f"shed={pt['shed']};"
+            f"ttft_p50_ms={(pt['ttft_p50_s'] or 0) * 1e3:.0f};"
+            f"ttft_p95_ms={(pt['ttft_p95_s'] or 0) * 1e3:.0f}")
+    lk = open_loop["leak"]
+    rows.append(
+        f"serving/open_loop_leak,0,leak_free={lk['leak_free']};"
+        f"cancelled={lk['cancelled']};"
+        f"released_seqs={lk['released_seqs']};"
+        f"swap_ins_dropped={lk['swap_ins_dropped']};"
+        f"host_purged={lk['host_purged']}")
     rows.append(
         f"serving/weak_scaling,0,"
         f"devices={weak['devices']};slices={weak['slices']};"
@@ -819,6 +987,7 @@ def run(quick: bool = False, results: Dict = None) -> List[str]:
                           "decode_heavy": decode_heavy,
                           "disaggregated": disagg,
                           "oversubscribed": oversub,
+                          "open_loop": open_loop,
                           "weak_scaling": weak},
             "speedups": {"ttft_long_prompt": ttft_speedup,
                          "throughput_prefix_heavy": tput_speedup,

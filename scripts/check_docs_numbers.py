@@ -67,6 +67,10 @@ CHECKS = [
     ("README.md", "oversubscribed swap-vs-recompute speedup",
      r"swap serves ~(\d+(?:\.\d+)?)x the recompute",
      "d['speedups']['oversubscribed_swap_vs_recompute']", 0.15),
+    ("README.md", "open_loop goodput at half capacity",
+     r"goodput holds ~(\d+\.\d+) of\s+offered at half capacity",
+     "next(p for p in d['scenarios']['open_loop']['points'] "
+     "if p['load_x'] == 0.5)['goodput_ratio']", 0.05),
     ("README.md", "weak_scaling single-core aggregate ratio",
      r"its ratio\s+\(~(\d+\.\d+)x\) is the host-overhead floor",
      "d['scenarios']['weak_scaling']['aggregate_ratio']", 0.10),

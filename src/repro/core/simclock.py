@@ -34,12 +34,21 @@ class ClockEntry:
 
 
 class SimClock:
+    """Virtual clock fusing real, modeled, and simulated seconds."""
+
     def __init__(self) -> None:
         self._now = 0.0
         self.log: List[ClockEntry] = []
+        # perf_counter stamps of open measure() blocks (outermost first):
+        # while one is open, `now` runs live so latency marks stamped
+        # mid-step (t_first_token) land inside the step, not at its start
+        self._live: List[float] = []
 
     @property
     def now(self) -> float:
+        """Current sim time; advances live inside an open measure()."""
+        if self._live:
+            return self._now + (time.perf_counter() - self._live[0])
         return self._now
 
     def advance(self, seconds: float, label: str = "", kind: str = "sim"
@@ -53,12 +62,20 @@ class SimClock:
 
     @contextlib.contextmanager
     def measure(self, label: str = "") -> Iterator[None]:
+        """Measure a real compute step: wall time accrues to the clock
+        (live through ``now`` while the block is open, committed to
+        ``_now`` when the outermost block exits)."""
         t0 = time.perf_counter()
-        start = self._now
-        yield
-        dt = time.perf_counter() - t0
-        self.log.append(ClockEntry("real", label, dt, start))
-        self._now += dt
+        start = self.now
+        self._live.append(t0)
+        try:
+            yield
+        finally:
+            self._live.pop()
+            dt = time.perf_counter() - t0
+            self.log.append(ClockEntry("real", label, dt, start))
+            if not self._live:
+                self._now += dt
 
     # ------------------------------------------------------------------
     def breakdown(self) -> Dict[str, float]:

@@ -102,6 +102,16 @@ def main() -> None:
     ap.add_argument("--draft-k", type=int, default=4,
                     help="max draft tokens proposed per decode lane per "
                          "step (0 disables speculation)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="time-to-first-token target (ms) for SLO-aware "
+                         "admission: queued requests past the deadline "
+                         "are shed instead of admitted (paged engine; "
+                         "0 disables)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.0,
+                    help="time-per-output-token target (ms): when the "
+                         "decode TPOT EWMA slips past it the scheduler "
+                         "shrinks prefill chunks and stops stealing "
+                         "lanes for new admissions (0 disables)")
     ap.add_argument("--engine", choices=["auto", "paged", "slot"],
                     default="auto",
                     help="paged block-pool engine vs dense-slot reference")
@@ -139,7 +149,9 @@ def main() -> None:
                         and api.supports_ragged),
               "tile": args.tile,
               "spec": args.spec and api.supports_spec,
-              "draft_k": args.draft_k}
+              "draft_k": args.draft_k,
+              "ttft_target": args.slo_ttft_ms / 1e3,
+              "tpot_target": args.slo_tpot_ms / 1e3}
     if mesh is not None:
         kw["mesh"] = mesh
     eng = DecodeEngine(api, params, paged=paged, n_slots=args.slots,
@@ -152,15 +164,17 @@ def main() -> None:
         eng.submit(prompt, args.max_new)
     finished = eng.run_until_drained()
     dt = time.perf_counter() - t0
+    shed = sum(1 for r in finished if getattr(r, "shed", False))
     print(f"arch={cfg.name} engine={type(eng).__name__} "
-          f"requests={len(finished)} engine_steps={eng.steps} "
-          f"tokens={eng.tokens_decoded} "
+          f"requests={len(finished)} shed={shed} "
+          f"engine_steps={eng.steps} tokens={eng.tokens_decoded} "
           f"({eng.tokens_decoded / dt:.1f} tok/s incl. compile)")
     print(f"  stats: {eng.stats()}")
     for r in finished[:3]:
         print(f"  req {r.request_id}: {len(r.generated)} tokens, "
               f"first 8 = {r.generated[:8]}")
-    assert all(len(r.generated) > 0 for r in finished)
+    assert all(len(r.generated) > 0 for r in finished
+               if not getattr(r, "shed", False))
     print("done")
 
 

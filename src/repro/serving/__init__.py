@@ -9,6 +9,8 @@ from repro.serving.blocks import (BlockAllocator, KVCacheManager,  # noqa: F401
                                   NULL_BLOCK, chain_digest)
 from repro.serving.engine import (DecodeEngine, PagedDecodeEngine,  # noqa: F401
                                   ShardedDecodeEngine, SlotDecodeEngine)
+from repro.serving.frontend import (AsyncEngine, OpenRequest,  # noqa: F401
+                                    Ticket, run_open_loop)
 from repro.serving.scheduler import (Request, RequestState,  # noqa: F401
                                      Scheduler, SchedulerConfig,
                                      StepDecision)

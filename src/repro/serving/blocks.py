@@ -208,6 +208,9 @@ class KVCacheManager:
         self._swap_in_ops: List[Tuple[str, int]] = []
         self.swap_ins = 0
         self.swapped_in_tokens = 0
+        # cancellation accounting (release_seq / release_chain)
+        self.released_seqs = 0
+        self.swap_ins_dropped = 0
 
     # ------------------------------------------------------------------
     def _protected_blocks(self) -> frozenset:
@@ -730,6 +733,100 @@ class KVCacheManager:
         seq = self._seqs.pop(seq_id)
         for blk in seq.table:
             self._release(blk)
+
+    def _unregister(self, digest: str, blk: int) -> None:
+        """Drop one prefix-cache registration and the cache's block hold."""
+        del self._cached[digest]
+        del self._block_digest[blk]
+        self._cached_meta.pop(digest, None)
+        self._lru.pop(blk, None)
+        self.allocator.decref(blk)          # drop the cache's hold
+        self.cache_version += 1
+
+    def _drop_stale_swap_ins(self) -> None:
+        """Drop queued host->device swap-ins whose target block no longer
+        holds the registration they were queued against — the cancellation
+        path un-registers blocks mid-flight, and writing a host payload
+        into a block that has since been freed (or recycled) would corrupt
+        whoever owns it now.  Ops whose registration is intact (e.g. a
+        swap-in block another live sequence attached to) are kept."""
+        keep: List[Tuple[str, int]] = []
+        for d, blk in self._swap_in_ops:
+            if self._cached.get(d) != blk:
+                self.swap_ins_dropped += 1
+            else:
+                keep.append((d, blk))
+        self._swap_in_ops = keep
+
+    def release_seq(self, seq_id: int) -> List[str]:
+        """Cancellation teardown for a live sequence: free its blocks AND
+        un-register the chain blocks only it (plus the cache) was holding,
+        so a cancelled request leaves no KV residue behind.
+
+        Contrast with :meth:`free` (normal completion), which deliberately
+        leaves the chain registered for future prefix hits.  A cancelled
+        request's chain is dead weight *unless another holder is alive*:
+        a block whose refcount exceeds 2 (this seq + the cache's hold)
+        is shared with another live sequence, so its registration — and
+        any pending swap-in payload write targeting it — survives; the
+        last cancelling holder takes it down.  Queued swap-ins whose
+        registration this call removed are dropped (``swap_ins_dropped``),
+        and any cached admission plan is surrendered (its free-block
+        shield must not outlive a cancellation that changed the pool).
+
+        Returns the chain digests no longer device-registered afterwards —
+        the engine purges exactly these from the host swap tier.
+        """
+        seq = self._seqs[seq_id]
+        owned = set(seq.table)
+        for digest in seq.digests:
+            blk = self._cached.get(digest)
+            if blk is None or self._block_digest.get(blk) != digest:
+                continue
+            if blk in owned and self.allocator.refcount(blk) == 2:
+                self._unregister(digest, blk)
+        purge = [d for d in seq.digests if d not in self._cached]
+        self.free(seq_id)
+        self._drop_stale_swap_ins()
+        self._plan_cache = None
+        self.released_seqs += 1
+        return purge
+
+    def release_chain(self, feed: Sequence[int]) -> List[str]:
+        """Cancellation teardown for a request with no live sequence (still
+        waiting, or preempted with its KV swapped out): walk the feed's
+        chain and reclaim cache-only device blocks, collecting the digests
+        whose payloads now live only in the host tier so the engine can
+        purge them.  Blocks still referenced by a live sequence are left
+        registered (that sequence's own release handles them later).
+
+        The walk does NOT stop at the first missing block: an earlier
+        cancellation may have unregistered a shared chain *head* while
+        deeper blocks of this chain still sit in the host tier (eviction
+        order is LRU, not chain order) — those deep entries are
+        unreachable garbage (admission matches from the head), so the
+        walk covers every full block of the feed.
+        """
+        if not self.enable_prefix_cache:
+            return []
+        feed = [int(t) for t in feed]
+        purge: List[str] = []
+        parent = ""
+        bs = self.block_size
+        for i in range(0, len(feed) - len(feed) % bs, bs):
+            d = _digest(parent, feed[i:i + bs])
+            blk = self._cached.get(d)
+            if blk is not None:
+                if self._block_digest.get(blk) == d \
+                        and self.allocator.refcount(blk) == 1:
+                    self._unregister(d, blk)
+                    purge.append(d)
+            elif self.host_has is not None and self.host_has(d):
+                purge.append(d)
+            parent = d
+        self._drop_stale_swap_ins()
+        self._plan_cache = None
+        return purge
 
     def fork(self, src_seq_id: int, dst_seq_id: int) -> None:
         """Share the source's blocks with a new sequence (refcounted).

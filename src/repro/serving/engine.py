@@ -35,11 +35,35 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.serving.batch import RaggedBatch, padded_pow2
 from repro.serving.blocks import KVCacheManager
-from repro.serving.scheduler import (Request, Scheduler, SchedulerConfig,
-                                     StepDecision)
+from repro.serving.scheduler import (Request, RequestState, Scheduler,
+                                     SchedulerConfig, StepDecision)
 from repro.serving.spec import NgramProposer, Proposer
 
 PyTree = Any
+
+
+def _emit_token(engine, req: "Request", tok: int) -> bool:
+    """THE shared step-completion emission — every engine class routes
+    token emission through here, so ``t_first_token`` / ``t_done`` are
+    stamped exactly once and from the engine's clock abstraction
+    (``engine._now()``: wall time, or a shared SimClock in disaggregated /
+    open-loop runs — which is what makes TTFT rows comparable across
+    engine kinds).  Appends the token, bumps the decode counter, stamps
+    the latency marks, and fires the engine's ``on_token`` streaming
+    callback.  Returns True when the request just finished (hit its
+    ``max_new_tokens`` or the EOS token)."""
+    req.generated.append(tok)
+    req.feed.append(tok)
+    engine.tokens_decoded += 1
+    if req.t_first_token == 0.0:
+        req.t_first_token = engine._now()
+    finished = (len(req.generated) >= req.max_new_tokens
+                or tok == engine.eos)
+    if finished:
+        req.t_done = engine._now()
+    if engine.on_token is not None:
+        engine.on_token(req.request_id, tok, finished)
+    return finished
 
 
 def _mesh_dp_tp(mesh):
@@ -134,6 +158,8 @@ class PagedDecodeEngine:
                  proposer: Optional[Proposer] = None,
                  host_swap: bool = True,
                  host_swap_blocks: Optional[int] = None,
+                 ttft_target: float = 0.0, tpot_target: float = 0.0,
+                 clock=None,
                  mesh=None, cache_dtype=None, compute_dtype=None) -> None:
         """Build the paged engine: block pool, scheduler, jitted steps.
 
@@ -149,6 +175,14 @@ class PagedDecodeEngine:
         and a later admission swaps it back into a fresh device block
         rather than recomputing it.  ``host_swap_blocks`` caps the tier
         (LRU-dropped beyond it; default unbounded).
+
+        ``ttft_target`` / ``tpot_target`` (seconds, 0 = off) arm the
+        scheduler's SLO-aware admission: chunk-shrink and admission
+        shedding when observed decode TPOT slips past target (see
+        :class:`~repro.serving.scheduler.SchedulerConfig`).  ``clock``
+        (a :class:`~repro.core.simclock.SimClock`) replaces wall time for
+        every latency stamp — the disaggregated engine installs its
+        shared clock on both sides so TTFT rows stay comparable.
 
         ``cache_dtype=jnp.int8`` stores the paged KV pools quantized
         (per-(block, slot, kv-head) symmetric scales ride in parallel
@@ -255,8 +289,18 @@ class PagedDecodeEngine:
             SchedulerConfig(n_lanes=n_slots, token_budget=token_budget,
                             chunk_tokens=self.chunk_tokens,
                             fill_to_bucket=self.ragged,
-                            draft_k=self.draft_k, proposer=self.proposer),
+                            draft_k=self.draft_k, proposer=self.proposer,
+                            ttft_target=ttft_target,
+                            tpot_target=tpot_target),
             self.kv)
+        # clock abstraction: latency stamps (t_submit / t_first_token /
+        # t_done, and the scheduler's SLO deadlines) read self._now() —
+        # wall time by default, a shared SimClock when one is installed
+        self.clock = None
+        self.set_clock(clock)
+        # per-token streaming hook: on_token(request_id, token, finished),
+        # fired from the step thread by the shared emission helper
+        self.on_token = None
         kw = {"num_blocks": num_blocks, "block_size": block_size,
               "max_blocks_per_lane": self.max_blocks}
         if cache_dtype is not None:
@@ -316,6 +360,10 @@ class PagedDecodeEngine:
         self._next_id = 0
         self.tokens_decoded = 0
         self.tokens_prefilled = 0
+        # cancellation / SLO-shed accounting
+        self.cancelled = 0
+        self.shed = 0
+        self.host_purged = 0            # host-tier entries cancel reclaimed
         self.cow_block_copies = 0
         self.steps = 0
         # padding-tax accounting: real scheduled tokens vs flat/rect slots
@@ -359,9 +407,27 @@ class PagedDecodeEngine:
             r"|collective-permute|all-to-all)(?:-start)?\(", txt))
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def set_clock(self, clock) -> None:
+        """Install a :class:`~repro.core.simclock.SimClock` as the source
+        of every latency stamp (``None`` restores wall time).  The
+        scheduler's SLO deadlines follow the same clock, so virtual-time
+        open-loop runs and wall-clock serving share one admission
+        policy."""
+        self.clock = clock
+        self.scheduler.now_fn = self._now
+
+    def _now(self) -> float:
+        """Current time on the engine's clock: the installed SimClock's
+        sim time, else the process wall clock."""
+        return self.clock.now if self.clock is not None \
+            else time.perf_counter()
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               priority: int = 0) -> int:
         """Queue a request; returns its id.  Rejects requests whose total
-        length (prompt + new tokens) can never fit the pool."""
+        length (prompt + new tokens) can never fit the pool.  ``priority``
+        is the scheduler's admission/preemption class (higher admits
+        first, evicted last; default 0 keeps plain FIFO)."""
         prompt = np.asarray(prompt, np.int32)
         total = len(prompt) + max_new_tokens
         usable = min(self.max_blocks, self.num_blocks - 1)
@@ -372,10 +438,50 @@ class PagedDecodeEngine:
                 f"at most {usable} per request")
         rid = self._next_id
         self._next_id += 1
-        req = Request(rid, prompt, max_new_tokens)
-        req.t_submit = time.perf_counter()
+        req = Request(rid, prompt, max_new_tokens, priority=priority)
+        req.t_submit = self._now()
         self.scheduler.add(req)
         return rid
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort a queued or mid-flight request between steps, freeing
+        everything it holds: its lane, its KV blocks, its prefix-cache
+        registrations no other live sequence shares
+        (:meth:`~repro.serving.blocks.KVCacheManager.release_seq`), any
+        queued host->device swap-ins, and the host-tier payloads of its
+        now-unregistered chain — so a cancel-everything drain returns the
+        pool AND the host tier to empty.  The cancelled request lands in
+        the finished list with ``cancelled=True`` and whatever tokens it
+        had emitted.  Returns False when the id is unknown or already
+        finished (cancelling a completed request is a harmless no-op).
+
+        Only legal between steps — the async frontend serializes cancels
+        with ``step()`` on its step thread, which is what makes
+        mid-*stream* disconnects safe."""
+        req = next((r for r in self.scheduler.running
+                    if r.request_id == request_id), None)
+        if req is None:
+            req = next((r for r in self.scheduler.waiting
+                        if r.request_id == request_id), None)
+        if req is None:
+            return False
+        # the feed whose chain residue must be reclaimed: the live feed
+        # for a running sequence, prompt + generated for a waiting one
+        # (a preempted victim's KV may live on only in the host tier)
+        feed = req.feed if req.state is RequestState.RUNNING and req.feed \
+            else [int(t) for t in req.prompt] + list(req.generated)
+        self.scheduler.abort(req)
+        purge: List[str] = []
+        if self.kv.has_seq(request_id):
+            purge += self.kv.release_seq(request_id)
+        purge += self.kv.release_chain(feed)
+        for d in purge:
+            if self._host_tier.pop(d, None) is not None:
+                self.host_purged += 1
+        req.t_done = self._now()
+        self._finished.append(req)
+        self.cancelled += 1
+        return True
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -508,6 +614,8 @@ class PagedDecodeEngine:
         draft prefix plus one bonus token is accepted per lane, and the
         KV cache is rewound past the rejected draft slots so the next
         step's appends land where the accepted sequence actually ends."""
+        t0 = time.perf_counter()
+        emitted = 0
         decision = self.scheduler.schedule()
         # host->device swap-ins FIRST: a swapped-in block must hold its
         # payload before a CoW copy reads it (a fully-matched prompt can
@@ -566,15 +674,11 @@ class PagedDecodeEngine:
             kept = 0
             finished = False
             for tok in new_toks:
-                r.generated.append(tok)
-                r.feed.append(tok)
                 kept += 1
-                self.tokens_decoded += 1
-                if r.t_first_token == 0.0:
-                    r.t_first_token = time.perf_counter()
-                if len(r.generated) >= r.max_new_tokens or tok == self.eos:
-                    finished = True
+                finished = _emit_token(self, r, tok)
+                if finished:
                     break
+            emitted += kept
             if drafts:
                 self.spec_tokens_emitted += kept
             # cursor counts feed tokens resident in KV: the fed base plus
@@ -589,6 +693,13 @@ class PagedDecodeEngine:
                 # that only held rejected tokens) so the KV watermark
                 # matches the accepted sequence exactly
                 self.kv.rewind(r.request_id, r.cursor)
+        shed = self.scheduler.take_shed()
+        if shed:
+            self._finished.extend(shed)
+            self.shed += len(shed)
+        # feed the SLO admission loop: real wall seconds per decode token
+        # (consistent with SimClock.measure, which also charges real time)
+        self.scheduler.observe_step(time.perf_counter() - t0, emitted)
         return decision
 
     def has_work(self) -> bool:
@@ -607,6 +718,11 @@ class PagedDecodeEngine:
                 raise RuntimeError(
                     "serving stalled: waiting requests cannot be admitted "
                     f"({self.kv.num_free_blocks} free blocks)")
+        return self.take_finished()
+
+    def take_finished(self) -> List[Request]:
+        """Hand off (and clear) the requests finished since the last call —
+        the non-blocking collection path the async frontend polls."""
         out, self._finished = self._finished, []
         return out
 
@@ -878,6 +994,12 @@ class PagedDecodeEngine:
             "host_tier_blocks": len(self._host_tier),
             "host_swap_drops": self.host_swap_drops,
             "preempt_swap_outs": self.scheduler.total_swap_outs,
+            # cancellation / SLO admission accounting
+            "cancelled": self.cancelled,
+            "shed": self.shed,
+            "released_seqs": self.kv.released_seqs,
+            "swap_ins_dropped": self.kv.swap_ins_dropped,
+            "host_purged": self.host_purged,
             # mesh / tensor-parallel accounting (tp=1, zeros off-mesh)
             "tp": self.tp,
             "kv_heads_sharded": int(self.kv_heads_sharded),
@@ -894,12 +1016,14 @@ class ShardedDecodeEngine:
     (:func:`repro.launch.mesh.mesh_slices`); each slice runs a complete
     :class:`PagedDecodeEngine` — scheduler, block pool, prefix cache,
     CoW, speculation, transfer — tensor-parallel over its own "model"
-    axis.  Requests are routed round-robin in submission order, so the
-    global output is a deterministic function of the submission sequence
-    (greedy decode per request is schedule-independent — the same
-    property the single-device differential harness relies on).  Slices
-    share no device state; with more than one slice their steps are
-    dispatched from a thread pool, overlapping per-slice XLA executions.
+    axis.  Requests are routed to the least-loaded slice by outstanding
+    tokens (lowest index breaks ties), so open-loop arrivals never queue
+    on one slice while another idles; the global output remains a
+    deterministic function of the submission sequence (greedy decode per
+    request is schedule-independent — the same property the
+    single-device differential harness relies on).  Slices share no
+    device state; with more than one slice their steps are dispatched
+    from a thread pool, overlapping per-slice XLA executions.
 
     ``n_slots`` (and the pool size derived from it) is PER SLICE — the
     front scales capacity with the mesh rather than splitting a fixed
@@ -927,20 +1051,78 @@ class ShardedDecodeEngine:
         self._gid_of: Dict[tuple, int] = {}
         self._next_id = 0
         self._finished: List[Request] = []
+        self._on_token = None
+        self.clock = None
         self._pool = (ThreadPoolExecutor(max_workers=self.n_slices)
                       if self.n_slices > 1 else None)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        """Queue a request on the next slice (round-robin by submission
-        order); returns its global id."""
+    @staticmethod
+    def _outstanding(eng: PagedDecodeEngine) -> int:
+        """Tokens a slice still owes: remaining feed plus unemitted budget
+        of its running requests, and the full prompt + budget of queued
+        ones — the backlog measure least-loaded routing balances."""
+        sched = eng.scheduler
+        load = 0
+        for r in sched.running:
+            load += (r.remaining_feed
+                     + (r.max_new_tokens - len(r.generated)))
+        for r in sched.waiting:
+            load += (len(r.prompt) + len(r.generated)
+                     + (r.max_new_tokens - len(r.generated)))
+        return load
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               priority: int = 0) -> int:
+        """Queue a request on the least-loaded slice (by outstanding
+        tokens; lowest slice index breaks ties, so a fresh fleet fills in
+        slice order); returns its global id."""
         gid = self._next_id
-        i = gid % self.n_slices
-        local = self.engines[i].submit(prompt, max_new_tokens)
+        i = min(range(self.n_slices),
+                key=lambda k: (self._outstanding(self.engines[k]), k))
+        local = self.engines[i].submit(prompt, max_new_tokens,
+                                       priority=priority)
         self._next_id += 1
         self._route[gid] = (i, local)
         self._gid_of[(i, local)] = gid
         return gid
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort a queued or mid-flight request by global id, delegating
+        to its slice (which frees blocks, host-tier entries, and pending
+        swap-ins); returns False if unknown or already finished."""
+        loc = self._route.get(request_id)
+        if loc is None:
+            return False
+        i, local = loc
+        ok = self.engines[i].cancel(local)
+        if ok:
+            self._collect()
+        return ok
+
+    def set_clock(self, clock) -> None:
+        """Install one virtual clock on every slice so latency stamps are
+        comparable fleet-wide (and against disaggregated rows)."""
+        self.clock = clock
+        for e in self.engines:
+            e.set_clock(clock)
+
+    @property
+    def on_token(self):
+        """Streaming callback ``(global_id, token, finished)``; setting it
+        installs per-slice wrappers that rewrite local ids to global."""
+        return self._on_token
+
+    @on_token.setter
+    def on_token(self, cb) -> None:
+        """Install (or clear, with None) the fleet-wide streaming hook."""
+        self._on_token = cb
+        for i, e in enumerate(self.engines):
+            if cb is None:
+                e.on_token = None
+            else:
+                e.on_token = (lambda rid, tok, fin, _i=i:
+                              cb(self._gid_of[(_i, rid)], tok, fin))
 
     def _collect(self) -> None:
         """Move every slice's finished requests into the global list,
@@ -974,6 +1156,10 @@ class ShardedDecodeEngine:
             if not self.has_work():
                 break
             self.step()
+        return self.take_finished()
+
+    def take_finished(self) -> List[Request]:
+        """Hand off (and clear) finished requests under global ids."""
         self._collect()
         out, self._finished = self._finished, []
         return out
@@ -1009,7 +1195,7 @@ class ShardedDecodeEngine:
 
     def export_kv_prefix(self, feed: np.ndarray):
         """Export ``feed``'s cached prefix from the slice covering the
-        most of it (slices cache independently; round-robin routing means
+        most of it (slices cache independently; load-based routing means
         any one slice may hold the longest chain)."""
         best = max(self.engines,
                    key=lambda e: len(e.kv.export_chain(feed)))
@@ -1039,6 +1225,8 @@ class ShardedDecodeEngine:
             "active": sum(p["active"] for p in per),
             "waiting": sum(p["waiting"] for p in per),
             "preemptions": sum(p["preemptions"] for p in per),
+            "cancelled": sum(p["cancelled"] for p in per),
+            "shed": sum(p["shed"] for p in per),
             "collective_ops": sum(p["collective_ops"] for p in per),
             "collectives_per_step": (per[0]["collectives_per_step"]
                                      if per else 0),
@@ -1098,16 +1286,52 @@ class SlotDecodeEngine:
         self.steps = 0
         self.scheduled_tokens = 0
         self.padded_tokens = 0
+        self.cancelled = 0
+        self.clock = None
+        self.on_token = None
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        """Queue a request; returns its request id."""
+    def set_clock(self, clock) -> None:
+        """Install a virtual clock for latency stamps (None = wall clock)."""
+        self.clock = clock
+
+    def _now(self) -> float:
+        """Current time on the engine's clock abstraction."""
+        return self.clock.now if self.clock is not None \
+            else time.perf_counter()
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               priority: int = 0) -> int:
+        """Queue a request; returns its request id (``priority`` is
+        recorded for interface parity — the slot queue stays FIFO)."""
         rid = self._next_id
         self._next_id += 1
-        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens)
-        req.t_submit = time.perf_counter()
+        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
+                      priority=priority)
+        req.t_submit = self._now()
         self.queue.append(req)
         return rid
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort a queued or active request, freeing its slot; returns
+        False if unknown or already finished."""
+        for i, req in enumerate(self.queue):
+            if req.request_id == request_id:
+                del self.queue[i]
+                break
+        else:
+            for slot, req in enumerate(self.active):
+                if req is not None and req.request_id == request_id:
+                    self.active[slot] = None
+                    break
+            else:
+                return False
+        req.done = True
+        req.cancelled = True
+        req.t_done = self._now()
+        self._finished.append(req)
+        self.cancelled += 1
+        return True
 
     def _admit(self) -> None:
         for slot in range(self.n_slots):
@@ -1148,13 +1372,7 @@ class SlotDecodeEngine:
             req.cursor += 1
             if emitting:
                 tok = int(next_tokens[slot])
-                req.generated.append(tok)
-                req.feed.append(tok)
-                self.tokens_decoded += 1
-                if req.t_first_token == 0.0:
-                    req.t_first_token = time.perf_counter()
-                if (len(req.generated) >= req.max_new_tokens
-                        or tok == self.eos):
+                if _emit_token(self, req, tok):
                     req.done = True
                     self.active[slot] = None
                     self._finished.append(req)
@@ -1170,6 +1388,10 @@ class SlotDecodeEngine:
             if not self.queue and all(a is None for a in self.active):
                 break
             self.step()
+        return self.take_finished()
+
+    def take_finished(self) -> List[Request]:
+        """Hand off (and clear) the requests finished since the last call."""
         out, self._finished = self._finished, []
         return out
 

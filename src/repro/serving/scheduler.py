@@ -44,8 +44,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -75,15 +76,26 @@ class Request:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # priority class: higher admits first and is preempted last; ties
+    # keep FIFO order, so the default 0 reproduces plain FIFO serving
+    priority: int = 0
+    # terminal disposition beyond plain completion: ``cancelled`` marks a
+    # mid-flight abort (engine.cancel / a disconnected stream), ``shed``
+    # an SLO admission drop — both are surfaced through the engine's
+    # finished list with ``done=True`` and no further tokens
+    cancelled: bool = False
+    shed: bool = False
     # --- engine-internal state ---
     state: RequestState = RequestState.WAITING
     feed: List[int] = dataclasses.field(default_factory=list)
     cursor: int = 0                  # next feed index == tokens already in KV
     lane: Optional[int] = None
     n_preemptions: int = 0
-    # --- latency accounting (engine-stamped, wall clock) ---
+    # --- latency accounting (stamped from the engine's clock: wall time,
+    # or the shared SimClock in disaggregated / open-loop runs) ---
     t_submit: float = 0.0
     t_first_token: float = 0.0
+    t_done: float = 0.0
 
     def begin_run(self, lane: int) -> None:
         """(Re)admission: the feed is prompt + generated-so-far; after a
@@ -130,6 +142,19 @@ class SchedulerConfig:
     # module docstring for the budget interaction)
     draft_k: int = 0
     proposer: Optional[object] = None      # repro.serving.spec.Proposer
+    # SLO-aware admission (0 = off).  ``tpot_target`` (seconds per decode
+    # token): while the observed decode TPOT (EWMA fed by
+    # :meth:`Scheduler.observe_step`) sits above target, prefill chunks
+    # shrink by powers of two (staying inside the engine's compiled chunk
+    # buckets) and bucket-filling is suppressed, trading new-request
+    # prefill bandwidth for in-flight decode latency.  ``ttft_target``
+    # (seconds): a waiting request whose first-token deadline has already
+    # passed is shed at admission time instead of burning prefill compute
+    # on a request that can no longer meet its SLO (``slo_shed=False``
+    # keeps the chunk-shrink behaviour but never drops requests).
+    ttft_target: float = 0.0
+    tpot_target: float = 0.0
+    slo_shed: bool = True
 
 
 @dataclasses.dataclass
@@ -191,10 +216,18 @@ class Scheduler:
         self.total_preemptions = 0
         self.total_swap_outs = 0
         self.total_admitted = 0
+        self.total_cancelled = 0
+        self.total_shed = 0
         # last admission refusal: (request, feed_len, free_blocks, version)
         # — while none of those change, re-asking (and re-hashing a long
         # prompt against the prefix cache) every step is pointless
         self._blocked_state = None
+        # SLO state: the engine installs its clock here (SimClock-aware
+        # engines stamp sim time; default is wall time) and feeds measured
+        # step durations into the decode-TPOT EWMA via observe_step
+        self.now_fn: Callable[[], float] = time.perf_counter
+        self.tpot_ewma = 0.0
+        self._shed: List[Request] = []
 
     # ------------------------------------------------------------------
     def add(self, req: Request) -> None:
@@ -205,18 +238,87 @@ class Scheduler:
         """True while any request is waiting or running."""
         return bool(self.waiting or self.running)
 
+    def observe_step(self, seconds: float, decode_tokens: int) -> None:
+        """Feed one engine step's measured duration back into the decode
+        TPOT estimate (EWMA, alpha 0.3).  ``decode_tokens`` is the number
+        of tokens the step emitted; steps that emitted none (pure prefill)
+        carry no TPOT signal and are skipped."""
+        if decode_tokens <= 0:
+            return
+        sample = seconds / decode_tokens
+        self.tpot_ewma = (sample if self.tpot_ewma == 0.0
+                          else 0.7 * self.tpot_ewma + 0.3 * sample)
+
+    def _overloaded(self) -> bool:
+        """True while the observed decode TPOT sits above its target."""
+        return (self.cfg.tpot_target > 0
+                and self.tpot_ewma > self.cfg.tpot_target)
+
+    def take_shed(self) -> List[Request]:
+        """Hand off requests SLO admission shed since the last call (the
+        engine moves them into its finished list)."""
+        out, self._shed = self._shed, []
+        return out
+
     def _chunk(self) -> int:
-        return self.cfg.chunk_tokens or 1_000_000_000
+        chunk = self.cfg.chunk_tokens or 1_000_000_000
+        if self._overloaded():
+            # halve the prefill chunk per doubling of TPOT overshoot — a
+            # pow2 shrink keeps the engine inside its compiled chunk-width
+            # buckets, and the floor of 1 preserves prefill liveness
+            over = self.tpot_ewma / self.cfg.tpot_target
+            while over > 1.0 and chunk > 1:
+                chunk //= 2
+                over /= 2.0
+        return max(chunk, 1)
 
     def _budget(self) -> int:
         return self.cfg.token_budget or \
             self.cfg.n_lanes * max(1, self.cfg.chunk_tokens)
 
     # ------------------------------------------------------------------
+    def _next_waiting(self) -> int:
+        """Index of the next admission candidate: highest priority class
+        first, FIFO (and preempted-resume-first) within a class.  When
+        every waiting priority is equal this is index 0 — exactly the
+        pre-priority admission order."""
+        it = iter(self.waiting)
+        first = next(it).priority
+        if all(r.priority == first for r in it):
+            return 0
+        return max(range(len(self.waiting)),
+                   key=lambda i: (self.waiting[i].priority, -i))
+
+    def _shed_req(self, idx: int) -> None:
+        """SLO shed: drop a waiting request whose TTFT deadline already
+        passed — admitting it would spend prefill compute on a request
+        that can no longer meet its SLO, slowing everyone else."""
+        req = self.waiting[idx]
+        del self.waiting[idx]
+        if self._blocked_state is not None and self._blocked_state[0] is req:
+            self._blocked_state = None
+        req.state = RequestState.FINISHED
+        req.done = True
+        req.shed = True
+        req.t_done = self.now_fn()
+        self._shed.append(req)
+        self.total_shed += 1
+
     def _admit(self, budget_left: int, decision: StepDecision,
                scheduled: List[Request]) -> int:
         while self.waiting and budget_left > 0 and None in self.lanes:
-            req = self.waiting[0]
+            idx = self._next_waiting()
+            req = self.waiting[idx]
+            if (self.cfg.ttft_target > 0 and self.cfg.slo_shed
+                    and req.t_first_token == 0.0
+                    and req.n_preemptions == 0
+                    and self.now_fn() - req.t_submit
+                    > self.cfg.ttft_target):
+                # only never-admitted requests shed: a preempted victim
+                # was already accepted (and may hold emitted tokens) —
+                # dropping it would break the completion promise
+                self._shed_req(idx)
+                continue
             state = (req, len(req.prompt) + len(req.generated),
                      self.kv.num_free_blocks,
                      getattr(self.kv, "cache_version", 0))
@@ -227,7 +329,7 @@ class Scheduler:
                 self._blocked_state = state
                 break
             self._blocked_state = None
-            self.waiting.popleft()
+            del self.waiting[idx]
             lane = self.lanes.index(None)
             req.begin_run(lane)
             self.lanes[lane] = req
@@ -333,7 +435,11 @@ class Scheduler:
         # the bucket boundary: padding slots become real prefill work.
         # Greedy decode is causal per request, so scheduling more prompt
         # tokens per step never changes any output.
-        if self.cfg.fill_to_bucket and decision.num_scheduled:
+        # under TPOT overload the bucket fill is suppressed along with the
+        # chunk shrink: both convert spare step capacity into prefill
+        # work, which is exactly what is crowding out decode latency
+        if self.cfg.fill_to_bucket and decision.num_scheduled \
+                and not self._overloaded():
             from repro.serving.batch import padded_pow2
             total = sum(decision.num_scheduled.values())
             spare = min(self._budget(), padded_pow2(total)) - total
@@ -372,6 +478,14 @@ class Scheduler:
                         self.kv.drop_plan_protection()
                         continue
                     victim = self.running[-1]
+                    if any(r.priority != victim.priority
+                           for r in self.running):
+                        # priority classes: evict the lowest class first,
+                        # latest-admitted within a class (min over the
+                        # reversed list keeps the default-priority victim
+                        # exactly running[-1])
+                        victim = min(reversed(self.running),
+                                     key=lambda r: r.priority)
                     if victim is req:
                         self_blocked = True
                         break
@@ -419,3 +533,27 @@ class Scheduler:
         self.lanes[req.lane] = None
         req.lane = None
         self.running.remove(req)
+
+    def abort(self, req: Request) -> None:
+        """Cancellation: detach ``req`` from the scheduler — its lane and
+        the running list, or the waiting queue — WITHOUT touching its KV.
+        The engine owns the KV teardown
+        (:meth:`~repro.serving.blocks.KVCacheManager.release_seq` /
+        ``release_chain``), which must run after this so the freed lane
+        can never be re-filled while the sequence still holds blocks.
+        Only legal between steps, like every scheduler mutation."""
+        if req.state is RequestState.RUNNING:
+            self.lanes[req.lane] = None
+            req.lane = None
+            self.running.remove(req)
+        else:
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                pass
+        if self._blocked_state is not None and self._blocked_state[0] is req:
+            self._blocked_state = None
+        req.state = RequestState.FINISHED
+        req.done = True
+        req.cancelled = True
+        self.total_cancelled += 1

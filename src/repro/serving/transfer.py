@@ -362,6 +362,11 @@ class DisaggregatedEngine:
                                        default_concurrency=concurrency)
         self.transfer = transfer
         self.clock = transfer.clock
+        # both sides stamp t_submit / t_first_token / t_done from the
+        # shared virtual clock, so disaggregated TTFT rows are comparable
+        # with wall-clock engines (same stamping code, different clock)
+        self.prefill.set_clock(self.clock)
+        self.decode.set_clock(self.clock)
         self._pending: List[tuple] = []
         self._next_id = 0
         self._shipment_counter = 0

@@ -183,7 +183,7 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
                         tiled=True, tile=8, spec=False, draft_k=4,
                         mesh=False, tp=1, quantized=False, swap=True,
-                        oversub=False):
+                        oversub=False, cancel=False):
     """One randomized workload through ragged-paged vs dense-slot engines,
     asserting token identity end-to-end (shared by the hypothesis fuzz and
     the pinned no-hypothesis cases).  ``tiled`` selects the attention
@@ -201,7 +201,13 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     layout — because int8-vs-fp identity is empirical, not structural);
     ``swap`` toggles the device→host swap tier (on by default, matching
     the engine); ``oversub`` shrinks the pool to ~half the workload's
-    total block demand, so survival requires swap or recompute."""
+    total block demand, so survival requires swap or recompute.
+
+    ``cancel`` fires random mid-flight aborts on the paged side only
+    (the oracle never cancels): survivors must stay token-identical to
+    the never-cancelled oracle run — cancellation of one request must
+    not perturb any other — and after the drain no cancelled sequence
+    may leave pending swap-ins behind."""
     cfg, api, params = model
     rng = np.random.default_rng(seed)
     shared = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
@@ -252,20 +258,42 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     else:
         se = SlotDecodeEngine(api, params, n_slots=n_slots, **COMMON)
     assert first.max_blocks == max_blocks
+    # seeded mid-flight abort schedule: ~40% of requests get one cancel
+    # attempt at a random step (a late attempt may find the request
+    # already finished — then it must complete token-identically)
+    cancel_at = {rid: int(rng.integers(0, 15))
+                 for rid in range(n_requests)
+                 if cancel and rng.random() < 0.4}
+    attempted: set = set()
     pending = list(zip(prompts, max_new))
     step = 0
+    submitted = 0
     while pending or re.has_work():
         if pending and step % arrival_every == 0:
             p, m = pending.pop(0)
             re.submit(p, m)
             se.submit(p, m)
+            submitted += 1
+        for rid, at in cancel_at.items():
+            if step >= at and rid < submitted and rid not in attempted:
+                attempted.add(rid)
+                re.cancel(rid)
         re.step()
         step += 1
         assert step < 2000, "ragged engine did not drain"
-    done_r = {r.request_id: r.generated for r in re.run_until_drained()}
+    fin_r = re.run_until_drained()
+    cancelled = {r.request_id for r in fin_r if r.cancelled}
+    done_r = {r.request_id: r.generated for r in fin_r if not r.cancelled}
     done_s = {r.request_id: r.generated for r in se.run_until_drained()}
-    assert len(done_r) == n_requests
-    assert done_r == done_s
+    assert len(fin_r) == n_requests
+    assert set(done_r) == set(range(n_requests)) - cancelled
+    assert all(done_r[k] == done_s[k] for k in done_r)
+    if cancel:
+        # cancellation bookkeeping: no orphaned queued swap-ins, and no
+        # sequence state left behind for any cancelled id
+        for eng in (re.engines if hasattr(re, "engines") else [re]):
+            assert not eng.kv.take_swap_ins()
+            assert not eng.scheduler.running and not eng.scheduler.waiting
 
 
 @settings(max_examples=8, deadline=None)
@@ -287,6 +315,7 @@ def _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
     quantized=st.booleans(),
     swap=st.booleans(),
     oversub=st.booleans(),
+    cancel=st.booleans(),
 )
 def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
                                              n_slots, chunk_tokens,
@@ -294,18 +323,20 @@ def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
                                              prefix, arrival_every,
                                              tiled, tile, spec, draft_k,
                                              mesh, tp, quantized, swap,
-                                             oversub):
+                                             oversub, cancel):
     """Differential fuzz: random arrival times / prompt lengths / budgets /
     preemption pressure / attention grid (segment-tiled vs per-token) /
     speculative decode (spec + draft_k) / mesh sharding (tp-way tensor
     parallel, data-parallel slicing across the rest of the virtual
     devices) / tiered KV (int8 block storage, host swap tier, pool
-    oversubscription) driven through the ragged-paged engine vs the
-    dense-slot oracle, asserting token identity end-to-end."""
+    oversubscription) / random mid-flight cancellation (survivors must
+    match the never-cancelled oracle) driven through the ragged-paged
+    engine vs the dense-slot oracle, asserting token identity
+    end-to-end."""
     _drive_differential(model, seed, n_requests, n_slots, chunk_tokens,
                         token_budget, tight_pool, prefix, arrival_every,
                         tiled, tile, spec, draft_k, mesh, tp, quantized,
-                        swap, oversub)
+                        swap, oversub, cancel)
 
 
 @pytest.mark.parametrize("case", [
@@ -337,6 +368,16 @@ def test_fuzz_ragged_vs_dense_token_identity(model, seed, n_requests,
      True, True, True),                            # int8 + swap + oversub
     (11, 4, 2, 3, 0, False, True, 2, False, 8, False, 4, False, 1,
      False, False, True),                          # oversub, recompute only
+    # random mid-flight cancellation: survivors must match the
+    # never-cancelled oracle (+ cancel tail)
+    (3, 4, 2, 3, 5, True, False, 2, True, 4, False, 4, False, 1,
+     False, True, False, True),                    # cancel + tight pool
+    (7, 5, 3, 8, 0, False, True, 1, True, 16, True, 2, False, 1,
+     False, True, False, True),                    # cancel + spec + prefix
+    (5, 4, 2, 8, 7, False, True, 2, True, 8, False, 4, False, 1,
+     False, True, True, True),                     # cancel under oversub
+    (9, 5, 2, 6, 0, False, True, 1, True, 8, False, 4, True, 2,
+     False, True, False, True),                    # cancel on the dp front
 ])
 def test_differential_pinned_cases_token_identity(model, case):
     """The fuzz harness's named corners, runnable without hypothesis (the
@@ -344,6 +385,141 @@ def test_differential_pinned_cases_token_identity(model, case):
     both attention grids and the speculative path ride through the same
     identity gate."""
     _drive_differential(model, *case)
+
+
+# ---------------------------------------------------------------------------
+# cancellation: pinned corners + the leak wall
+# ---------------------------------------------------------------------------
+def test_cancel_during_cow_shared_prefix_token_identical(model):
+    """Cancel one of two requests sharing a CoW-forked prefix mid-flight:
+    the survivor must keep its shared blocks (and its exact tokens), and
+    the cancelled side's refs must be released without unregistering
+    chains the survivor still attaches."""
+    cfg, api, params = model
+    rng = np.random.default_rng(41)
+    shared = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+             for _ in range(2)]
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    kw = dict(n_slots=2, block_size=4, chunk_tokens=16,
+              prefix_cache=True, **COMMON)
+    eng = PagedDecodeEngine(api, params, **kw)
+    eng.submit(prompts[0], 8)
+    eng.step()
+    eng.step()                     # request 0's prefix blocks registered
+    eng.submit(prompts[1], 8)      # attaches the shared-prefix chain
+    eng.step()
+    assert eng.kv.prefix_hits > 0
+    assert eng.cancel(0)
+    fin = eng.run_until_drained()
+    got = {r.request_id: r.generated for r in fin if not r.cancelled}
+    assert set(got) == {1} and eng.cancelled == 1
+    solo = PagedDecodeEngine(api, params, **kw)
+    solo.submit(prompts[1], 8)
+    ref = solo.run_until_drained()[0].generated
+    assert got[1] == ref
+
+
+def test_cancel_mid_spec_verify_token_identical(model):
+    """Cancel a speculating request between verify steps: its draft/KV
+    state is torn down whole (no dangling rewind), and the surviving
+    speculating lanes still match the dense oracle exactly."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 3, lo=6, hi=12, seed=43)
+    se = SlotDecodeEngine(api, params, n_slots=3, **COMMON)
+    eng = PagedDecodeEngine(api, params, n_slots=3, block_size=4,
+                            chunk_tokens=8, prefix_cache=True,
+                            spec=True, draft_k=4, **COMMON)
+    for p in prompts:
+        eng.submit(p, 10)
+        se.submit(p, 10)
+    # step until the victim has emitted (so drafts have been verified
+    # on its lane), then cancel it mid-flight
+    for _ in range(40):
+        eng.step()
+        victim = next((r for r in eng.scheduler.running
+                       if r.request_id == 0), None)
+        if victim is not None and victim.generated:
+            break
+    assert eng.cancel(0)
+    fin = eng.run_until_drained()
+    got = {r.request_id: r.generated for r in fin if not r.cancelled}
+    ref = {r.request_id: r.generated for r in se.run_until_drained()}
+    assert eng.stats()["spec_verifications"] > 0
+    assert set(got) == {1, 2}
+    assert all(got[k] == ref[k] for k in got)
+
+
+def test_cancel_while_swapped_out_purges_host_tier(model):
+    """Cancel a preempted request whose blocks were swapped to the host
+    tier: the cancel must purge its host payloads (they are reachable by
+    no surviving chain) and survivors still match the oracle."""
+    cfg, api, params = model
+    prompts = _prompts(cfg, 6, lo=8, hi=14, seed=47)
+    kw = dict(n_slots=3, block_size=4, chunk_tokens=8,
+              prefix_cache=True, **COMMON)
+    need = max(-(-(len(p) + 8) // 4) for p in prompts)
+    pool = max(need + 1, (3 * need) // 2)
+    eng = PagedDecodeEngine(api, params, num_blocks=pool,
+                            host_swap=True, **kw)
+    for p in prompts:
+        eng.submit(p, 8)
+    victim = None
+    for _ in range(200):
+        eng.step()
+        victim = next((r for r in eng.scheduler.waiting
+                       if r.n_preemptions > 0), None)
+        if victim is not None and eng.scheduler.total_swap_outs > 0:
+            break
+        victim = None
+        if not eng.has_work():
+            break
+    assert victim is not None, "pool never forced a swap-out preemption"
+    vid = victim.request_id
+    before = len(eng._host_tier)
+    assert eng.cancel(vid)
+    assert eng.host_purged > 0 or len(eng._host_tier) <= before
+    fin = eng.run_until_drained()
+    got = {r.request_id: r.generated for r in fin if not r.cancelled}
+    free_run = PagedDecodeEngine(api, params, **kw)
+    for p in prompts:
+        free_run.submit(p, 8)
+    ref = {r.request_id: r.generated for r in free_run.run_until_drained()}
+    assert set(got) == set(ref) - {vid}
+    assert all(got[k] == ref[k] for k in got)
+
+
+def test_cancel_everything_drains_pool_and_host_tier(model):
+    """The leak wall: after cancelling EVERY in-flight request, the block
+    pool returns to fully free (only the null block reserved), the prefix
+    cache holds nothing, the host swap tier is empty, and no queued
+    swap-ins survive — cancellation reclaims all three tiers."""
+    cfg, api, params = model
+    rng = np.random.default_rng(53)
+    shared = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate([
+        shared, rng.integers(0, cfg.vocab_size, 6).astype(np.int32)])
+        for _ in range(5)]
+    need = max(-(-(len(p) + 32) // 4) for p in prompts)
+    eng = PagedDecodeEngine(api, params, n_slots=3, block_size=4,
+                            chunk_tokens=8, prefix_cache=True,
+                            host_swap=True, num_blocks=need + 3,
+                            **COMMON)
+    for p in prompts:                  # max_new large: nothing finishes
+        eng.submit(p, 32)
+    for _ in range(6):                 # mid-flight, preempting, swapping
+        eng.step()
+    for rid in range(len(prompts)):
+        eng.cancel(rid)
+    assert not eng.has_work()
+    assert eng.kv.allocator.num_allocated == 0
+    assert eng.kv.num_free_blocks == eng.num_blocks - 1
+    assert not eng.kv._cached and not eng.kv._lru
+    assert len(eng._host_tier) == 0
+    assert not eng.kv.take_swap_ins()
+    assert eng.cancelled == len(prompts)
+    assert len(eng.run_until_drained()) == len(prompts)
+    assert eng.stats()["released_seqs"] > 0
 
 
 # ---------------------------------------------------------------------------

@@ -10,8 +10,11 @@ Four layers, all on a CPU mesh of >= 4 virtual devices (conftest forces
     pool replicates cleanly instead of crashing — same degradation rule
     as the training-side param specs.
   * **Data parallelism** — the :class:`ShardedDecodeEngine` front routes
-    requests round-robin across full per-slice engines; for dense models
-    the fleet output equals the single-device output request-for-request.
+    requests to the least-loaded slice (by outstanding tokens) across
+    full per-slice engines; for dense models the fleet output equals the
+    single-device output request-for-request, and a long-running
+    occupant never starves later short requests (the round-robin
+    regression pinned below).
   * **MoE caveat, pinned as an invariant** — expert-choice capacity makes
     MoE logits depend on batch composition, so a DP fleet is NOT
     token-identical to one whole-fleet engine.  The invariant that DOES
@@ -180,19 +183,56 @@ def test_moe_dp_front_token_identity_per_slice(moe_model):
     share a batch, so the fleet need not match one whole-fleet engine.
     The sharded front must instead equal plain single-device engines fed
     the same per-slice subsets — proving the mesh machinery adds nothing
-    beyond the (inherent, documented) batch-composition effect."""
+    beyond the (inherent, documented) batch-composition effect.  The
+    groups come from the front's own routing table (``_route``), so the
+    invariant holds under any routing policy."""
     cfg, api, params = moe_model
     prompts = _prompts(cfg, 6, seed=6)
     dp = ShardedDecodeEngine(api, params, mesh=make_host_mesh(),
                              n_slots=2, **COMMON)
-    n = dp.n_slices
-    got = _drain(dp, prompts)
-    for i in range(n):
+    gids = [dp.submit(p, 6) for p in prompts]
+    got = {r.request_id: r.generated for r in dp.run_until_drained()}
+    groups: dict = {}
+    for gid in gids:                # gid order == per-slice local order
+        groups.setdefault(dp._route[gid][0], []).append(gid)
+    for i, members in groups.items():
         solo = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
-        mine = _drain(solo, prompts[i::n])
-        for local, gid in enumerate(range(i, len(prompts), n)):
-            assert got[gid] == mine[local], (
+        lids = [solo.submit(prompts[g], 6) for g in members]
+        mine = {r.request_id: r.generated
+                for r in solo.run_until_drained()}
+        for lid, gid in zip(lids, members):
+            assert got[gid] == mine[lid], (
                 f"slice {i} diverged from its single-device twin")
+
+
+def test_least_loaded_routing_avoids_starvation_token_identical(model):
+    """Regression: round-robin would park one of the short requests
+    (gid % n_slices == 0) behind the long-running occupant of slice 0
+    while other slices idle; least-loaded routing must send every short
+    to an idle slice — and the dense fleet still matches the
+    single-device oracle token-for-token."""
+    cfg, api, params = model
+    rng = np.random.default_rng(10)
+    long_p = rng.integers(0, cfg.vocab_size, 30).astype(np.int32)
+    shorts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+              for _ in range(4)]
+    dp = DecodeEngine(api, params, paged=True, n_slots=2,
+                      mesh=make_host_mesh(), **COMMON)
+    assert isinstance(dp, ShardedDecodeEngine) and dp.n_slices == 4
+    g_long = dp.submit(long_p, 24)
+    assert dp._route[g_long][0] == 0      # empty fleet: lowest index
+    g_shorts = [dp.submit(p, 4) for p in shorts]
+    # round-robin would route g_shorts[3] (gid 4 -> 4 % 4 == 0) to the
+    # busy slice; least-loaded must keep every short off slice 0
+    assert all(dp._route[g][0] != 0 for g in g_shorts)
+    assert {dp._route[g][0] for g in g_shorts} == {1, 2, 3}
+    got = {r.request_id: r.generated for r in dp.run_until_drained()}
+    ref = PagedDecodeEngine(api, params, n_slots=2, **COMMON)
+    ref.submit(long_p, 24)
+    for p in shorts:
+        ref.submit(p, 4)
+    want = {r.request_id: r.generated for r in ref.run_until_drained()}
+    assert got == want
 
 
 # ---------------------------------------------------------------------------
